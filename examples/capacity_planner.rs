@@ -1,0 +1,66 @@
+//! Capacity planner: size a serving system for a target workload — the
+//! deployment question Key Finding 1 poses ("memory capacity is the
+//! first challenge").
+//!
+//! Run with:
+//!   cargo run --release --example capacity_planner -- \
+//!       llama3-405b --context 65536 --users 32 [--chip hbm3]
+
+use liminal::apps::{DecodePoint, Registry};
+use liminal::hw::presets;
+use liminal::model::{evaluate, EvalOptions};
+use liminal::parallel::{fit_system, FitRequest};
+use liminal::power::PowerModel;
+use liminal::util::cli::Args;
+use liminal::GIB;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "llama3-405b".to_string());
+    let context = args.get_parsed("context", 65536u64);
+    let users = args.get_parsed("users", 32u64);
+    let chip_name = args.get("chip").unwrap_or("hbm3").to_string();
+
+    let registry = Registry::builtin();
+    let app = registry
+        .app(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let chip = presets::by_name(&chip_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown chip {chip_name}"))?;
+
+    let pt = DecodePoint { batch: users, context };
+    let need = app.capacity_bytes(&pt);
+    println!("== capacity plan: {model}, {users} users @ {}K context ==", context / 1024);
+    println!("weights        {:>10.1} GiB", app.weight_bytes() / GIB);
+    println!(
+        "KV cache       {:>10.1} GiB ({:.2} GiB/user)",
+        (need - app.weight_bytes()) / GIB,
+        context as f64 * app.kv_bytes_per_token() / GIB
+    );
+    println!("total          {:>10.1} GiB", need / GIB);
+
+    // Size the system: TP up to 128, then PP.
+    for tp in [8u64, 32, 128] {
+        match fit_system(app.as_ref(), &FitRequest { tp: Some(tp), ..FitRequest::new(chip.clone(), pt) }) {
+            Ok(sys) => {
+                let perf = evaluate(app.as_ref(), &sys, &pt, &EvalOptions::default())?;
+                let power = PowerModel::default().system_power(&sys);
+                println!(
+                    "{:<26} {:>4} chips  UTPS {:>7.1}  STPS {:>10.0}  {:>7.1} kW  {:.2} tok/s/W",
+                    sys.label(),
+                    sys.n_chips(),
+                    perf.utps,
+                    perf.stps,
+                    power.total_watts / 1e3,
+                    perf.stps / power.total_watts
+                );
+            }
+            Err(e) => println!("TP{tp}: cannot serve ({e})"),
+        }
+    }
+    Ok(())
+}

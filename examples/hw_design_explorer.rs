@@ -1,0 +1,83 @@
+//! Hardware design explorer: the paper's core what-if loop — pick a
+//! hypothetical chip (bandwidth, capacity, sync fabric) and see what it
+//! buys across models, before anyone tapes anything out.
+//!
+//! Sweeps a small design space and prints the Pareto frontier of
+//! (UTPS, STPS/W) for Llama3-405B at 128K context.
+
+use liminal::apps::{DecodePoint, Registry};
+use liminal::hw::{presets, SyncModel};
+use liminal::model::{evaluate, EvalOptions};
+use liminal::parallel::{fit_system, FitRequest};
+use liminal::power::PowerModel;
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-405b").unwrap();
+    let pt = DecodePoint { batch: 1, context: 131072 };
+    let power = PowerModel::default();
+
+    println!("design space: bandwidth x capacity x sync fabric (TP128)");
+    println!(
+        "{:<34} {:>9} {:>12} {:>10}",
+        "design", "UTPS", "STPS/W @max", "chips"
+    );
+
+    let mut frontier: Vec<(String, f64, f64)> = Vec::new();
+    for bw_tbps in [4.4, 9.0, 18.0, 33.0, 117.0] {
+        for cap_gib in [16.0, 96.0, 192.0] {
+            for (fabric, sync) in [
+                ("cxl", SyncModel::Tiered { le16: 200e-9, gt16: 1.5e-6 }),
+                ("optical", SyncModel::Flat(400e-9)),
+            ] {
+                let mut chip = presets::hbm3();
+                chip.name = format!("x{bw_tbps:.0}T-{cap_gib:.0}G-{fabric}");
+                chip.mem_bw = bw_tbps * liminal::TBPS;
+                chip.mem_capacity = cap_gib * liminal::GIB;
+                chip.sync = sync;
+
+                let Ok(sys) = fit_system(
+                    app.as_ref(),
+                    &FitRequest { tp: Some(128), ..FitRequest::new(chip, pt) },
+                ) else {
+                    continue;
+                };
+                let Ok(p1) = evaluate(app.as_ref(), &sys, &pt, &EvalOptions::default())
+                else {
+                    continue;
+                };
+                // Efficiency at the capacity-max batch.
+                let bmax =
+                    liminal::model::max_batch_for_system(app.as_ref(), &sys, pt.context)
+                        .unwrap_or(1);
+                let pmax = evaluate(
+                    app.as_ref(),
+                    &sys,
+                    &DecodePoint { batch: bmax, context: pt.context },
+                    &EvalOptions::default(),
+                )?;
+                let spw = pmax.stps / power.system_power(&sys).total_watts;
+                println!(
+                    "{:<34} {:>9.0} {:>12.3} {:>10}",
+                    sys.label(),
+                    p1.utps,
+                    spw,
+                    sys.n_chips()
+                );
+                frontier.push((sys.label(), p1.utps, spw));
+            }
+        }
+    }
+
+    // Pareto: keep designs not dominated in (UTPS, STPS/W).
+    frontier.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut best_spw = f64::MIN;
+    println!("\nPareto frontier (UTPS vs STPS/W):");
+    for (name, utps, spw) in frontier {
+        if spw > best_spw {
+            println!("  {name}: {utps:.0} UTPS, {spw:.3} STPS/W");
+            best_spw = spw;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: evaluate the headline working points of the paper in a
+//! few lines of library code.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use liminal::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::builtin();
+
+    // 1. How fast can one user decode Llama3-405B on a 128-chip HBM3
+    //    system at 4K context? (Paper Table 2: 776 tokens/s.)
+    let app = registry.app("llama3-405b").unwrap();
+    let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+    let perf = evaluate(
+        app.as_ref(),
+        &sys,
+        &EvalPoint { batch: 1, context: 4096 },
+        &EvalOptions::default(),
+    )?;
+    println!("llama3-405b on {}: {:.0} tokens/s/user", sys.label(), perf.utps);
+
+    // 2. What does the latency breakdown look like at 128K context?
+    let perf = evaluate(
+        app.as_ref(),
+        &sys,
+        &EvalPoint { batch: 1, context: 131072 },
+        &EvalOptions::default(),
+    )?;
+    println!(
+        "  at 128K: {:.0} tok/s — mem {:.0}µs, sync {:.0}µs ({}-bound)",
+        perf.utps,
+        perf.lat.t_mem * 1e6,
+        perf.lat.t_tp_sync * 1e6,
+        match perf.lat.bound {
+            liminal::model::Boundedness::Memory => "memory",
+            liminal::model::Boundedness::Compute => "compute",
+        }
+    );
+
+    // 3. Fill the machine with users: what is the system throughput?
+    let b = max_batch(app.as_ref(), &sys, 4096).unwrap();
+    let perf = evaluate(
+        app.as_ref(),
+        &sys,
+        &EvalPoint { batch: b, context: 4096 },
+        &EvalOptions::default(),
+    )?;
+    let watts = PowerModel::default().system_power(&sys).total_watts;
+    println!(
+        "  batch {b}: {:.0} system tok/s at {:.1} tok/s/user, {:.2} tok/s/W",
+        perf.stps,
+        perf.utps,
+        perf.stps / watts
+    );
+
+    // 4. Would a wafer-scale SRAM design serve faster?
+    let cows = SystemConfig::new(presets::cows(), 37, 1); // 37 wafers hold 405B+KV
+    let perf = evaluate(
+        app.as_ref(),
+        &cows,
+        &EvalPoint { batch: 1, context: 4096 },
+        &EvalOptions::default(),
+    )?;
+    println!("on {}: {:.0} tokens/s/user", cows.label(), perf.utps);
+    Ok(())
+}

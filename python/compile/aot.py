@@ -1,0 +1,165 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once, at build time (``make artifacts``); the Rust
+binary is self-contained afterwards.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (DecodeConfig, MlaDecodeConfig, make_decode_fn,
+                    make_gemv_fn, make_grid_eval_fn, make_mla_decode_fn)
+
+# GEMV sizes for the Appendix E validation artifact. The paper uses
+# 1x16384x16384 (512 MB at fp16); we scale to 4096 (64 MB fp32) so the
+# CPU run finishes quickly while staying firmly memory-bound.
+GEMV_M = 4096
+GEMV_N = 4096
+
+# GEMM size for the compute-calibration artifact (square, compute-bound:
+# 2*512^3 = 268 MFLOP over ~3 MB of operands).
+GEMM_N = 512
+
+# Grid-evaluator width (number of working points per call).
+GRID_N = 1024
+
+# Decode-step batch variants exported (one executable per batch size, as
+# a real serving engine would pre-compile its batch buckets).
+DECODE_BATCHES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flatten_example(example):
+    """Flatten an example-arg pytree to the positional parameter list the
+    HLO module will expect, recording shapes/dtypes for the manifest."""
+    flat, _ = jax.tree_util.tree_flatten(example)
+    return [
+        {"shape": list(x.shape), "dtype": str(x.dtype)} for x in flat
+    ]
+
+
+def lower_entry(name, fn, example):
+    """Lower one entry point; return (hlo_text, manifest_record)."""
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    record = {
+        "file": f"{name}.hlo.txt",
+        "inputs": _flatten_example(example),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, record
+
+
+def build_entries(cfg: DecodeConfig):
+    """All AOT entry points: name -> (fn, example, extra-manifest)."""
+    entries = {}
+    for b in DECODE_BATCHES:
+        fn, ex = make_decode_fn(cfg, b)
+        entries[f"decode_b{b}"] = (fn, ex, {
+            "kind": "decode_step",
+            "batch": b,
+            "config": {
+                "num_layers": cfg.num_layers,
+                "embed_dim": cfg.embed_dim,
+                "heads": cfg.heads,
+                "kv_heads": cfg.kv_heads,
+                "head_dim": cfg.head_dim,
+                "intermediate_dim": cfg.intermediate_dim,
+                "vocab": cfg.vocab,
+                "context": cfg.context,
+                "weight_count": cfg.weight_count(),
+                "kv_bytes_per_token": cfg.kv_bytes_per_token,
+            },
+        })
+    mla_cfg = MlaDecodeConfig(context=cfg.context)
+    for b in (1, 4):
+        fn, ex = make_mla_decode_fn(mla_cfg, b)
+        entries[f"mla_decode_b{b}"] = (fn, ex, {
+            "kind": "mla_decode_step",
+            "batch": b,
+            "config": {
+                "num_layers": mla_cfg.num_layers,
+                "embed_dim": mla_cfg.embed_dim,
+                "heads": mla_cfg.heads,
+                "latent_dim": mla_cfg.latent_dim,
+                "kv_latent": mla_cfg.kv_latent,
+                "vocab": mla_cfg.vocab,
+                "context": mla_cfg.context,
+                "kv_bytes_per_token": mla_cfg.kv_bytes_per_token,
+            },
+        })
+    gfn, gex = make_grid_eval_fn(GRID_N)
+    entries["grid_eval"] = (gfn, gex, {"kind": "grid_eval", "n": GRID_N})
+    vfn, vex = make_gemv_fn(GEMV_M, GEMV_N)
+    entries["gemv"] = (vfn, vex, {
+        "kind": "gemv",
+        "m": GEMV_M,
+        "n": GEMV_N,
+        "bytes": GEMV_M * GEMV_N * 4,
+        "flops": 2 * GEMV_M * GEMV_N,
+    })
+
+    def gemm(a, b):
+        return (a @ b,)
+
+    gemm_ex = (jnp.zeros((GEMM_N, GEMM_N), jnp.float32),
+               jnp.zeros((GEMM_N, GEMM_N), jnp.float32))
+    entries["gemm"] = (gemm, gemm_ex, {
+        "kind": "gemm",
+        "n": GEMM_N,
+        "flops": 2 * GEMM_N ** 3,
+        "bytes": 3 * GEMM_N * GEMM_N * 4,
+    })
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--context", type=int, default=DecodeConfig.context)
+    args = ap.parse_args()
+
+    cfg = DecodeConfig(context=args.context)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"entries": {}}
+    for name, (fn, example, extra) in build_entries(cfg).items():
+        text, record = lower_entry(name, fn, example)
+        record.update(extra)
+        path = os.path.join(args.out_dir, record["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = record
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

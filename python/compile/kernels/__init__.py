@@ -1,0 +1,5 @@
+"""L1 Pallas kernels for the decode hot path, plus pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .gqa_decode import gqa_decode  # noqa: F401
+from .mla_decode import mla_decode  # noqa: F401

@@ -1,0 +1,139 @@
+"""Pallas flash-decode kernel for grouped-query attention.
+
+The paper's hot loop is exactly this: one query token per user against a
+``T``-long KV cache — a bandwidth-bound, GEMV-like access pattern whose
+bytes-moved is the ``batch_kv_rd_bytes`` term of the LIMINAL model.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* Grid is ``(B, K)``: one program instance per (sequence, KV head). All
+  ``H/K`` query heads of the group share the program's KV tile, so each
+  cached byte is read from HBM exactly once — the kernel realizes the
+  GQA reuse factor (``2H/K`` FLOPs/byte) that Appendix A.3 derives as
+  the attention AMI asymptote.
+* The context axis is walked in ``block_t`` chunks with an online-softmax
+  (m, l, acc) carry, so only one ``[block_t, E]`` K tile and one V tile
+  are live in VMEM at a time; ``block_t`` is chosen so double-buffered
+  tiles fit comfortably (see ``vmem_bytes``).
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+  Mosaic custom-calls; correctness is validated through this path and
+  TPU efficiency is *estimated* from the BlockSpec (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 128
+
+
+def _gqa_kernel(q_ref, pos_ref, k_ref, v_ref, o_ref, *, block_t: int,
+                t_total: int):
+    """One (sequence, KV-head) program: online-softmax over T tiles.
+
+    Refs (leading block dims of size 1 squeezed below):
+      q_ref: [1, 1, GH, E]   queries for this head group
+      pos_ref: [1]           number of valid cache positions (<= T)
+      k_ref: [1, T, 1, E]    full K stripe for this kv head
+      v_ref: [1, T, 1, E]    full V stripe
+      o_ref: [1, 1, GH, E]   output
+    """
+    gh = q_ref.shape[2]
+    e = q_ref.shape[3]
+    q = q_ref[0, 0, :, :] * (1.0 / jnp.sqrt(jnp.asarray(e, jnp.float32)).astype(
+        q_ref.dtype
+    ))
+    pos = pos_ref[0]
+
+    n_blocks = t_total // block_t
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = k_ref[0, pl.ds(i * block_t, block_t), 0, :]  # [bt, E]
+        v_tile = v_ref[0, pl.ds(i * block_t, block_t), 0, :]  # [bt, E]
+        s = jnp.dot(
+            q, k_tile.T, preferred_element_type=jnp.float32
+        )  # [GH, bt]
+        # Mask cache slots beyond the sequence's valid length.
+        idx = i * block_t + jax.lax.iota(jnp.int32, block_t)
+        s = jnp.where((idx < pos)[None, :], s, -jnp.inf)
+        m_cur = jnp.max(s, axis=-1)  # [GH]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rescale previous accumulator into the new max frame.
+        scale = jnp.exp(m_prev - m_new)  # [GH]
+        p = jnp.exp(s - m_new[:, None])  # [GH, bt]
+        l_new = l_prev * scale + p.sum(axis=-1)
+        acc_new = acc_prev * scale[:, None] + jnp.dot(
+            p.astype(v_tile.dtype), v_tile, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((gh,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((gh,), jnp.float32)
+    acc0 = jnp.zeros((gh, e), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+
+    o_ref[0, 0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def gqa_decode(q, k_cache, v_cache, pos=None, *,
+               block_t: int = DEFAULT_BLOCK_T, interpret: bool = True):
+    """Flash-decode GQA attention via Pallas.
+
+    Args/returns exactly as :func:`..ref.gqa_decode_ref`, plus ``pos``:
+    an optional scalar count of valid cache positions (``1 <= pos <= T``;
+    defaults to the full cache). Slots at index >= ``pos`` are masked, so
+    a serving engine can run with a pre-allocated fixed-``T`` cache.
+    """
+    b, h, e = q.shape
+    _, t, k, _ = k_cache.shape
+    assert h % k == 0, f"H={h} not a multiple of K={k}"
+    if t % block_t != 0:
+        # Fall back to one block spanning the entire (short) context.
+        block_t = t
+    gh = h // k
+    qg = q.reshape(b, k, gh, e)
+    pos_arr = jnp.asarray(
+        [t if pos is None else pos], jnp.int32
+    ).reshape((1,))
+
+    kernel = functools.partial(_gqa_kernel, block_t=block_t, t_total=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, gh, e), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1, t, 1, e), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, t, 1, e), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gh, e), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, gh, e), q.dtype),
+        interpret=interpret,
+    )(qg, pos_arr, k_cache, v_cache)
+    return out.reshape(b, h, e)
+
+
+def vmem_bytes(block_t: int, e: int, gh: int, dtype_bytes: int = 4) -> int:
+    """Estimated live VMEM per program instance (K tile + V tile, double
+    buffered, plus q/acc). Used by DESIGN.md §Perf to size ``block_t``."""
+    tile = block_t * e * dtype_bytes
+    qacc = gh * e * dtype_bytes * 2
+    return 2 * 2 * tile + qacc  # 2 operands x 2 buffers + q/acc
+
+
+def mxu_utilization_estimate(t: int, e: int, gh: int,
+                             peak_macs_per_cycle: int = 128 * 128) -> float:
+    """Crude MXU duty estimate for one decode step: the QK^T and PV
+    matmuls have inner dim E and only ``gh`` rows, so at S=1 the systolic
+    array is mostly idle — the kernel is bandwidth-bound, matching the
+    paper's §4.8 observation (<=1% tensor utilization at low batch)."""
+    useful = 2 * gh * t * e  # MACs
+    # Cycles to stream the KV tile through a 128x128 MXU at one tile/cycle
+    # lower bound (weights-stationary): T * E / 128 per matmul.
+    cycles = 2 * t * max(e, 128) / 128
+    return min(1.0, useful / (cycles * peak_macs_per_cycle))

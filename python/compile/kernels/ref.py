@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 decode step.
+
+These are the correctness ground truth: every Pallas kernel must match
+its ``*_ref`` here to float tolerance (pytest + hypothesis enforce it),
+and the end-to-end decode step in ``model.py`` is built from the same
+pieces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q, k_cache, v_cache):
+    """Grouped-query decode attention, one new token per sequence.
+
+    Args:
+      q: ``[B, H, E]`` queries for the new token.
+      k_cache: ``[B, T, K, E]`` cached keys.
+      v_cache: ``[B, T, K, E]`` cached values.
+
+    Returns:
+      ``[B, H, E]`` attention output. ``H`` must be a multiple of ``K``;
+      query head ``h`` attends through KV head ``h // (H // K)``.
+    """
+    b, h, e = q.shape
+    _, t, k, _ = k_cache.shape
+    assert h % k == 0, f"H={h} not a multiple of K={k}"
+    group = h // k
+    qg = q.reshape(b, k, group, e)
+    scores = jnp.einsum("bkge,btke->bkgt", qg, k_cache) / jnp.sqrt(
+        jnp.asarray(e, jnp.float32)
+    ).astype(q.dtype)
+    s32 = scores.astype(jnp.float32)
+    p = jnp.exp(s32 - s32.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btke->bkge", p.astype(q.dtype), v_cache)
+    return out.reshape(b, h, e)
+
+
+def mla_decode_ref(q_latent, kv_cache, kv_latent_dim):
+    """Multi-head latent (absorbed) decode attention, DeepSeek style.
+
+    Args:
+      q_latent: ``[B, H, C]`` queries projected into the shared latent +
+        rope space (``C = G + R``).
+      kv_cache: ``[B, T, C]`` per-token latent cache, shared by all heads
+        — this sharing is what makes MLA's KV cache ~28x smaller than GQA
+        at DeepSeekV3 dimensions (paper Appendix A.2).
+      kv_latent_dim: ``G`` — the first ``G`` channels of the cache are
+        the value payload.
+
+    Returns:
+      ``[B, H, G]`` attention output in latent space (the up-projection
+      back to model dim is absorbed into the layer's output matmul).
+    """
+    b, h, c = q_latent.shape
+    _, t, c2 = kv_cache.shape
+    assert c == c2
+    scores = jnp.einsum("bhc,btc->bht", q_latent, kv_cache) / jnp.sqrt(
+        jnp.asarray(c, jnp.float32)
+    ).astype(q_latent.dtype)
+    s32 = scores.astype(jnp.float32)
+    p = jnp.exp(s32 - s32.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum(
+        "bht,btg->bhg", p.astype(q_latent.dtype), kv_cache[:, :, :kv_latent_dim]
+    )
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x.astype(jnp.float32) * inv).astype(x.dtype) * w
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: ``down(silu(x @ gate) * (x @ up))``."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def softmax_ref(x, axis: int = -1):
+    """Numerically-stable softmax (fp32 accumulation)."""
+    x32 = x.astype(jnp.float32)
+    p = jnp.exp(x32 - x32.max(axis=axis, keepdims=True))
+    return (p / p.sum(axis=axis, keepdims=True)).astype(x.dtype)

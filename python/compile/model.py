@@ -1,0 +1,361 @@
+"""L2: the transformer decode step in JAX, calling the L1 Pallas kernels.
+
+This is the *executable* analog of the paper's Figure 1 transformer
+block: RMSNorm -> GQA attention (Pallas flash-decode kernel) -> residual
+-> RMSNorm -> SwiGLU FFN -> residual, scanned over layers, with a KV
+cache updated in place at the current position. ``aot.py`` lowers it once
+to HLO text; the Rust coordinator executes it via PJRT with Python never
+on the request path.
+
+Also defined here: ``liminal_grid_eval``, a vectorized form of the
+LIMINAL latency equations (paper §2.2) used to offload large sweep grids
+to XLA, and ``gemv``, the Appendix E validation microbenchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gqa_decode
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    """A scaled-down Llama-style architecture (same topology as paper
+    Table 3, sized to execute quickly on the CPU PJRT backend)."""
+
+    num_layers: int = 4
+    embed_dim: int = 256
+    heads: int = 8
+    kv_heads: int = 2
+    head_dim: int = 32
+    intermediate_dim: int = 512
+    vocab: int = 512
+    context: int = 128  # fixed cache length T
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """FP32 KV bytes per token across all layers (the LIMINAL
+        ``kv_bytes_per_token`` quantity for this executable model)."""
+        return 2 * self.kv_heads * self.head_dim * 4 * self.num_layers
+
+    def weight_count(self) -> int:
+        """Total parameter count (mirrors ``apps::Llama3::weight_bytes``)."""
+        d, h, k, e, v = (
+            self.embed_dim,
+            self.heads,
+            self.kv_heads,
+            self.head_dim,
+            self.intermediate_dim,
+        )
+        per_layer = d * h * e + 2 * d * k * e + h * e * d + 3 * d * v + 2 * d
+        return per_layer * self.num_layers + 2 * self.vocab * d + d
+
+
+def init_params(cfg: DecodeConfig, key) -> Dict[str, jax.Array]:
+    """Random parameters, stacked per layer so the step can ``lax.scan``."""
+    d, h, k, e, v = (
+        cfg.embed_dim,
+        cfg.heads,
+        cfg.kv_heads,
+        cfg.head_dim,
+        cfg.intermediate_dim,
+    )
+    n = cfg.num_layers
+    keys = jax.random.split(key, 9)
+
+    def normal(kk, shape, fan_in):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+        return jax.random.normal(kk, shape, jnp.float32) * scale
+
+    return {
+        "tok_embed": normal(keys[0], (cfg.vocab, d), d),
+        "wq": normal(keys[1], (n, d, h * e), d),
+        "wk": normal(keys[2], (n, d, k * e), d),
+        "wv": normal(keys[3], (n, d, k * e), d),
+        "wo": normal(keys[4], (n, h * e, d), h * e),
+        "w_gate": normal(keys[5], (n, d, v), d),
+        "w_up": normal(keys[6], (n, d, v), d),
+        "w_down": normal(keys[7], (n, v, d), v),
+        "norm_attn": jnp.ones((n, d), jnp.float32),
+        "norm_ffn": jnp.ones((n, d), jnp.float32),
+        "norm_final": jnp.ones((d,), jnp.float32),
+        "lm_head": normal(keys[8], (d, cfg.vocab), d),
+    }
+
+
+def _masked_gqa_ref(cfg: DecodeConfig, q, kc, vc, pos):
+    """Oracle attention with dynamic length mask (used when
+    ``use_pallas=False`` to isolate kernel bugs from model bugs)."""
+    b, h, e = q.shape
+    k = cfg.kv_heads
+    group = h // k
+    qg = q.reshape(b, k, group, e)
+    s = jnp.einsum("bkge,btke->bkgt", qg, kc) / jnp.sqrt(
+        jnp.asarray(e, jnp.float32)
+    )
+    mask = jnp.arange(cfg.context) < pos
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btke->bkge", p, vc).reshape(b, h, e)
+
+
+def decode_step(cfg: DecodeConfig, params, token_ids, k_cache, v_cache, pos,
+                *, use_pallas: bool = True):
+    """One auto-regressive decode step for a whole batch.
+
+    Args:
+      token_ids: ``[B]`` int32 current tokens.
+      k_cache / v_cache: ``[L, B, T, K, E]`` fp32 caches.
+      pos: scalar int32 — number of tokens already in the cache. The new
+        token's KV is written at index ``pos``; attention spans
+        ``pos + 1`` positions.
+      use_pallas: route attention through the L1 kernel (True — the AOT
+        path) or the pure-jnp oracle (False — test path).
+
+    Returns:
+      ``(logits [B, vocab], k_cache, v_cache)`` with caches updated.
+    """
+    b = token_ids.shape[0]
+    h, k, e = cfg.heads, cfg.kv_heads, cfg.head_dim
+
+    x = params["tok_embed"][token_ids]  # [B, D]
+
+    def layer(x, layer_params):
+        (wq, wk, wv, wo, w_gate, w_up, w_down, norm_attn, norm_ffn,
+         kc, vc) = layer_params
+
+        # --- Attention ---
+        xa = ref.rmsnorm_ref(x, norm_attn)
+        q = (xa @ wq).reshape(b, h, e)
+        new_k = (xa @ wk).reshape(b, k, e)
+        new_v = (xa @ wv).reshape(b, k, e)
+        kc = jax.lax.dynamic_update_slice(kc, new_k[:, None], (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, new_v[:, None], (0, pos, 0, 0))
+        if use_pallas:
+            attn = gqa_decode(q, kc, vc, pos=pos + 1)
+        else:
+            attn = _masked_gqa_ref(cfg, q, kc, vc, pos + 1)
+        x = x + attn.reshape(b, h * e) @ wo
+
+        # --- FFN ---
+        xf = ref.rmsnorm_ref(x, norm_ffn)
+        x = x + ref.swiglu_ref(xf, w_gate, w_up, w_down)
+        return x, (kc, vc)
+
+    layer_params = (
+        params["wq"], params["wk"], params["wv"], params["wo"],
+        params["w_gate"], params["w_up"], params["w_down"],
+        params["norm_attn"], params["norm_ffn"],
+        k_cache, v_cache,
+    )
+    x, (k_cache, v_cache) = jax.lax.scan(layer, x, layer_params)
+
+    logits = ref.rmsnorm_ref(x, params["norm_final"]) @ params["lm_head"]
+    return logits, k_cache, v_cache
+
+
+def make_decode_fn(cfg: DecodeConfig, batch: int, *, use_pallas: bool = True):
+    """Build the jit-able decode function plus concrete example args
+    (what ``aot.py`` lowers). Returns ``(fn, example_args)``."""
+
+    def fn(params, token_ids, k_cache, v_cache, pos):
+        return decode_step(cfg, params, token_ids, k_cache, v_cache, pos,
+                           use_pallas=use_pallas)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache_shape = (cfg.num_layers, batch, cfg.context, cfg.kv_heads,
+                   cfg.head_dim)
+    example = (
+        params,
+        jnp.zeros((batch,), jnp.int32),
+        jnp.zeros(cache_shape, jnp.float32),
+        jnp.zeros(cache_shape, jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    return fn, example
+
+
+def liminal_grid_eval(bytes_moved, tensor_flops, scalar_flops, mem_bw,
+                      tensor_peak, scalar_peak, exposed):
+    """Vectorized LIMINAL §2.2: ``max(T_compute, T_mem) + T_exposed`` and
+    UTPS over N working points at once. All inputs ``[N]`` fp32; returns
+    ``(t_batch [N], utps [N])``."""
+    t_mem = bytes_moved / mem_bw
+    t_compute = tensor_flops / tensor_peak + scalar_flops / scalar_peak
+    t_batch = jnp.maximum(t_mem, t_compute) + exposed
+    return t_batch, 1.0 / t_batch
+
+
+def make_grid_eval_fn(n: int):
+    """Jit-able grid evaluator over ``n`` points + example args."""
+
+    def fn(bytes_moved, tensor_flops, scalar_flops, mem_bw, tensor_peak,
+           scalar_peak, exposed):
+        return liminal_grid_eval(bytes_moved, tensor_flops, scalar_flops,
+                                 mem_bw, tensor_peak, scalar_peak, exposed)
+
+    ex = tuple(jnp.ones((n,), jnp.float32) for _ in range(7))
+    return fn, ex
+
+
+def make_gemv_fn(m: int, n: int):
+    """The Appendix E validation microbenchmark: ``x[1,m] @ W[m,n]``.
+
+    LIMINAL predicts its latency as memory-bound (``m*n*4`` bytes over
+    the measured stream bandwidth); the Rust runtime measures the real
+    wall-clock through PJRT, reproducing the paper's H100 GEMV gap study
+    on our CPU substrate.
+    """
+
+    def fn(x, w):
+        return (x @ w,)
+
+    ex = (jnp.zeros((1, m), jnp.float32), jnp.zeros((m, n), jnp.float32))
+    return fn, ex
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-style MLA decode step (absorbed latent attention, dense MLP).
+# MoE routing is a coordinator-level (L3) concern in this repo; the
+# executable model exercises the MLA cache mechanics the paper's capacity
+# analysis hinges on: the per-token cache entry is a single [C = G + R]
+# latent shared by all heads.
+# ---------------------------------------------------------------------------
+
+from .kernels import mla_decode  # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaDecodeConfig:
+    """Scaled-down DeepSeek-style architecture."""
+
+    num_layers: int = 4
+    embed_dim: int = 256
+    heads: int = 8
+    q_latent: int = 64   # F
+    kv_latent: int = 48  # G
+    rope_dim: int = 16   # R
+    intermediate_dim: int = 512
+    vocab: int = 512
+    context: int = 128
+
+    @property
+    def latent_dim(self) -> int:
+        """C = G + R, the per-token cache width."""
+        return self.kv_latent + self.rope_dim
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """FP32 latent-cache bytes per token across all layers — compare
+        with ``DecodeConfig.kv_bytes_per_token`` to see MLA's shrink."""
+        return self.latent_dim * 4 * self.num_layers
+
+
+def init_mla_params(cfg: MlaDecodeConfig, key):
+    """Random parameters, stacked per layer."""
+    d, h, f, c, g, v = (cfg.embed_dim, cfg.heads, cfg.q_latent,
+                        cfg.latent_dim, cfg.kv_latent, cfg.intermediate_dim)
+    n = cfg.num_layers
+    keys = jax.random.split(key, 9)
+
+    def normal(kk, shape, fan_in):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+        return jax.random.normal(kk, shape, jnp.float32) * scale
+
+    return {
+        "tok_embed": normal(keys[0], (cfg.vocab, d), d),
+        "w_dq": normal(keys[1], (n, d, f), d),        # query down-proj
+        "w_uq": normal(keys[2], (n, f, h * c), f),    # query up-proj (latent space)
+        "w_dkv": normal(keys[3], (n, d, c), d),       # latent cache projection
+        "w_o": normal(keys[4], (n, h * g, d), h * g), # output projection
+        "w_gate": normal(keys[5], (n, d, v), d),
+        "w_up": normal(keys[6], (n, d, v), d),
+        "w_down": normal(keys[7], (n, v, d), v),
+        "norm_attn": jnp.ones((n, d), jnp.float32),
+        "norm_ffn": jnp.ones((n, d), jnp.float32),
+        "norm_final": jnp.ones((d,), jnp.float32),
+        "lm_head": normal(keys[8], (d, cfg.vocab), d),
+    }
+
+
+def _masked_mla_ref(cfg: MlaDecodeConfig, q_lat, cache, pos):
+    """Oracle MLA attention with a dynamic length mask."""
+    c = cfg.latent_dim
+    s = jnp.einsum("bhc,btc->bht", q_lat, cache) / jnp.sqrt(
+        jnp.asarray(c, jnp.float32)
+    )
+    mask = jnp.arange(cfg.context) < pos
+    s = jnp.where(mask[None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btg->bhg", p, cache[:, :, :cfg.kv_latent])
+
+
+def mla_decode_step(cfg: MlaDecodeConfig, params, token_ids, latent_cache,
+                    pos, *, use_pallas: bool = True):
+    """One MLA decode step.
+
+    Args:
+      token_ids: ``[B]`` int32.
+      latent_cache: ``[L, B, T, C]`` fp32 — note there is ONE cache (not
+        K and V), the whole point of MLA.
+      pos: scalar int32 tokens already cached.
+
+    Returns:
+      ``(logits [B, vocab], latent_cache)``.
+    """
+    b = token_ids.shape[0]
+    h, g = cfg.heads, cfg.kv_latent
+
+    x = params["tok_embed"][token_ids]
+
+    def layer(x, layer_params):
+        (w_dq, w_uq, w_dkv, w_o, w_gate, w_up, w_down, norm_attn, norm_ffn,
+         cache) = layer_params
+        xa = ref.rmsnorm_ref(x, norm_attn)
+        q_lat = ((xa @ w_dq) @ w_uq).reshape(b, h, cfg.latent_dim)
+        new_latent = xa @ w_dkv  # [B, C]
+        cache = jax.lax.dynamic_update_slice(cache, new_latent[:, None],
+                                             (0, pos, 0))
+        if use_pallas:
+            attn = mla_decode(q_lat, cache, g, pos=pos + 1)
+        else:
+            attn = _masked_mla_ref(cfg, q_lat, cache, pos + 1)
+        x = x + attn.reshape(b, h * g) @ w_o
+        xf = ref.rmsnorm_ref(x, norm_ffn)
+        x = x + ref.swiglu_ref(xf, w_gate, w_up, w_down)
+        return x, cache
+
+    layer_params = (
+        params["w_dq"], params["w_uq"], params["w_dkv"], params["w_o"],
+        params["w_gate"], params["w_up"], params["w_down"],
+        params["norm_attn"], params["norm_ffn"],
+        latent_cache,
+    )
+    x, latent_cache = jax.lax.scan(layer, x, layer_params)
+    logits = ref.rmsnorm_ref(x, params["norm_final"]) @ params["lm_head"]
+    return logits, latent_cache
+
+
+def make_mla_decode_fn(cfg: MlaDecodeConfig, batch: int, *,
+                       use_pallas: bool = True):
+    """Jit-able MLA decode fn + example args (for ``aot.py``)."""
+
+    def fn(params, token_ids, latent_cache, pos):
+        return mla_decode_step(cfg, params, token_ids, latent_cache, pos,
+                               use_pallas=use_pallas)
+
+    params = init_mla_params(cfg, jax.random.PRNGKey(1))
+    example = (
+        params,
+        jnp.zeros((batch,), jnp.int32),
+        jnp.zeros((cfg.num_layers, batch, cfg.context, cfg.latent_dim),
+                  jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    return fn, example

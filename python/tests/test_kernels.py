@@ -1,0 +1,138 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against
+``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gqa_decode, mla_decode, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == jnp.float32 else dict(
+        rtol=2e-2, atol=2e-2
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    k=st.integers(1, 4),
+    group=st.sampled_from([1, 2, 4, 8]),
+    e=st.sampled_from([8, 16, 32, 64]),
+    t=st.sampled_from([16, 64, 128, 256, 384]),
+)
+def test_gqa_matches_ref(b, k, group, e, t):
+    h = k * group
+    q = rand(1, (b, h, e), jnp.float32)
+    kc = rand(2, (b, t, k, e), jnp.float32)
+    vc = rand(3, (b, t, k, e), jnp.float32)
+    got = gqa_decode(q, kc, vc)
+    want = ref.gqa_decode_ref(q, kc, vc)
+    np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 4, 8]),
+    c=st.sampled_from([16, 48, 96]),
+    g=st.sampled_from([8, 32]),
+    t=st.sampled_from([32, 128, 320]),
+)
+def test_mla_matches_ref(b, h, c, g, t):
+    if g >= c:
+        g = c // 2
+    ql = rand(4, (b, h, c), jnp.float32)
+    cc = rand(5, (b, t, c), jnp.float32)
+    got = mla_decode(ql, cc, g)
+    want = ref.mla_decode_ref(ql, cc, g)
+    np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([128, 256]),
+    pos=st.integers(1, 256),
+)
+def test_gqa_masking_matches_truncated_ref(t, pos):
+    pos = min(pos, t)
+    b, k, group, e = 2, 2, 4, 32
+    h = k * group
+    q = rand(6, (b, h, e), jnp.float32)
+    kc = rand(7, (b, t, k, e), jnp.float32)
+    vc = rand(8, (b, t, k, e), jnp.float32)
+    got = gqa_decode(q, kc, vc, pos=pos)
+    want = ref.gqa_decode_ref(q, kc[:, :pos], vc[:, :pos])
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(pos=st.integers(1, 320))
+def test_mla_masking_matches_truncated_ref(pos):
+    b, h, c, g, t = 2, 4, 48, 32, 320
+    pos = min(pos, t)
+    ql = rand(9, (b, h, c), jnp.float32)
+    cc = rand(10, (b, t, c), jnp.float32)
+    got = mla_decode(ql, cc, g, pos=pos)
+    want = ref.mla_decode_ref(ql, cc[:, :pos], g)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_dtypes(dtype):
+    b, k, group, e, t = 2, 2, 4, 32, 128
+    h = k * group
+    q = rand(11, (b, h, e), dtype)
+    kc = rand(12, (b, t, k, e), dtype)
+    vc = rand(13, (b, t, k, e), dtype)
+    got = gqa_decode(q, kc, vc)
+    want = ref.gqa_decode_ref(q, kc, vc)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
+    )
+
+
+def test_gqa_block_boundary_independence():
+    """Result must not depend on the tiling choice."""
+    b, k, group, e, t = 1, 2, 2, 16, 384
+    h = k * group
+    q = rand(14, (b, h, e), jnp.float32)
+    kc = rand(15, (b, t, k, e), jnp.float32)
+    vc = rand(16, (b, t, k, e), jnp.float32)
+    full = gqa_decode(q, kc, vc, block_t=384)
+    tiled = gqa_decode(q, kc, vc, block_t=128)
+    odd = gqa_decode(q, kc, vc, block_t=96)
+    np.testing.assert_allclose(full, tiled, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(full, odd, rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_softmax_rows_sum_to_one_property():
+    """With all-equal values V=c, attention output must be exactly c."""
+    b, k, group, e, t = 1, 1, 2, 8, 64
+    h = k * group
+    q = rand(17, (b, h, e), jnp.float32)
+    kc = rand(18, (b, t, k, e), jnp.float32)
+    vc = jnp.full((b, t, k, e), 3.25, jnp.float32)
+    got = gqa_decode(q, kc, vc)
+    np.testing.assert_allclose(got, jnp.full_like(got, 3.25), rtol=1e-5)
+
+
+def test_gqa_rejects_bad_head_grouping():
+    q = jnp.zeros((1, 6, 8), jnp.float32)
+    kc = jnp.zeros((1, 16, 4, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        gqa_decode(q, kc, kc)

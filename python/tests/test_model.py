@@ -1,0 +1,169 @@
+"""L2 decode-step tests: shapes, cache semantics, Pallas-vs-oracle parity,
+and multi-step autoregression consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (DecodeConfig, decode_step, init_params,
+                           liminal_grid_eval, make_decode_fn)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = DecodeConfig(num_layers=2, embed_dim=64, heads=4, kv_heads=2,
+                   head_dim=16, intermediate_dim=128, vocab=97, context=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(42))
+
+
+def caches(batch):
+    shape = (CFG.num_layers, batch, CFG.context, CFG.kv_heads, CFG.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def test_shapes(params):
+    kc, vc = caches(3)
+    toks = jnp.asarray([1, 2, 3], jnp.int32)
+    logits, kc2, vc2 = decode_step(CFG, params, toks, kc, vc,
+                                   jnp.asarray(0, jnp.int32))
+    assert logits.shape == (3, CFG.vocab)
+    assert kc2.shape == kc.shape and vc2.shape == vc.shape
+
+
+def test_cache_updated_only_at_pos(params):
+    kc, vc = caches(2)
+    toks = jnp.asarray([5, 6], jnp.int32)
+    pos = jnp.asarray(7, jnp.int32)
+    _, kc2, vc2 = decode_step(CFG, params, toks, kc, vc, pos)
+    changed = np.any(np.asarray(kc2) != 0.0, axis=(0, 1, 3, 4))
+    assert changed[7]
+    assert not changed[:7].any() and not changed[8:].any()
+
+
+def test_pallas_and_oracle_paths_agree(params):
+    kc, vc = caches(2)
+    toks = jnp.asarray([10, 20], jnp.int32)
+    for pos in [0, 1, 5, CFG.context - 1]:
+        p = jnp.asarray(pos, jnp.int32)
+        lp, kp, vp = decode_step(CFG, params, toks, kc, vc, p, use_pallas=True)
+        lo, ko, vo = decode_step(CFG, params, toks, kc, vc, p, use_pallas=False)
+        np.testing.assert_allclose(lp, lo, rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(kp, ko, rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(vp, vo, rtol=3e-5, atol=3e-5)
+
+
+def test_autoregressive_rollout_is_deterministic(params):
+    """Greedy decode twice -> identical token streams."""
+
+    def rollout():
+        kc, vc = caches(1)
+        tok = jnp.asarray([3], jnp.int32)
+        toks = []
+        for pos in range(8):
+            logits, kc, vc = decode_step(CFG, params, tok, kc, vc,
+                                         jnp.asarray(pos, jnp.int32))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+        return toks
+
+    assert rollout() == rollout()
+
+
+def test_prefix_independence(params):
+    """Step at pos p must not depend on garbage beyond p in the cache."""
+    kc, vc = caches(1)
+    tok = jnp.asarray([7], jnp.int32)
+    pos = jnp.asarray(3, jnp.int32)
+    logits_clean, _, _ = decode_step(CFG, params, tok, kc, vc, pos)
+    noise_k = kc.at[:, :, 10:].set(99.0)
+    noise_v = vc.at[:, :, 10:].set(-99.0)
+    logits_noisy, _, _ = decode_step(CFG, params, tok, noise_k, noise_v, pos)
+    np.testing.assert_allclose(logits_clean, logits_noisy, rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_make_decode_fn_jits(params):
+    fn, ex = make_decode_fn(CFG, batch=2)
+    out = jax.jit(fn)(*ex)
+    assert out[0].shape == (2, CFG.vocab)
+
+
+def test_grid_eval_matches_scalar_math():
+    n = 16
+    ones = jnp.ones((n,), jnp.float32)
+    t_batch, utps = liminal_grid_eval(
+        bytes_moved=ones * 4e9, tensor_flops=ones * 1e9,
+        scalar_flops=ones * 1e6, mem_bw=ones * 4e12,
+        tensor_peak=ones * 2.25e15, scalar_peak=ones * 2e14,
+        exposed=ones * 5e-4,
+    )
+    want_mem = 4e9 / 4e12
+    want_comp = 1e9 / 2.25e15 + 1e6 / 2e14
+    want = max(want_mem, want_comp) + 5e-4
+    np.testing.assert_allclose(t_batch, want, rtol=1e-6)
+    np.testing.assert_allclose(utps, 1.0 / want, rtol=1e-6)
+
+
+def test_weight_count_matches_param_tree(params):
+    n = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    assert n == CFG.weight_count()
+
+
+# --- MLA decode step -------------------------------------------------------
+
+from compile.model import (MlaDecodeConfig, init_mla_params,  # noqa: E402
+                           mla_decode_step)
+
+MLA_CFG = MlaDecodeConfig(num_layers=2, embed_dim=64, heads=4, q_latent=32,
+                          kv_latent=24, rope_dim=8, intermediate_dim=128,
+                          vocab=97, context=32)
+
+
+@pytest.fixture(scope="module")
+def mla_params():
+    return init_mla_params(MLA_CFG, jax.random.PRNGKey(7))
+
+
+def mla_cache(batch):
+    return jnp.zeros((MLA_CFG.num_layers, batch, MLA_CFG.context,
+                      MLA_CFG.latent_dim), jnp.float32)
+
+
+def test_mla_shapes_and_single_cache(mla_params):
+    toks = jnp.asarray([1, 2, 3], jnp.int32)
+    logits, cache = mla_decode_step(MLA_CFG, mla_params, toks, mla_cache(3),
+                                    jnp.asarray(0, jnp.int32))
+    assert logits.shape == (3, MLA_CFG.vocab)
+    # One latent cache, [L, B, T, C] — not separate K and V.
+    assert cache.shape == (2, 3, 32, MLA_CFG.latent_dim)
+
+
+def test_mla_pallas_oracle_parity(mla_params):
+    toks = jnp.asarray([5, 9], jnp.int32)
+    for pos in [0, 3, MLA_CFG.context - 1]:
+        p = jnp.asarray(pos, jnp.int32)
+        lp, cp = mla_decode_step(MLA_CFG, mla_params, toks, mla_cache(2), p,
+                                 use_pallas=True)
+        lo, co = mla_decode_step(MLA_CFG, mla_params, toks, mla_cache(2), p,
+                                 use_pallas=False)
+        np.testing.assert_allclose(lp, lo, rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(cp, co, rtol=3e-5, atol=3e-5)
+
+
+def test_mla_cache_is_smaller_than_gqa():
+    # The architectural point: per-token cache bytes shrink (paper A.2).
+    gqa = CFG.kv_bytes_per_token / CFG.num_layers
+    mla = MLA_CFG.kv_bytes_per_token / MLA_CFG.num_layers
+    assert mla < gqa
+
+
+def test_mla_cache_updated_only_at_pos(mla_params):
+    toks = jnp.asarray([5, 6], jnp.int32)
+    pos = jnp.asarray(9, jnp.int32)
+    _, cache = mla_decode_step(MLA_CFG, mla_params, toks, mla_cache(2), pos)
+    changed = np.any(np.asarray(cache) != 0.0, axis=(0, 1, 3))
+    assert changed[9] and not changed[:9].any() and not changed[10:].any()

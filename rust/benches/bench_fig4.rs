@@ -1,0 +1,11 @@
+//! Regeneration time of fig4's data series.
+
+use std::path::Path;
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    suite.bench_val("experiments/fig4", || {
+        liminal::experiments::run("fig4", Path::new("artifacts")).unwrap()
+    });
+}

@@ -1,0 +1,11 @@
+//! Regeneration time of fig5's data series.
+
+use std::path::Path;
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    suite.bench_val("experiments/fig5", || {
+        liminal::experiments::run("fig5", Path::new("artifacts")).unwrap()
+    });
+}

@@ -1,0 +1,40 @@
+//! Microbenchmarks of the analytical core: the per-point evaluation that
+//! every sweep and experiment sits on (perf target: < 2 µs/point, no
+//! allocation in the hot path), plus the MoE Monte-Carlo.
+
+use liminal::apps::{Application, DecodePoint, DeepSeekV3, Llama3};
+use liminal::hw::{presets, SystemConfig};
+use liminal::model::{evaluate, evaluate_workload, EvalOptions};
+use liminal::moe::{imbalance_factor, ImbalanceEstimator};
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    let opts = EvalOptions::default();
+    let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+
+    let l405 = Llama3::llama3_405b();
+    let pt = DecodePoint { batch: 8, context: 65536 };
+    suite.bench_val("model/evaluate_llama405b", || {
+        evaluate(&l405, &sys, &pt, &opts).unwrap()
+    });
+
+    let ds = DeepSeekV3::v3();
+    // Warm the MI cache so the bench measures the model, not the MC.
+    let _ = evaluate(&ds, &sys, &pt, &opts);
+    suite.bench_val("model/evaluate_deepseek_cached_mi", || {
+        evaluate(&ds, &sys, &pt, &opts).unwrap()
+    });
+
+    let wl = l405.workload(&pt);
+    let cap = l405.capacity_bytes(&pt);
+    suite.bench_val("model/evaluate_workload_only", || {
+        evaluate_workload(&wl, &sys, &pt, &opts, cap)
+    });
+
+    suite.bench_val("model/workload_build_llama405b", || l405.workload(&pt));
+
+    suite.bench_val("moe/imbalance_cached", || imbalance_factor(256, 8, 64));
+    let est = ImbalanceEstimator { trials: 2048, ..Default::default() };
+    suite.bench_val("moe/imbalance_mc_2048trials_b64", || est.estimate(64));
+}

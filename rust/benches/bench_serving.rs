@@ -1,0 +1,56 @@
+//! Serving-simulator benchmarks: analytic DES throughput (steps/s of the
+//! scheduler itself) and, when artifacts exist, the PJRT decode step.
+
+use std::sync::Arc;
+
+use liminal::apps::Registry;
+use liminal::hw::{presets, SystemConfig};
+use liminal::runtime::Runtime;
+use liminal::serving::{
+    AnalyticEngine, Batcher, KvBudget, PjrtEngine, ServingSim, SimConfig,
+    WorkloadGen, WorkloadSpec,
+};
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-70b").unwrap();
+
+    suite.bench_val("serving/analytic_200req_sim", || {
+        let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+        let kv = KvBudget::new(
+            sys.total_capacity(),
+            app.weight_bytes(),
+            app.kv_bytes_per_token(),
+        );
+        let batcher = Batcher::new(64, kv);
+        let mut engine = AnalyticEngine::new(Arc::clone(&app), sys);
+        let workload = WorkloadGen::new(WorkloadSpec {
+            arrival_rate: 500.0,
+            n_requests: 200,
+            context: (1024, 8192),
+            gen: (16, 64),
+            seed: 3,
+        })
+        .generate();
+        ServingSim::new(batcher, &mut engine, SimConfig::default()).run(workload)
+    });
+
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut rt = Runtime::new(std::path::Path::new("artifacts")).unwrap();
+        for batch in [1u64, 8] {
+            let mut eng = PjrtEngine::new(&mut rt, batch).unwrap();
+            eng.randomize_params(1).unwrap();
+            let tokens = vec![1i32; eng.batch as usize];
+            suite.bench(&format!("serving/pjrt_decode_step_b{batch}"), || {
+                if eng.pos >= eng.context {
+                    eng.reset().unwrap();
+                }
+                let _ = eng.step(&tokens).unwrap();
+            });
+        }
+    } else {
+        eprintln!("(pjrt benches skipped: run `make artifacts`)");
+    }
+}

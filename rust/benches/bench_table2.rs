@@ -1,0 +1,12 @@
+//! End-to-end regeneration time of Table 2 (UTPS + capacity-max STPS,
+//! 9 systems x 2 contexts).
+
+use std::path::Path;
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    suite.bench_val("experiments/table2", || {
+        liminal::experiments::run("table2", Path::new("artifacts")).unwrap()
+    });
+}

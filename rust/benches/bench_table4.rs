@@ -1,0 +1,11 @@
+//! Regeneration time of Table 4 (capacity + AMI, 8 contexts x 6 cells).
+
+use std::path::Path;
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    suite.bench_val("experiments/table4", || {
+        liminal::experiments::run("table4", Path::new("artifacts")).unwrap()
+    });
+}

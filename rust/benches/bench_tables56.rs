@@ -1,0 +1,15 @@
+//! Regeneration time of the appendix Tables 5 and 6 (15 rows x 6
+//! contexts each, incl. CENT rows and max-batch search).
+
+use std::path::Path;
+use liminal::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::from_args();
+    suite.bench_val("experiments/table5", || {
+        liminal::experiments::run("table5", Path::new("artifacts")).unwrap()
+    });
+    suite.bench_val("experiments/table6", || {
+        liminal::experiments::run("table6", Path::new("artifacts")).unwrap()
+    });
+}

@@ -1,0 +1,209 @@
+//! Llama 3 workload equations (paper Appendix A.1).
+//!
+//! A standard dense transformer with grouped-query attention: per layer a
+//! QKV projection, attention over the cached context, an output
+//! projection, and a SwiGLU FFN (gate/up/down). At decode, `S = 1`.
+
+use super::{
+    Application, DecodePoint, ModelSpec, OpCounts, Traffic, NORM_FLOPS_PER_ELEM,
+    SOFTMAX_OPS_PER_ELEM,
+};
+
+/// A Llama-3-family dense model (70B or 405B in the paper).
+#[derive(Debug, Clone)]
+pub struct Llama3 {
+    spec: ModelSpec,
+}
+
+impl Llama3 {
+    /// Wrap a dense `ModelSpec`. Panics if the spec carries MLA/MoE
+    /// parameters (those belong to [`super::DeepSeekV3`]).
+    pub fn new(spec: ModelSpec) -> Self {
+        assert!(
+            spec.mla.is_none() && spec.moe.is_none(),
+            "Llama3 is a dense GQA model; got MLA/MoE parameters"
+        );
+        Llama3 { spec }
+    }
+
+    /// The 70-billion-parameter configuration.
+    pub fn llama3_70b() -> Self {
+        Llama3::new(ModelSpec::llama3_70b())
+    }
+
+    /// The 405-billion-parameter configuration.
+    pub fn llama3_405b() -> Self {
+        Llama3::new(ModelSpec::llama3_405b())
+    }
+
+    /// Weight *elements* in one transformer layer: Q/K/V/O projections
+    /// plus the three SwiGLU FFN matrices.
+    fn layer_weight_elems(&self) -> f64 {
+        let s = &self.spec;
+        let (d, h, k, e, v) = (
+            s.embed_dim as f64,
+            s.heads as f64,
+            s.kv_heads as f64,
+            s.head_dim as f64,
+            s.intermediate_dim as f64,
+        );
+        let wq = d * h * e;
+        let wk = d * k * e;
+        let wv = d * k * e;
+        let wo = h * e * d;
+        let ffn = 3.0 * d * v; // gate + up + down
+        wq + wk + wv + wo + ffn
+    }
+}
+
+impl Application for Llama3 {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Total weights: `L` layers plus untied input embedding and LM head
+    /// (`2 * vocab * D`). Reproduces the official parameter counts:
+    /// 70.55e9 for Llama3-70B and 405.85e9 for Llama3-405B.
+    fn weight_bytes(&self) -> f64 {
+        let s = &self.spec;
+        let elems = self.layer_weight_elems() * s.num_layers as f64
+            + 2.0 * s.vocab as f64 * s.embed_dim as f64;
+        elems * s.elem_bytes
+    }
+
+    /// GQA caches `K` and `V` per KV head: `2 * K * E` elements/token/layer.
+    fn kv_bytes_per_token_layer(&self) -> f64 {
+        let s = &self.spec;
+        2.0 * s.kv_heads as f64 * s.head_dim as f64 * s.elem_bytes
+    }
+
+    fn op_counts(&self, pt: &DecodePoint) -> OpCounts {
+        let s = &self.spec;
+        let b = pt.batch as f64;
+        let t = pt.context as f64;
+        let sq = 1.0; // S: output tokens per step
+        let (d, h, k, e, v) = (
+            s.embed_dim as f64,
+            s.heads as f64,
+            s.kv_heads as f64,
+            s.head_dim as f64,
+            s.intermediate_dim as f64,
+        );
+
+        // Appendix A.1, verbatim.
+        let q_flops = b * h * sq * d * e * 2.0;
+        let k_flops = b * k * sq * d * e * 2.0;
+        let v_flops = b * k * sq * d * e * 2.0;
+        let qkv_flops = q_flops + k_flops + v_flops;
+
+        let qk_flops = b * h * t * e * sq * 2.0;
+        let av_flops = b * h * t * e * sq * 2.0;
+        let out_flops = b * sq * (h * e) * d * 2.0;
+        let attn_flops = qk_flops + av_flops + out_flops;
+
+        let gate_flops = b * sq * d * v * 2.0;
+        let up_flops = b * sq * d * v * 2.0;
+        let down_flops = b * sq * d * v * 2.0;
+        let ffn_flops = gate_flops + up_flops + down_flops;
+
+        let softmax_scalar = b * h * t * sq * SOFTMAX_OPS_PER_ELEM;
+        let r1_scalar = b * sq * d * NORM_FLOPS_PER_ELEM;
+        let r2_scalar = b * sq * d * NORM_FLOPS_PER_ELEM;
+
+        let layers = s.num_layers as f64;
+        OpCounts {
+            tensor: (qkv_flops + attn_flops + ffn_flops) * layers,
+            scalar: (softmax_scalar + r1_scalar + r2_scalar) * layers,
+        }
+    }
+
+    fn traffic(&self, pt: &DecodePoint) -> Traffic {
+        let s = &self.spec;
+        let b = pt.batch as f64;
+        let t = pt.context as f64;
+        let per_tok_layer = self.kv_bytes_per_token_layer();
+        let layers = s.num_layers as f64;
+        Traffic {
+            weight_rd_bytes: self.weight_bytes(),
+            kv_rd_bytes: b * t * per_tok_layer * layers,
+            kv_wr_bytes: b * 1.0 * per_tok_layer * layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_bytes_match_official_param_counts() {
+        // FP8: one byte per parameter, so bytes == parameter count.
+        let m70 = Llama3::llama3_70b();
+        let m405 = Llama3::llama3_405b();
+        assert!((m70.weight_bytes() - 70.55e9).abs() / 70.55e9 < 0.005);
+        assert!((m405.weight_bytes() - 405.85e9).abs() / 405.85e9 < 0.005);
+    }
+
+    #[test]
+    fn kv_cache_matches_paper_intro_example() {
+        // Paper §1: "A *single* user at 64K context consumes 15.75 GB of
+        // KV-cache" for Llama3-405B (GB == GiB in the paper's tables).
+        let m = Llama3::llama3_405b();
+        let bytes = 65536.0 * m.kv_bytes_per_token();
+        assert!((bytes / crate::GIB - 15.75).abs() < 0.05);
+    }
+
+    #[test]
+    fn capacity_matches_table4_b1() {
+        // Table 4, B=1, T=1K: 65 GB (70B) and 377 GB (405B).
+        let pt = DecodePoint { batch: 1, context: 1024 };
+        let c70 = Llama3::llama3_70b().capacity_bytes(&pt) / crate::GIB;
+        let c405 = Llama3::llama3_405b().capacity_bytes(&pt) / crate::GIB;
+        assert!((c70 - 65.0).abs() < 1.0, "got {c70}");
+        assert!((c405 - 377.0).abs() < 1.5, "got {c405}");
+    }
+
+    #[test]
+    fn capacity_matches_table4_b32_64k() {
+        // Table 4, B=32, T=64K: 385 GB (70B), 881 GB (405B).
+        let pt = DecodePoint { batch: 32, context: 65536 };
+        let c70 = Llama3::llama3_70b().capacity_bytes(&pt) / crate::GIB;
+        let c405 = Llama3::llama3_405b().capacity_bytes(&pt) / crate::GIB;
+        assert!((c70 - 385.0).abs() < 2.0, "got {c70}");
+        assert!((c405 - 881.0).abs() < 3.0, "got {c405}");
+    }
+
+    #[test]
+    fn ami_matches_table4() {
+        // Table 4 AMI: Llama3-70B B=1/T=1K -> 1.99; B=32/T=128K -> 20.31.
+        let m = Llama3::llama3_70b();
+        let a = m.arithmetic_intensity(&DecodePoint { batch: 1, context: 1024 });
+        assert!((a - 1.99).abs() < 0.05, "got {a}");
+        let a = m.arithmetic_intensity(&DecodePoint { batch: 32, context: 131072 });
+        assert!((a - 20.31).abs() / 20.31 < 0.03, "got {a}");
+
+        // Llama3-405B B=32/T=4K -> 61.04.
+        let m = Llama3::llama3_405b();
+        let a = m.arithmetic_intensity(&DecodePoint { batch: 32, context: 4096 });
+        assert!((a - 61.04).abs() / 61.04 < 0.03, "got {a}");
+    }
+
+    #[test]
+    fn ami_converges_to_attention_asymptote() {
+        // Appendix A.3: Llama3-405B AMI converges to 32 FLOPs/byte as T
+        // grows (attention dominates; 2*2*H*E*T flops over 2*K*E*T bytes
+        // read = 2*H/K = 32).
+        let m = Llama3::llama3_405b();
+        let a = m.arithmetic_intensity(&DecodePoint { batch: 32, context: 1 << 24 });
+        assert!((a - 32.0).abs() < 1.0, "got {a}");
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_batch() {
+        let m = Llama3::llama3_70b();
+        let o1 = m.op_counts(&DecodePoint { batch: 1, context: 8192 });
+        let o4 = m.op_counts(&DecodePoint { batch: 4, context: 8192 });
+        assert!((o4.tensor / o1.tensor - 4.0).abs() < 1e-9);
+        assert!((o4.scalar / o1.scalar - 4.0).abs() < 1e-9);
+    }
+}

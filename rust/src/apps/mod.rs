@@ -1,0 +1,100 @@
+//! Application layer: LLM architectures abstracted as op counts, data
+//! volumes, and synchronization requirements (paper §2.2 + Appendix A).
+//!
+//! An [`Application`] turns a decode-step working point (batch size `B`,
+//! context length `T`, output length `S = 1`) into a [`Workload`]: total
+//! tensor FLOPs, scalar FLOPs, bytes read from backing memory, and the
+//! number of collective operations per layer. The analytical model in
+//! [`crate::model`] combines a `Workload` with a hardware description to
+//! produce latency and throughput.
+
+mod deepseek;
+mod llama;
+mod registry;
+mod spec;
+mod workload;
+
+pub use deepseek::DeepSeekV3;
+pub use llama::Llama3;
+pub use registry::Registry;
+pub use spec::{MlaSpec, ModelSpec, MoeSpec};
+pub use workload::{MoeLatencyInputs, OpCounts, Traffic, Workload};
+
+/// Number of scalar FLOPs charged per softmax element (exp, subtract-max,
+/// running max, sum, divide). The scalar term is orders of magnitude below
+/// the tensor/memory terms for every configuration in the paper, so the
+/// exact constant is immaterial to reproduction; see `model::latency`.
+pub const SOFTMAX_OPS_PER_ELEM: f64 = 5.0;
+
+/// Scalar FLOPs charged per normalized element (square, accumulate,
+/// rsqrt-apply, scale) for RMSNorm.
+pub const NORM_FLOPS_PER_ELEM: f64 = 4.0;
+
+/// A decode-phase working point: `B` users each generating one token
+/// conditioned on `T` tokens of context.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodePoint {
+    /// Mini-batch size (number of simultaneous users).
+    pub batch: u64,
+    /// Per-user context length in tokens (every user at the same length,
+    /// as in all of the paper's experiments).
+    pub context: u64,
+}
+
+/// An LLM architecture the model can analyze.
+///
+/// Implementations translate the architecture hyper-parameters (paper
+/// Table 3) into the FLOP and byte-traffic equations of Appendix A.
+pub trait Application: Send + Sync {
+    /// Architecture hyper-parameters.
+    fn spec(&self) -> &ModelSpec;
+
+    /// Canonical lower-case identifier (e.g. `llama3-405b`).
+    fn name(&self) -> &str {
+        &self.spec().name
+    }
+
+    /// Total model weight bytes (all layers + embeddings + LM head).
+    fn weight_bytes(&self) -> f64;
+
+    /// KV-cache bytes appended per token per layer (the quantity the
+    /// paper calls `kv_elem_per_tok * elem_bytes`).
+    fn kv_bytes_per_token_layer(&self) -> f64;
+
+    /// KV-cache bytes per token across all layers.
+    fn kv_bytes_per_token(&self) -> f64 {
+        self.kv_bytes_per_token_layer() * self.spec().num_layers as f64
+    }
+
+    /// Tensor + scalar op counts for one decode step at `pt`.
+    fn op_counts(&self, pt: &DecodePoint) -> OpCounts;
+
+    /// Memory traffic for one decode step at `pt`.
+    fn traffic(&self, pt: &DecodePoint) -> Traffic;
+
+    /// Complete workload description for one decode step.
+    fn workload(&self, pt: &DecodePoint) -> Workload {
+        Workload {
+            ops: self.op_counts(pt),
+            traffic: self.traffic(pt),
+            sync_ops_per_layer: 3.0,
+            num_layers: self.spec().num_layers,
+            num_moe_layers: self.spec().num_moe_layers(),
+            moe: None,
+        }
+    }
+
+    /// Total memory capacity required (weights + KV cache) in bytes.
+    fn capacity_bytes(&self, pt: &DecodePoint) -> f64 {
+        self.weight_bytes()
+            + pt.batch as f64 * pt.context as f64 * self.kv_bytes_per_token()
+    }
+
+    /// Arithmetic intensity in FLOPs/byte for one decode step, as defined
+    /// for Table 4 (total tensor ops over total bytes read).
+    fn arithmetic_intensity(&self, pt: &DecodePoint) -> f64 {
+        let ops = self.op_counts(pt);
+        let traffic = self.traffic(pt);
+        ops.tensor / traffic.total_rd_bytes()
+    }
+}

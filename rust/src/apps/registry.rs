@@ -1,0 +1,95 @@
+//! Model registry: name -> [`Application`] lookup for the CLI, config
+//! system, and experiment harness.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::{Application, DeepSeekV3, Llama3, ModelSpec};
+
+/// A registry of known applications keyed by canonical name.
+#[derive(Clone)]
+pub struct Registry {
+    apps: BTreeMap<String, Arc<dyn Application>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Registry { apps: BTreeMap::new() }
+    }
+
+    /// Registry pre-populated with the paper's three models.
+    pub fn builtin() -> Self {
+        let mut r = Registry::new();
+        r.register(Arc::new(Llama3::llama3_70b()));
+        r.register(Arc::new(Llama3::llama3_405b()));
+        r.register(Arc::new(DeepSeekV3::v3()));
+        r
+    }
+
+    /// Register an application under its spec name. Replaces any existing
+    /// entry with the same name.
+    pub fn register(&mut self, app: Arc<dyn Application>) {
+        self.apps.insert(app.name().to_string(), app);
+    }
+
+    /// Register a model from a bare spec, dispatching on whether it has
+    /// MLA/MoE parameters.
+    pub fn register_spec(&mut self, spec: ModelSpec) {
+        if spec.mla.is_some() && spec.moe.is_some() {
+            self.register(Arc::new(DeepSeekV3::new(spec)));
+        } else {
+            self.register(Arc::new(Llama3::new(spec)));
+        }
+    }
+
+    /// Look up an application by name (case-insensitive).
+    pub fn app(&self, name: &str) -> Option<Arc<dyn Application>> {
+        self.apps.get(&name.to_ascii_lowercase()).cloned()
+    }
+
+    /// All registered application names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.apps.keys().cloned().collect()
+    }
+
+    /// All registered applications, sorted by name.
+    pub fn all(&self) -> Vec<Arc<dyn Application>> {
+        self.apps.values().cloned().collect()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_has_three_models() {
+        let r = Registry::builtin();
+        assert_eq!(
+            r.names(),
+            vec!["deepseek-v3", "llama3-405b", "llama3-70b"]
+        );
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        let r = Registry::builtin();
+        assert!(r.app("Llama3-70B").is_some());
+        assert!(r.app("no-such-model").is_none());
+    }
+
+    #[test]
+    fn register_spec_dispatches_on_architecture() {
+        let mut r = Registry::new();
+        r.register_spec(ModelSpec::llama3_70b());
+        r.register_spec(ModelSpec::deepseek_v3());
+        assert_eq!(r.all().len(), 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Architecture hyper-parameters (paper Table 3).
+
+/// Multi-head Latent Attention hyper-parameters (DeepSeekV3 only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MlaSpec {
+    /// `F` — query latent (LoRA) dimension.
+    pub q_latent: u64,
+    /// `G` — KV latent dimension (what gets cached per token).
+    pub kv_latent: u64,
+    /// `R` — decoupled rotary position embedding dimension.
+    pub rope_dim: u64,
+}
+
+/// Mixture-of-Experts hyper-parameters (DeepSeekV3 only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MoeSpec {
+    /// `MD` — per-expert projection (intermediate) dimension.
+    pub proj_dim: u64,
+    /// `MS` — number of always-active shared experts.
+    pub shared_experts: u64,
+    /// `MR` — number of routed experts.
+    pub routed_experts: u64,
+    /// `MA` — number of routed experts activated per token.
+    pub activated_experts: u64,
+}
+
+/// Hyper-parameters of one LLM architecture (paper Table 3).
+///
+/// All three studied models are expressible with this one struct: the
+/// Llama models leave `mla`/`moe` as `None`, DeepSeekV3 sets both.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Canonical name, e.g. `llama3-405b`.
+    pub name: String,
+    /// `L` — number of transformer layers.
+    pub num_layers: u64,
+    /// Number of leading layers that use a dense FFN instead of MoE
+    /// (equals `num_layers` for dense models; 3 for DeepSeekV3).
+    pub num_dense_layers: u64,
+    /// `D` — embedding (model) dimension.
+    pub embed_dim: u64,
+    /// `H` — number of attention (query) heads.
+    pub heads: u64,
+    /// `K` — number of KV heads (grouped-query attention).
+    pub kv_heads: u64,
+    /// `E` — head dimension.
+    pub head_dim: u64,
+    /// `V` — FFN intermediate dimension.
+    pub intermediate_dim: u64,
+    /// Vocabulary size (for embedding + LM-head weight accounting).
+    pub vocab: u64,
+    /// Bytes per weight/activation element (1.0 = FP8, the paper's
+    /// default; 0.5 models FP4 as in the Appendix E validation).
+    pub elem_bytes: f64,
+    /// Multi-head latent attention parameters, if the model uses MLA.
+    pub mla: Option<MlaSpec>,
+    /// Mixture-of-experts parameters, if the model uses MoE.
+    pub moe: Option<MoeSpec>,
+}
+
+impl ModelSpec {
+    /// Number of MoE layers (`L - num_dense_layers` when MoE is present).
+    pub fn num_moe_layers(&self) -> u64 {
+        if self.moe.is_some() {
+            self.num_layers - self.num_dense_layers
+        } else {
+            0
+        }
+    }
+
+    /// Llama3-70B (Table 3, column 1).
+    pub fn llama3_70b() -> Self {
+        ModelSpec {
+            name: "llama3-70b".into(),
+            num_layers: 80,
+            num_dense_layers: 80,
+            embed_dim: 8192,
+            heads: 64,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate_dim: 28672,
+            vocab: 128_256,
+            elem_bytes: 1.0,
+            mla: None,
+            moe: None,
+        }
+    }
+
+    /// Llama3-405B (Table 3, column 2).
+    pub fn llama3_405b() -> Self {
+        ModelSpec {
+            name: "llama3-405b".into(),
+            num_layers: 126,
+            num_dense_layers: 126,
+            embed_dim: 16384,
+            heads: 128,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate_dim: 53248,
+            vocab: 128_256,
+            elem_bytes: 1.0,
+            mla: None,
+            moe: None,
+        }
+    }
+
+    /// DeepSeekV3-671B (Table 3, column 3).
+    pub fn deepseek_v3() -> Self {
+        ModelSpec {
+            name: "deepseek-v3".into(),
+            num_layers: 61,
+            num_dense_layers: 3,
+            embed_dim: 7168,
+            heads: 128,
+            kv_heads: 128,
+            head_dim: 128,
+            intermediate_dim: 18432,
+            vocab: 129_280,
+            elem_bytes: 1.0,
+            mla: Some(MlaSpec {
+                q_latent: 1536,
+                kv_latent: 512,
+                rope_dim: 64,
+            }),
+            moe: Some(MoeSpec {
+                proj_dim: 2048,
+                shared_experts: 1,
+                routed_experts: 256,
+                activated_experts: 8,
+            }),
+        }
+    }
+}

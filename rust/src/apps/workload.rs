@@ -1,0 +1,87 @@
+//! Workload abstraction: the paper's key insight is that an application
+//! is fully characterized, for limit-study purposes, by the volume of
+//! data it moves, the amount of compute it performs, and its need for
+//! synchronization when parallelized (§2).
+
+/// Operation counts for one decode step of a whole batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounts {
+    /// FLOPs executed on the tensor (matrix) engine.
+    pub tensor: f64,
+    /// FLOPs executed on the scalar/vector engine (softmax, norms).
+    pub scalar: f64,
+}
+
+impl OpCounts {
+    /// Element-wise sum of two op-count sets.
+    pub fn add(self, other: OpCounts) -> OpCounts {
+        OpCounts {
+            tensor: self.tensor + other.tensor,
+            scalar: self.scalar + other.scalar,
+        }
+    }
+
+    /// Scale both engines' counts by `k` (e.g. per-layer -> per-model).
+    pub fn scale(self, k: f64) -> OpCounts {
+        OpCounts {
+            tensor: self.tensor * k,
+            scalar: self.scalar * k,
+        }
+    }
+}
+
+/// Memory traffic for one decode step of a whole batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    /// Model weight bytes read (weights are read once per step; batching
+    /// amortizes them — that is the paper's "weight reuse").
+    pub weight_rd_bytes: f64,
+    /// KV-cache bytes read across the batch (`B * T * kv_per_tok`).
+    pub kv_rd_bytes: f64,
+    /// KV-cache bytes written (`B * S * kv_per_tok`, i.e. one new token).
+    pub kv_wr_bytes: f64,
+}
+
+impl Traffic {
+    /// Total bytes read, the numerator of `T_mem` (paper §2.2: *Batch KV
+    /// Bytes + Model Bytes*). Writes ride along with reads; following the
+    /// paper's `batch_rd_bytes` we charge KV reads + writes + weights.
+    pub fn total_rd_bytes(&self) -> f64 {
+        self.weight_rd_bytes + self.kv_rd_bytes + self.kv_wr_bytes
+    }
+}
+
+/// Inputs the latency model needs to expose MoE routing + imbalance
+/// latency (paper Appendix A.2, "Modeling MoE Imbalance").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MoeLatencyInputs {
+    /// `moe_avg_tok_per_routed_expert = max(B*S*MA/MR, 1)`.
+    pub avg_tok_per_routed_expert: f64,
+    /// `MR` — number of routed experts.
+    pub routed_experts: u64,
+    /// `MA` — number of routed experts activated per token.
+    pub activated_experts: u64,
+    /// `moe_per_token_flops = 2 * D * MD * 2`.
+    pub per_token_flops: f64,
+    /// Batch size (drives the Monte-Carlo imbalance factor `MI`).
+    pub batch: u64,
+}
+
+/// Everything the analytical model needs to know about one decode step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    /// Tensor + scalar FLOPs.
+    pub ops: OpCounts,
+    /// Bytes moved to/from backing memory.
+    pub traffic: Traffic,
+    /// Collective operations per transformer layer when tensor-parallel
+    /// (the paper assumes 3: context-, head-, and FFN-parallel syncs).
+    pub sync_ops_per_layer: f64,
+    /// Number of transformer layers (sync ops scale with this).
+    pub num_layers: u64,
+    /// Number of MoE layers (0 for dense models); each contributes MoE
+    /// routing latency and potential imbalance exposure.
+    pub num_moe_layers: u64,
+    /// MoE latency-model inputs (None for dense models).
+    pub moe: Option<MoeLatencyInputs>,
+}

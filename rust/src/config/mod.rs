@@ -1,0 +1,242 @@
+//! Config system: JSON-definable chips and models, so users can explore
+//! hypothetical hardware without recompiling (one of the paper's stated
+//! goals: "the ability to explore hypothetical scenarios like future
+//! hardware"). Parsed with the in-tree JSON parser ([`crate::util::json`]).
+//!
+//! Example (`liminal.json`):
+//!
+//! ```json
+//! {
+//!   "chips": [{
+//!     "name": "my-xpu", "mem_bw_tbps": 10.0, "tensor_pflops": 4.0,
+//!     "scalar_pflops": 0.4, "mem_capacity_gib": 128.0,
+//!     "tp_sync_flat_ns": 500.0
+//!   }],
+//!   "models": [{
+//!     "name": "tiny", "num_layers": 4, "embed_dim": 1024, "heads": 8,
+//!     "kv_heads": 2, "head_dim": 128, "intermediate_dim": 4096,
+//!     "vocab": 32000
+//!   }]
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::apps::{MlaSpec, ModelSpec, MoeSpec, Registry};
+use crate::hw::{Chip, SyncModel};
+use crate::util::json::Json;
+use crate::{Result, GIB, PFLOPS, TBPS};
+
+/// Parsed top-level config: extra chips and models.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    /// Additional chips, in internal SI units.
+    pub chips: Vec<Chip>,
+    /// Additional model specs.
+    pub models: Vec<ModelSpec>,
+}
+
+fn num(obj: &Json, key: &str) -> Option<f64> {
+    obj.get(key).and_then(Json::as_f64)
+}
+
+fn num_or(obj: &Json, key: &str, default: f64) -> f64 {
+    num(obj, key).unwrap_or(default)
+}
+
+fn req_num(obj: &Json, key: &str, what: &str) -> Result<f64> {
+    num(obj, key).with_context(|| format!("{what}: missing numeric field '{key}'"))
+}
+
+fn req_int(obj: &Json, key: &str, what: &str) -> Result<u64> {
+    obj.get(key)
+        .and_then(Json::as_u64)
+        .with_context(|| format!("{what}: missing integer field '{key}'"))
+}
+
+fn req_str(obj: &Json, key: &str, what: &str) -> Result<String> {
+    Ok(obj
+        .get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("{what}: missing string field '{key}'"))?
+        .to_string())
+}
+
+/// Parse one chip definition (user-friendly units: TB/s, PFLOPS, GiB, ns).
+fn parse_chip(j: &Json) -> Result<Chip> {
+    let name = req_str(j, "name", "chip")?;
+    let what = format!("chip '{name}'");
+    let sync = match num(j, "tp_sync_flat_ns") {
+        Some(ns) => SyncModel::Flat(ns * 1e-9),
+        None => SyncModel::Tiered {
+            le16: num_or(j, "tp_sync_le16_ns", 200.0) * 1e-9,
+            gt16: num_or(j, "tp_sync_gt16_ns", 1500.0) * 1e-9,
+        },
+    };
+    Ok(Chip {
+        mem_bw: req_num(j, "mem_bw_tbps", &what)? * TBPS,
+        tensor_flops: req_num(j, "tensor_pflops", &what)? * PFLOPS,
+        scalar_flops: req_num(j, "scalar_pflops", &what)? * PFLOPS,
+        mem_capacity: req_num(j, "mem_capacity_gib", &what)? * GIB,
+        sync,
+        pp_sync: num_or(j, "pp_sync_ns", 100.0) * 1e-9,
+        die_area_mm2: num_or(j, "die_area_mm2", 800.0),
+        mem_pj_per_bit: num_or(j, "mem_pj_per_bit", 0.0),
+        notes: j
+            .get("notes")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        name,
+    })
+}
+
+/// Parse one model definition. MLA/MoE sub-objects are optional.
+fn parse_model(j: &Json) -> Result<ModelSpec> {
+    let name = req_str(j, "name", "model")?;
+    let what = format!("model '{name}'");
+    let num_layers = req_int(j, "num_layers", &what)?;
+    let mla = match j.get("mla") {
+        None | Some(Json::Null) => None,
+        Some(m) => Some(MlaSpec {
+            q_latent: req_int(m, "q_latent", &what)?,
+            kv_latent: req_int(m, "kv_latent", &what)?,
+            rope_dim: req_int(m, "rope_dim", &what)?,
+        }),
+    };
+    let moe = match j.get("moe") {
+        None | Some(Json::Null) => None,
+        Some(m) => Some(MoeSpec {
+            proj_dim: req_int(m, "proj_dim", &what)?,
+            shared_experts: req_int(m, "shared_experts", &what)?,
+            routed_experts: req_int(m, "routed_experts", &what)?,
+            activated_experts: req_int(m, "activated_experts", &what)?,
+        }),
+    };
+    if mla.is_some() != moe.is_some() {
+        bail!("{what}: mla and moe must be specified together (DeepSeek-style) or not at all");
+    }
+    Ok(ModelSpec {
+        num_dense_layers: j
+            .get("num_dense_layers")
+            .and_then(Json::as_u64)
+            .unwrap_or(num_layers),
+        num_layers,
+        embed_dim: req_int(j, "embed_dim", &what)?,
+        heads: req_int(j, "heads", &what)?,
+        kv_heads: req_int(j, "kv_heads", &what)?,
+        head_dim: req_int(j, "head_dim", &what)?,
+        intermediate_dim: req_int(j, "intermediate_dim", &what)?,
+        vocab: req_int(j, "vocab", &what)?,
+        elem_bytes: num_or(j, "elem_bytes", 1.0),
+        mla,
+        moe,
+        name,
+    })
+}
+
+impl ConfigFile {
+    /// Parse a JSON config document.
+    pub fn from_json(s: &str) -> Result<ConfigFile> {
+        let root = Json::parse(s).context("config is not valid JSON")?;
+        let mut cfg = ConfigFile::default();
+        if let Some(chips) = root.get("chips").and_then(Json::as_arr) {
+            for c in chips {
+                cfg.chips.push(parse_chip(c)?);
+            }
+        }
+        if let Some(models) = root.get("models").and_then(Json::as_arr) {
+            for m in models {
+                cfg.models.push(parse_model(m)?);
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<ConfigFile> {
+        Self::from_json(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {}", path.display()))?,
+        )
+    }
+
+    /// Resolve a chip by name: user-defined first, then presets.
+    pub fn chip(&self, name: &str) -> Option<Chip> {
+        self.chips
+            .iter()
+            .find(|c| c.name.eq_ignore_ascii_case(name))
+            .cloned()
+            .or_else(|| crate::hw::presets::by_name(name))
+    }
+
+    /// Build a registry containing builtin + user models.
+    pub fn registry(&self) -> Registry {
+        let mut r = Registry::builtin();
+        for spec in &self.models {
+            r.register_spec(spec.clone());
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_json_roundtrips_units() {
+        let cfg = ConfigFile::from_json(
+            r#"{"chips":[{"name":"my-xpu","mem_bw_tbps":10.0,
+                 "tensor_pflops":4.0,"scalar_pflops":0.4,
+                 "mem_capacity_gib":128.0,"tp_sync_flat_ns":500.0}]}"#,
+        )
+        .unwrap();
+        let chip = cfg.chip("my-xpu").unwrap();
+        assert_eq!(chip.mem_bw, 10.0 * TBPS);
+        assert_eq!(chip.mem_capacity, 128.0 * GIB);
+        assert!((chip.tp_sync(128) - 500e-9).abs() < 1e-15);
+        assert!((chip.pp_sync - 100e-9).abs() < 1e-15); // default
+    }
+
+    #[test]
+    fn presets_resolve_through_config() {
+        let cfg = ConfigFile::default();
+        assert!(cfg.chip("hbm3").is_some());
+        assert!(cfg.chip("xPU-COWS").is_some());
+    }
+
+    #[test]
+    fn user_models_extend_registry() {
+        let cfg = ConfigFile::from_json(
+            r#"{"models":[{"name":"tiny-llama","num_layers":4,
+                 "embed_dim":1024,"heads":8,"kv_heads":2,"head_dim":128,
+                 "intermediate_dim":4096,"vocab":32000}]}"#,
+        )
+        .unwrap();
+        let reg = cfg.registry();
+        let app = reg.app("tiny-llama").unwrap();
+        assert_eq!(app.spec().num_dense_layers, 4);
+    }
+
+    #[test]
+    fn mla_without_moe_is_rejected() {
+        let err = ConfigFile::from_json(
+            r#"{"models":[{"name":"bad","num_layers":4,"embed_dim":1024,
+                 "heads":8,"kv_heads":2,"head_dim":128,
+                 "intermediate_dim":4096,"vocab":32000,
+                 "mla":{"q_latent":1,"kv_latent":1,"rope_dim":1}}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("together"));
+    }
+
+    #[test]
+    fn missing_fields_produce_helpful_errors() {
+        let err =
+            ConfigFile::from_json(r#"{"chips":[{"name":"x"}]}"#).unwrap_err();
+        assert!(err.to_string().contains("mem_bw_tbps"), "{err}");
+    }
+}

@@ -1,0 +1,131 @@
+//! L3 coordinator: wires workload generation, the continuous batcher,
+//! and a step engine into a runnable serving instance.
+//!
+//! For this paper the "coordination contribution" is the limit-study
+//! harness itself, so the coordinator is deliberately thin (per the
+//! architecture guide): CLI-driven process lifecycle around the serving
+//! simulator and the experiment registry. It supports both backends —
+//! analytic (paper-scale what-if serving) and PJRT (real execution of
+//! the AOT decode step).
+
+use anyhow::Context;
+
+use crate::apps::Registry;
+use crate::hw::SystemConfig;
+use crate::serving::{
+    AnalyticEngine, Batcher, KvBudget, PjrtEngine, ServingReport, ServingSim,
+    SimConfig, StepEngine, WorkloadGen, WorkloadSpec,
+};
+use crate::Result;
+
+/// What backend prices each decode step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Backend {
+    /// LIMINAL analytical latency (paper-scale systems).
+    Analytic,
+    /// Real PJRT execution of the AOT artifacts.
+    Pjrt,
+}
+
+/// A serve job description.
+#[derive(Debug, Clone)]
+pub struct ServeJob {
+    /// Model name (registry key) — analytic backend only.
+    pub model: String,
+    /// System to serve on — analytic backend only.
+    pub sys: SystemConfig,
+    /// Synthetic workload.
+    pub workload: WorkloadSpec,
+    /// Max concurrent sequences.
+    pub max_batch: usize,
+    /// Backend choice.
+    pub backend: Backend,
+    /// Artifact directory (PJRT backend).
+    pub artifact_dir: std::path::PathBuf,
+}
+
+/// Run a serve job to completion and return its report.
+pub fn serve(job: &ServeJob) -> Result<ServingReport> {
+    let registry = Registry::builtin();
+    let app = registry
+        .app(&job.model)
+        .with_context(|| format!("unknown model {}", job.model))?;
+
+    let workload = WorkloadGen::new(job.workload.clone()).generate();
+    match job.backend {
+        Backend::Analytic => {
+            let kv = KvBudget::new(
+                job.sys.total_capacity(),
+                app.weight_bytes(),
+                app.kv_bytes_per_token(),
+            );
+            let batcher = Batcher::new(job.max_batch, kv);
+            let mut engine = AnalyticEngine::new(app, job.sys.clone());
+            Ok(ServingSim::new(batcher, &mut engine, SimConfig::default())
+                .run(workload))
+        }
+        Backend::Pjrt => {
+            let mut rt = crate::runtime::Runtime::new(&job.artifact_dir)?;
+            let mut engine = PjrtEngine::new(&mut rt, job.max_batch as u64)?;
+            engine.randomize_params(42)?;
+            // The executable model has a small fixed context; scale the
+            // synthetic workload into its window.
+            let t = engine.context;
+            let mut wl = workload;
+            for r in &mut wl {
+                r.context_len = r.context_len.min(t / 4).max(1);
+                r.gen_len = r.gen_len.min(t / 4).max(1);
+            }
+            let kv = KvBudget::new(
+                (engine.batch * t + 1) as f64, // token-slot budget
+                0.0,
+                1.0,
+            );
+            let batcher = Batcher::new(engine.batch as usize, kv);
+            let dyn_engine: &mut dyn StepEngine = &mut engine;
+            Ok(ServingSim::new(batcher, dyn_engine, SimConfig::default())
+                .run(wl))
+        }
+    }
+}
+
+/// Convenience builder used by the CLI and examples.
+pub fn default_job(model: &str, sys: SystemConfig) -> ServeJob {
+    ServeJob {
+        model: model.to_string(),
+        sys,
+        workload: WorkloadSpec::default(),
+        max_batch: 32,
+        backend: Backend::Analytic,
+        artifact_dir: std::path::PathBuf::from("artifacts"),
+    }
+}
+
+/// Re-exported so `main.rs` needn't reach into serving directly.
+pub use crate::serving::ServingReport as Report;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn analytic_serve_end_to_end() {
+        let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+        let mut job = default_job("llama3-70b", sys);
+        job.workload.n_requests = 40;
+        job.workload.arrival_rate = 200.0;
+        let rep = serve(&job).unwrap();
+        assert_eq!(rep.completed, 40);
+        // Each user's decode rate is bounded by the single-user UTPS.
+        assert!(rep.utps_mean <= 2100.0);
+        assert!(rep.stps > rep.utps_mean * 0.9);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let job = default_job("not-a-model", sys);
+        assert!(serve(&job).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! CENT PIM comparator records (paper Appendix C).
+
+use crate::apps::{Application, DecodePoint};
+use crate::hw::{presets, SystemConfig};
+use crate::model::{evaluate, EvalOptions};
+use crate::sweep::Record;
+
+/// CENT-TP: weights tensor-parallel across all 32 devices, but the
+/// attention mechanism (KV traffic) pinned to a single device — the
+/// mapping restriction that "considerably reduces the effective
+/// bandwidth that the attention mechanism can achieve" (Appendix C).
+pub fn cent_tp_record(app: &dyn Application, context: u64) -> Record {
+    let chip = presets::cent_device();
+    let single_dev_bw = chip.mem_bw;
+    let mut sys = SystemConfig::new(chip, presets::CENT_DEVICES, 1);
+    sys.kv_bw_override = Some(single_dev_bw);
+    let pt = DecodePoint { batch: 1, context };
+    match evaluate(app, &sys, &pt, &EvalOptions::default()) {
+        Ok(perf) => {
+            let watts = presets::cent_system_watts_for(&sys);
+            let mut r = Record::from_perf(app.name(), &sys, &perf, watts);
+            r.system = "CENT-TP".into();
+            r
+        }
+        Err(_) => Record::unservable(app.name(), "CENT-TP", sys.tp, sys.pp, context),
+    }
+}
+
+/// CENT-PP: pipeline across all 32 devices, one microbatch per stage
+/// (the per-device PIM buffering limits each stage to a single
+/// sequence, which is why CENT-PP's UTPS is so low while its STPS is
+/// PP-fold higher).
+pub fn cent_pp_record(app: &dyn Application, context: u64) -> Record {
+    let chip = presets::cent_device();
+    let sys = SystemConfig::new(chip, 1, presets::CENT_DEVICES);
+    let pt = DecodePoint { batch: 1, context };
+    match evaluate(app, &sys, &pt, &EvalOptions::default()) {
+        Ok(perf) => {
+            let watts = presets::cent_system_watts_for(&sys);
+            let mut r = Record::from_perf(app.name(), &sys, &perf, watts);
+            r.system = "CENT-PP".into();
+            r
+        }
+        Err(_) => Record::unservable(app.name(), "CENT-PP", sys.tp, sys.pp, context),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Registry;
+
+    #[test]
+    fn cent_tp_decays_sharply_with_context() {
+        // Appendix C / Table 5: Llama3-70B CENT-TP: ~289 @ 4K falling to
+        // ~38 @ 128K — an order of magnitude, because KV streams through
+        // one device. We reproduce the shape (>5x decay).
+        let registry = Registry::builtin();
+        let app = registry.app("llama3-70b").unwrap();
+        let r4 = cent_tp_record(app.as_ref(), 4096);
+        let r128 = cent_tp_record(app.as_ref(), 131072);
+        let (u4, u128) = (r4.utps.unwrap(), r128.utps.unwrap());
+        assert!(u4 > 200.0 && u4 < 400.0, "4K utps {u4}");
+        assert!(u128 < 60.0, "128K utps {u128}");
+        assert!(u4 / u128 > 5.0);
+    }
+
+    #[test]
+    fn cent_pp_has_low_utps_but_32x_stps() {
+        let registry = Registry::builtin();
+        let app = registry.app("llama3-70b").unwrap();
+        let r = cent_pp_record(app.as_ref(), 4096);
+        let utps = r.utps.unwrap();
+        // Paper: 12 UTPS, 371 STPS. Shape: UTPS ~= 10-20, STPS = 32x.
+        assert!(utps > 8.0 && utps < 25.0, "utps {utps}");
+        assert!((r.stps.unwrap() / utps - 32.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn cent_cannot_serve_deepseek() {
+        let registry = Registry::builtin();
+        let app = registry.app("deepseek-v3").unwrap();
+        assert!(!cent_tp_record(app.as_ref(), 4096).servable());
+        assert!(!cent_pp_record(app.as_ref(), 4096).servable());
+    }
+
+    #[test]
+    fn cent_405b_tp_serves_at_low_rate() {
+        // Table 5: CENT-TP 405B ~55 @ 4K down to ~11 @ 128K.
+        let registry = Registry::builtin();
+        let app = registry.app("llama3-405b").unwrap();
+        let u4 = cent_tp_record(app.as_ref(), 4096).utps.unwrap();
+        let u128 = cent_tp_record(app.as_ref(), 131072).utps.unwrap();
+        assert!(u4 > 30.0 && u4 < 90.0, "got {u4}");
+        assert!(u128 < 30.0 && u4 / u128 > 2.5, "got {u128}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Figure 2: throughput sensitivity to memory bandwidth.
+//!
+//! Method (paper §4.4): take xPU-HBM3-TP128, pin `T_TPSync` to 200 ns to
+//! isolate bandwidth, sweep per-chip bandwidth 4 -> 120 TB/s, and plot
+//! UTPS normalized to the HBM3 baseline. Three contexts x three models.
+
+use crate::apps::{Application, DecodePoint, Registry};
+use crate::hw::{presets, SystemConfig};
+use crate::model::{evaluate, EvalOptions};
+use crate::report::{Report, Series};
+use crate::Result;
+
+/// Bandwidth sweep points, TB/s.
+pub const BW_POINTS: [f64; 9] = [4.0, 8.0, 12.0, 18.0, 30.0, 45.0, 60.0, 90.0, 120.0];
+
+/// Contexts plotted.
+pub const CONTEXTS: [u64; 3] = [4096, 32768, 131072];
+
+/// UTPS at one bandwidth point (TP128, 200 ns flat sync).
+pub fn utps_at_bw(app: &dyn Application, tbps: f64, context: u64) -> f64 {
+    let sys = SystemConfig::new(presets::bw_point(tbps), 128, 1);
+    let opts = EvalOptions { enforce_capacity: false, ..Default::default() };
+    evaluate(app, &sys, &DecodePoint { batch: 1, context }, &opts)
+        .map(|p| p.utps)
+        .unwrap_or(0.0)
+}
+
+/// Regenerate Figure 2's data series.
+pub fn run() -> Result<Report> {
+    let registry = Registry::builtin();
+    let mut report = Report::new(
+        "fig2",
+        "UTPS vs memory bandwidth (normalized to HBM3-TP128 @ 200ns sync)",
+    );
+    report.notes.push(
+        "Key Finding 5: doubling/quadrupling bandwidth over HBM3 gives large \
+         gains; beyond that, synchronization latency dominates and returns \
+         diminish."
+            .into(),
+    );
+    for model in ["llama3-70b", "llama3-405b", "deepseek-v3"] {
+        let app = registry.app(model).unwrap();
+        for &ctx in CONTEXTS.iter() {
+            let base = utps_at_bw(app.as_ref(), BW_POINTS[0], ctx);
+            let mut s = Series::new(
+                &format!("{model} T={}K", ctx / 1024),
+                "mem_bw_tbps",
+                "utps_normalized",
+            );
+            for &bw in BW_POINTS.iter() {
+                s.points.push((bw, utps_at_bw(app.as_ref(), bw, ctx) / base));
+            }
+            report.series.push(s);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Registry;
+
+    #[test]
+    fn curve_is_monotonic_with_diminishing_returns() {
+        let registry = Registry::builtin();
+        let app = registry.app("llama3-405b").unwrap();
+        let us: Vec<f64> = BW_POINTS
+            .iter()
+            .map(|&bw| utps_at_bw(app.as_ref(), bw, 131072))
+            .collect();
+        for w in us.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        // Diminishing returns: first doubling gains more than the last.
+        let first_gain = us[1] / us[0];
+        let last_gain = us[8] / us[7];
+        assert!(first_gain > last_gain);
+    }
+
+    #[test]
+    fn asymptote_is_sync_limited() {
+        // At 120 TB/s x 128 chips, T_mem for 405B @128K is ~29 us while
+        // exposed sync is 75.6 us: >70% of time is synchronization, the
+        // "hidden gatekeeper" (Key Finding 3 / 5).
+        let registry = Registry::builtin();
+        let app = registry.app("llama3-405b").unwrap();
+        let sys = SystemConfig::new(presets::bw_point(120.0), 128, 1);
+        let p = evaluate(
+            app.as_ref(),
+            &sys,
+            &DecodePoint { batch: 1, context: 131072 },
+            &EvalOptions { enforce_capacity: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(p.lat.t_exposed > 2.0 * p.lat.t_mem);
+    }
+
+    #[test]
+    fn total_uplift_is_asymptotic_not_linear() {
+        // 30x the bandwidth must buy far less than 30x the throughput.
+        let registry = Registry::builtin();
+        let app = registry.app("llama3-70b").unwrap();
+        let lo = utps_at_bw(app.as_ref(), 4.0, 131072);
+        let hi = utps_at_bw(app.as_ref(), 120.0, 131072);
+        assert!(hi / lo > 3.0, "uplift {}", hi / lo);
+        assert!(hi / lo < 15.0, "uplift {}", hi / lo);
+    }
+}

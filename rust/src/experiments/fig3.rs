@@ -1,0 +1,141 @@
+//! Figure 3: TP8 (fast sync) vs TP128 at varying synchronization
+//! latency, for HBM3 / 3D-DRAM / SRAM memory technologies.
+//! Llama3-405B, 128K context, batch 1 (paper §4.5).
+
+use crate::apps::{Application, DecodePoint, Registry};
+use crate::hw::{presets, Chip};
+use crate::model::{evaluate, EvalOptions};
+use crate::parallel::{fit_system, FitRequest};
+use crate::report::{Report, Series};
+use crate::Result;
+
+/// Sync-latency sweep, seconds (200 ns .. 10 µs).
+pub const SYNC_POINTS: [f64; 9] = [
+    200e-9, 400e-9, 800e-9, 1.5e-6, 2.5e-6, 4e-6, 5e-6, 7.5e-6, 10e-6,
+];
+
+/// The three memory technologies compared.
+pub fn techs() -> Vec<Chip> {
+    vec![presets::hbm3(), presets::dram3d(), presets::sram()]
+}
+
+/// UTPS for a TP-`tp` system of `chip` with `T_TPSync` forced to `sync`.
+/// PP grows to fit capacity-starved chips (SRAM).
+pub fn utps_at_sync(
+    app: &dyn Application,
+    chip: &Chip,
+    tp: u64,
+    sync: f64,
+    context: u64,
+) -> Option<f64> {
+    let forced = chip.with_flat_sync(sync);
+    let pt = DecodePoint { batch: 1, context };
+    let sys = fit_system(app, &FitRequest {
+        tp: Some(tp),
+        ..FitRequest::new(forced, pt)
+    })
+    .ok()?;
+    evaluate(app, &sys, &pt, &EvalOptions::default())
+        .ok()
+        .map(|p| p.utps)
+}
+
+/// Build the figure's series for one model.
+pub fn series_for_model(app: &dyn Application, context: u64) -> Vec<Series> {
+    let mut out = Vec::new();
+    for chip in techs() {
+        // TP128 with swept sync latency.
+        let mut s = Series::new(
+            &format!("{} TP128", chip.name),
+            "tp_sync_s",
+            "utps",
+        );
+        for &sync in SYNC_POINTS.iter() {
+            if let Some(u) = utps_at_sync(app, &chip, 128, sync, context) {
+                s.points.push((sync, u));
+            }
+        }
+        out.push(s);
+        // TP8 reference at a fixed fast 200 ns (the dashed line).
+        let mut r = Series::new(
+            &format!("{} TP8 (200ns ref)", chip.name),
+            "tp_sync_s",
+            "utps",
+        );
+        if let Some(u) = utps_at_sync(app, &chip, 8, 200e-9, context) {
+            for &sync in SYNC_POINTS.iter() {
+                r.points.push((sync, u));
+            }
+        }
+        out.push(r);
+    }
+    out
+}
+
+/// Regenerate Figure 3 (Llama3-405B only; Figure 6 covers all models).
+pub fn run() -> Result<Report> {
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-405b").unwrap();
+    let mut report = Report::new(
+        "fig3",
+        "TP8 vs TP128 under varying sync latency (Llama3-405B, 128K, B=1)",
+    );
+    report.notes.push(
+        "Key Finding 6: with an order of magnitude more bandwidth than \
+         HBM3, sync latency becomes the first-order determinant of \
+         performance; sub-2.5µs collectives across 128 chips beat small \
+         fast TP domains."
+            .into(),
+    );
+    report.series = series_for_model(app.as_ref(), 131072);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Registry;
+
+    fn app() -> std::sync::Arc<dyn crate::apps::Application> {
+        Registry::builtin().app("llama3-405b").unwrap()
+    }
+
+    #[test]
+    fn tp128_beats_tp8_even_at_10us_sync_on_hbm3() {
+        // The paper's "challenging conventional wisdom" observation.
+        let a = app();
+        let chip = presets::hbm3();
+        let tp128_slow = utps_at_sync(a.as_ref(), &chip, 128, 10e-6, 131072).unwrap();
+        let tp8_fast = utps_at_sync(a.as_ref(), &chip, 8, 200e-9, 131072).unwrap();
+        assert!(
+            tp128_slow > tp8_fast,
+            "tp128@10us {tp128_slow} vs tp8@200ns {tp8_fast}"
+        );
+    }
+
+    #[test]
+    fn sync_sensitivity_grows_with_bandwidth() {
+        // Gain from 2.5us -> 200ns should be largest for SRAM (Key
+        // Finding 6).
+        let a = app();
+        let gain = |chip: &Chip| {
+            utps_at_sync(a.as_ref(), chip, 128, 200e-9, 131072).unwrap()
+                / utps_at_sync(a.as_ref(), chip, 128, 2.5e-6, 131072).unwrap()
+        };
+        let g_hbm3 = gain(&presets::hbm3());
+        let g_dram3d = gain(&presets::dram3d());
+        let g_sram = gain(&presets::sram());
+        assert!(g_sram > g_dram3d && g_dram3d > g_hbm3,
+            "gains {g_hbm3} {g_dram3d} {g_sram}");
+    }
+
+    #[test]
+    fn sram_reaches_paper_range_at_default_sync() {
+        // §4.7: 3D-DRAM/SRAM sustain ~1500-2800 UTPS at 128K context.
+        let a = app();
+        let u = utps_at_sync(a.as_ref(), &presets::sram(), 128, 1.5e-6, 131072).unwrap();
+        assert!(u > 1400.0 && u < 3000.0, "got {u}");
+        let d = utps_at_sync(a.as_ref(), &presets::dram3d(), 128, 1.5e-6, 131072).unwrap();
+        assert!(d > 1200.0 && d < 2000.0, "got {d}");
+    }
+}

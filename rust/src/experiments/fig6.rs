@@ -1,0 +1,41 @@
+//! Figure 6 (Appendix B): the Figure 3 sync-latency study for all three
+//! models.
+
+use crate::apps::Registry;
+use crate::report::Report;
+use crate::Result;
+
+use super::fig3::series_for_model;
+
+/// Regenerate Figure 6: TP8 vs TP128 sync sweeps, all models, 128K.
+pub fn run() -> Result<Report> {
+    let registry = Registry::builtin();
+    let mut report = Report::new(
+        "fig6",
+        "TP8 vs TP128 at varying sync latency, all models (128K, B=1)",
+    );
+    for model in ["llama3-70b", "llama3-405b", "deepseek-v3"] {
+        let app = registry.app(model).unwrap();
+        for mut s in series_for_model(app.as_ref(), 131072) {
+            s.label = format!("{model} {}", s.label);
+            report.series.push(s);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_models_produce_six_series_each() {
+        let r = super::run().unwrap();
+        // 3 models x 3 technologies x (TP128 + TP8 ref) = 18 series.
+        assert_eq!(r.series.len(), 18);
+        // Every TP128 series decreases with sync latency.
+        for s in r.series.iter().filter(|s| s.label.contains("TP128")) {
+            let first = s.points.first().unwrap().1;
+            let last = s.points.last().unwrap().1;
+            assert!(first > last, "{}: {first} !> {last}", s.label);
+        }
+    }
+}

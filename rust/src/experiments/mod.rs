@@ -1,0 +1,78 @@
+//! Experiment registry: one module per table/figure in the paper's
+//! evaluation section, each regenerating its artifact from the
+//! analytical core (see DESIGN.md "Per-experiment index").
+
+mod cent;
+mod compute_role;
+mod fig2;
+mod fig3;
+mod fig4;
+mod fig5;
+mod fig6;
+mod findings;
+mod table1;
+mod table2;
+mod table4;
+mod tables56;
+mod validation;
+
+pub use cent::{cent_pp_record, cent_tp_record};
+pub use findings::run_findings;
+pub use validation::{run_validation, ValidationOptions};
+
+use crate::report::Report;
+use crate::Result;
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table4", "table5", "table6", "table7",
+    "fig2", "fig3", "fig4", "fig5", "fig6", "findings", "moe-imbalance",
+    "compute-role",
+];
+
+/// Run one experiment by id. `artifact_dir` is used by experiments that
+/// execute AOT artifacts (table7); analytic experiments ignore it.
+pub fn run(id: &str, artifact_dir: &std::path::Path) -> Result<Report> {
+    match id {
+        "table1" => table1::run(),
+        "table2" => table2::run(),
+        "table4" => table4::run(),
+        "table5" => tables56::run_table5(),
+        "table6" => tables56::run_table6(),
+        "table7" => validation::run_validation(&ValidationOptions {
+            artifact_dir: artifact_dir.to_path_buf(),
+            ..Default::default()
+        }),
+        "compute-role" => compute_role::run(),
+        "fig2" => fig2::run(),
+        "fig3" => fig3::run(),
+        "fig4" => fig4::run(),
+        "fig5" => fig5::run(),
+        "fig6" => fig6::run(),
+        "findings" => findings::run_findings(),
+        "moe-imbalance" => moe_imbalance(),
+        _ => anyhow::bail!(
+            "unknown experiment '{id}' (known: {})",
+            ALL.join(", ")
+        ),
+    }
+}
+
+/// Appendix A.2's imbalance-factor table: MI(B) for DeepSeekV3.
+fn moe_imbalance() -> Result<Report> {
+    use crate::moe::imbalance_factor;
+    use crate::report::Table;
+    let mut report = Report::new(
+        "moe-imbalance",
+        "MoE imbalance factor MI(B) for DeepSeekV3 (MR=256, MA=8)",
+    );
+    report.notes.push(
+        "Paper A.2: MI ~= 3x at B=64; approaches 1 as batch grows.".into(),
+    );
+    let mut t = Table::new("MI by batch size", &["B", "MI"]);
+    for b in [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 1024, 4096] {
+        t.push_row(vec![b.to_string(), format!("{:.3}", imbalance_factor(256, 8, b))]);
+    }
+    report.tables.push(t);
+    Ok(report)
+}

@@ -1,0 +1,46 @@
+//! Table 1: chip configurations (the hardware design space).
+
+use crate::hw::presets;
+use crate::report::{Report, Table};
+use crate::{Result, GIB, PFLOPS, TBPS};
+
+/// Render Table 1 from the presets (single source of truth: `hw::presets`).
+pub fn run() -> Result<Report> {
+    let mut report = Report::new("table1", "Chip configurations");
+    report.notes.push(
+        "Bandwidths are the calibrated streaming values that reproduce the \
+         paper's tables; Table 1 in the paper rounds HBM3 to 4 TB/s (see \
+         hw::presets docs)."
+            .into(),
+    );
+    let mut t = Table::new(
+        "Chip configurations",
+        &["Configuration", "Mem BW (TB/s)", "Compute (PFLOPS)", "Mem Capacity", "Notes"],
+    );
+    for chip in presets::table1() {
+        let cap = if chip.mem_capacity >= GIB {
+            format!("{:.0}GB", chip.mem_capacity / GIB)
+        } else {
+            format!("{:.0}MB", chip.mem_capacity / (1024.0 * 1024.0))
+        };
+        t.push_row(vec![
+            chip.name.clone(),
+            format!("{:.1}", chip.mem_bw / TBPS),
+            format!("{:.2}", chip.tensor_flops / PFLOPS),
+            cap,
+            chip.notes.clone(),
+        ]);
+    }
+    report.tables.push(t);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_renders_five_rows() {
+        let r = super::run().unwrap();
+        assert_eq!(r.tables[0].rows.len(), 5);
+        assert!(r.to_markdown().contains("xPU-COWS"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Table 2: max user TPS and max system TPS for xPU-HBM3 at TP 8/32/128,
+//! contexts 4K and 128K, all three models.
+
+use crate::apps::{Application, DecodePoint, Registry};
+use crate::hw::{presets, SystemConfig};
+use crate::model::{evaluate, max_batch_for_system, EvalOptions};
+use crate::report::{fmt_tps, Report, Table};
+use crate::Result;
+
+/// Paper models in table order.
+pub const MODELS: [&str; 3] = ["llama3-70b", "llama3-405b", "deepseek-v3"];
+
+/// Evaluate one cell: `(max_utps, max_stps, stps_utps)`; None = dash.
+fn cell(
+    app: &dyn Application,
+    tp: u64,
+    context: u64,
+) -> (Option<f64>, Option<(f64, f64)>) {
+    let sys = SystemConfig::new(presets::hbm3(), tp, 1);
+    let opts = EvalOptions::default();
+    let utps = evaluate(app, &sys, &DecodePoint { batch: 1, context }, &opts)
+        .ok()
+        .map(|p| p.utps);
+    let stps = max_batch_for_system(app, &sys, context).and_then(|b| {
+        evaluate(app, &sys, &DecodePoint { batch: b, context }, &opts)
+            .ok()
+            .map(|p| (p.stps, p.utps))
+    });
+    (utps, stps)
+}
+
+/// Regenerate Table 2.
+pub fn run() -> Result<Report> {
+    let registry = Registry::builtin();
+    let mut report = Report::new(
+        "table2",
+        "Max user TPS and max system TPS, xPU-HBM3, 4K vs 128K context",
+    );
+    report.notes.push(
+        "Max STPS batch = largest that fits in aggregate memory (paper §4.3); \
+         parenthesized value is the per-user TPS at that batch."
+            .into(),
+    );
+    let mut t = Table::new(
+        "Table 2",
+        &[
+            "Model", "System", "MaxUTPS@4K", "MaxUTPS@128K",
+            "MaxSTPS@4K (UTPS)", "MaxSTPS@128K (UTPS)",
+        ],
+    );
+    for model in MODELS {
+        let app = registry.app(model).unwrap();
+        for tp in [8u64, 32, 128] {
+            let (u4, s4) = cell(app.as_ref(), tp, 4096);
+            let (u128, s128) = cell(app.as_ref(), tp, 131072);
+            let fmt_s = |s: Option<(f64, f64)>| match s {
+                Some((stps, utps)) => format!("{} ({})", fmt_tps(stps), fmt_tps(utps)),
+                None => "-".into(),
+            };
+            let fmt_u = |u: Option<f64>| u.map(fmt_tps).unwrap_or_else(|| "-".into());
+            t.push_row(vec![
+                model.into(),
+                format!("xPU-HBM3-TP{tp}"),
+                fmt_u(u4),
+                fmt_u(u128),
+                fmt_s(s4),
+                fmt_s(s128),
+            ]);
+        }
+    }
+    report.tables.push(t);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Registry;
+
+    /// Golden check against the paper's STPS cells (the UTPS cells are
+    /// asserted in model::latency tests).
+    #[test]
+    fn stps_cells_match_paper() {
+        let registry = Registry::builtin();
+        // (model, tp, context, paper STPS, paper UTPS-at-max-batch)
+        let cases: &[(&str, u64, u64, f64, f64)] = &[
+            ("llama3-70b", 8, 4096, 48_000.0, 43.0),
+            ("llama3-70b", 32, 4096, 202_000.0, 42.0),
+            ("llama3-70b", 8, 131072, 1_500.0, 43.0),
+            ("llama3-405b", 128, 4096, 337_000.0, 28.0),
+            ("llama3-405b", 32, 131072, 3_600.0, 42.0),
+            ("deepseek-v3", 8, 131072, 1_400.0, 42.0),
+        ];
+        for &(m, tp, ctx, want_stps, want_utps) in cases {
+            let app = registry.app(m).unwrap();
+            let (_, s) = cell(app.as_ref(), tp, ctx);
+            let (stps, utps) = s.unwrap();
+            assert!(
+                (stps - want_stps).abs() / want_stps < 0.08,
+                "{m} TP{tp} T={ctx}: stps {stps} vs paper {want_stps}"
+            );
+            assert!(
+                (utps - want_utps).abs() / want_utps < 0.08,
+                "{m} TP{tp} T={ctx}: utps {utps} vs paper {want_utps}"
+            );
+        }
+    }
+
+    #[test]
+    fn deepseek_tp128_stps_is_compute_bound_and_1_5m() {
+        let registry = Registry::builtin();
+        let app = registry.app("deepseek-v3").unwrap();
+        let (_, s) = cell(app.as_ref(), 128, 4096);
+        let (stps, utps) = s.unwrap();
+        assert!((stps - 1.5e6).abs() / 1.5e6 < 0.12, "stps {stps}");
+        assert!((utps - 17.0).abs() < 2.0, "utps {utps}");
+    }
+
+    #[test]
+    fn renders_nine_rows() {
+        let r = run().unwrap();
+        assert_eq!(r.tables[0].rows.len(), 9);
+    }
+}

@@ -1,0 +1,102 @@
+//! Table 4 (Appendix A.3): memory capacity required (GiB) and arithmetic
+//! intensity (FLOPs/byte) per model, batch in {1, 32}, context 1K..128K.
+
+use crate::apps::{DecodePoint, Registry};
+use crate::report::{Report, Table};
+use crate::sweep::PAPER_CONTEXTS;
+use crate::{Result, GIB};
+
+/// Regenerate Table 4.
+pub fn run() -> Result<Report> {
+    let registry = Registry::builtin();
+    let mut report = Report::new(
+        "table4",
+        "Capacity required (GiB) and arithmetic intensity (FLOPs/byte)",
+    );
+    report.notes.push(
+        "Key Finding 1 derives from this table: >= 629 GiB to serve the \
+         largest models at all; 1.4 TB to serve 32 users of Llama3-405B at \
+         128K."
+            .into(),
+    );
+
+    let mut cap = Table::new(
+        "Capacity (GiB)",
+        &["T", "70B B=1", "70B B=32", "405B B=1", "405B B=32", "DSv3 B=1", "DSv3 B=32"],
+    );
+    let mut ami = Table::new(
+        "Arithmetic intensity (FLOPs/byte)",
+        &["T", "70B B=1", "70B B=32", "405B B=1", "405B B=32", "DSv3 B=1", "DSv3 B=32"],
+    );
+    let models = ["llama3-70b", "llama3-405b", "deepseek-v3"];
+    for &t in PAPER_CONTEXTS.iter() {
+        let mut cap_row = vec![fmt_ctx(t)];
+        let mut ami_row = vec![fmt_ctx(t)];
+        for model in models {
+            let app = registry.app(model).unwrap();
+            for b in [1u64, 32] {
+                let pt = DecodePoint { batch: b, context: t };
+                cap_row.push(format!("{:.0}", app.capacity_bytes(&pt) / GIB));
+                ami_row.push(format!("{:.2}", app.arithmetic_intensity(&pt)));
+            }
+        }
+        cap.push_row(cap_row);
+        ami.push_row(ami_row);
+    }
+    report.tables.push(cap);
+    report.tables.push(ami);
+    Ok(report)
+}
+
+fn fmt_ctx(t: u64) -> String {
+    format!("{}K", t / 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden: spot-check cells against the paper's Table 4.
+    #[test]
+    fn cells_match_paper() {
+        let registry = Registry::builtin();
+        // (model, B, T, capacity GiB, AMI)
+        let cases: &[(&str, u64, u64, f64, f64)] = &[
+            ("llama3-70b", 1, 1024, 65.0, 1.99),
+            ("llama3-70b", 32, 131072, 705.0, 20.31),
+            ("llama3-405b", 32, 65536, 881.0, 45.47),
+            ("llama3-405b", 1, 131072, 409.0, 4.30),
+            ("deepseek-v3", 1, 1024, 625.0, 1.37),
+            ("deepseek-v3", 32, 131072, 762.0, 89.83),
+            ("deepseek-v3", 32, 4096, 629.0, 10.05),
+        ];
+        for &(m, b, t, want_cap, want_ami) in cases {
+            let app = registry.app(m).unwrap();
+            let pt = DecodePoint { batch: b, context: t };
+            let cap = app.capacity_bytes(&pt) / GIB;
+            let ami = app.arithmetic_intensity(&pt);
+            assert!(
+                (cap - want_cap).abs() / want_cap < 0.02,
+                "{m} B={b} T={t}: cap {cap} vs {want_cap}"
+            );
+            // Llama AMI matches within 3%. DeepSeek's printed AMI
+            // implies a ~750 GB byte denominator that contradicts the
+            // paper's own 625 GiB capacity column (and its A.2 pseudo-
+            // code double-counts out_flops); we keep the self-consistent
+            // accounting and accept ~15% deviation there. See
+            // EXPERIMENTS.md "Known deviations".
+            let tol = if m == "deepseek-v3" { 0.20 } else { 0.05 };
+            assert!(
+                (ami - want_ami).abs() / want_ami < tol,
+                "{m} B={b} T={t}: ami {ami} vs {want_ami}"
+            );
+        }
+    }
+
+    #[test]
+    fn renders_eight_contexts() {
+        let r = run().unwrap();
+        assert_eq!(r.tables[0].rows.len(), 8);
+        assert_eq!(r.tables[1].rows.len(), 8);
+    }
+}

@@ -1,0 +1,157 @@
+//! Tables 5 and 6 (Appendix B): max user TPS and max system TPS across
+//! all context lengths, including the CENT-TP/PP comparator rows.
+
+use crate::apps::{Application, DecodePoint, Registry};
+use crate::hw::{presets, SystemConfig};
+use crate::model::{evaluate, max_batch_for_system, EvalOptions};
+use crate::report::{fmt_tps, Report, Table};
+use crate::sweep::{Record, TABLE_CONTEXTS};
+use crate::Result;
+
+use super::{cent_pp_record, cent_tp_record};
+
+const MODELS: [&str; 3] = ["llama3-70b", "llama3-405b", "deepseek-v3"];
+
+fn xpu_record(app: &dyn Application, tp: u64, context: u64, max_batch: bool) -> Record {
+    let sys = SystemConfig::new(presets::hbm3(), tp, 1);
+    let opts = EvalOptions::default();
+    let batch = if max_batch {
+        match max_batch_for_system(app, &sys, context) {
+            Some(b) => b,
+            None => return Record::unservable(app.name(), &sys.label(), tp, 1, context),
+        }
+    } else {
+        1
+    };
+    let pt = DecodePoint { batch, context };
+    match evaluate(app, &sys, &pt, &opts) {
+        Ok(perf) => Record::from_perf(app.name(), &sys, &perf, 1.0),
+        Err(_) => Record::unservable(app.name(), &sys.label(), tp, 1, context),
+    }
+}
+
+/// All rows of one appendix table: per model, TP8/32/128 + CENT-TP/PP.
+fn rows(max_batch: bool) -> Vec<(String, String, Vec<Record>)> {
+    let registry = Registry::builtin();
+    let mut out = Vec::new();
+    for model in MODELS {
+        let app = registry.app(model).unwrap();
+        for tp in [8u64, 32, 128] {
+            let recs = TABLE_CONTEXTS
+                .iter()
+                .map(|&ctx| xpu_record(app.as_ref(), tp, ctx, max_batch))
+                .collect();
+            out.push((model.to_string(), format!("xPU-HBM3-TP{tp}"), recs));
+        }
+        // CENT rows (batch fixed at 1 in both mappings; see cent.rs).
+        let tp_recs = TABLE_CONTEXTS
+            .iter()
+            .map(|&ctx| cent_tp_record(app.as_ref(), ctx))
+            .collect();
+        out.push((model.to_string(), "CENT-TP".into(), tp_recs));
+        let pp_recs = TABLE_CONTEXTS
+            .iter()
+            .map(|&ctx| cent_pp_record(app.as_ref(), ctx))
+            .collect();
+        out.push((model.to_string(), "CENT-PP".into(), pp_recs));
+    }
+    out
+}
+
+fn headers() -> Vec<&'static str> {
+    vec!["Model", "System", "4K", "8K", "16K", "32K", "64K", "128K"]
+}
+
+/// Table 5: max user TPS (batch = 1).
+pub fn run_table5() -> Result<Report> {
+    let mut report = Report::new("table5", "Max user TPS (B=1), all contexts");
+    let mut t = Table::new("Table 5", &headers());
+    for (model, system, recs) in rows(false) {
+        let mut row = vec![model, system];
+        row.extend(recs.iter().map(|r| {
+            r.utps.map(fmt_tps).unwrap_or_else(|| "-".into())
+        }));
+        t.push_row(row);
+    }
+    report.tables.push(t);
+    Ok(report)
+}
+
+/// Table 6: max system TPS with the per-user TPS in parentheses.
+pub fn run_table6() -> Result<Report> {
+    let mut report = Report::new(
+        "table6",
+        "Max system TPS (batch = capacity max; UTPS in parentheses)",
+    );
+    let mut t = Table::new("Table 6", &headers());
+    for (model, system, recs) in rows(true) {
+        let mut row = vec![model, system];
+        row.extend(recs.iter().map(|r| match (r.stps, r.utps) {
+            (Some(s), Some(u)) => format!("{} ({})", fmt_tps(s), fmt_tps(u)),
+            _ => "- (-)".into(),
+        }));
+        t.push_row(row);
+    }
+    report.tables.push(t);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_has_15_rows_with_dashes_for_deepseek_cent() {
+        let r = run_table5().unwrap();
+        let t = &r.tables[0];
+        assert_eq!(t.rows.len(), 15);
+        let ds_cent: Vec<_> = t
+            .rows
+            .iter()
+            .filter(|row| row[0] == "deepseek-v3" && row[1].starts_with("CENT"))
+            .collect();
+        assert_eq!(ds_cent.len(), 2);
+        for row in ds_cent {
+            assert!(row[2..].iter().all(|c| c == "-"), "{row:?}");
+        }
+    }
+
+    /// Golden: Table 5's xPU rows at a few contexts.
+    #[test]
+    fn table5_xpu_cells_match_paper() {
+        let registry = Registry::builtin();
+        // (model, tp, context, paper UTPS)
+        let cases: &[(&str, u64, u64, f64)] = &[
+            ("llama3-70b", 8, 16384, 473.0),
+            ("llama3-70b", 32, 65536, 1100.0),
+            ("llama3-405b", 128, 32768, 768.0),
+            ("deepseek-v3", 32, 8192, 196.0),
+        ];
+        for &(m, tp, ctx, want) in cases {
+            let app = registry.app(m).unwrap();
+            let got = xpu_record(app.as_ref(), tp, ctx, false).utps.unwrap();
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "{m} TP{tp} T={ctx}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn table6_utps_saturates_near_42() {
+        // The paper's striking observation: at capacity-max batch the
+        // per-user rate converges to ~41-43 across systems (KV streaming
+        // dominates). Check a few cells.
+        let registry = Registry::builtin();
+        for (m, tp, ctx) in [
+            ("llama3-70b", 8u64, 65536u64),
+            ("llama3-405b", 32, 65536),
+            ("deepseek-v3", 8, 65536),
+        ] {
+            let app = registry.app(m).unwrap();
+            let r = xpu_record(app.as_ref(), tp, ctx, true);
+            let u = r.utps.unwrap();
+            assert!((u - 42.5).abs() < 2.5, "{m} TP{tp}: utps {u}");
+        }
+    }
+}

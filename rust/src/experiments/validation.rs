@@ -1,0 +1,194 @@
+//! Table 7 / Appendix E analog: validate LIMINAL against *executed*
+//! silicon — our CPU PJRT substrate standing in for the paper's
+//! anonymized commercial chip and H100.
+//!
+//! Two studies, mirroring the appendix:
+//!
+//! 1. **GEMV microbenchmark** — LIMINAL predicts a memory-bound latency
+//!    of `bytes / stream_bw`; we execute the AOT GEMV through PJRT and
+//!    report the measured/predicted gap (the paper saw ~5x on H100 from
+//!    launch overhead and imperfect prefetch).
+//! 2. **Decode steps** — LIMINAL models the small executable transformer
+//!    as an application on a "CPU chip" (stream bandwidth measured with
+//!    a copy benchmark, tensor peak measured with the AOT GEMM); we run
+//!    real decode steps through the PJRT engine and compare tokens/sec.
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use crate::apps::{DecodePoint, ModelSpec};
+use crate::hw::{Chip, SyncModel, SystemConfig};
+use crate::model::{evaluate, EvalOptions};
+use crate::report::{Report, Table};
+use crate::runtime::Runtime;
+use crate::serving::PjrtEngine;
+use crate::Result;
+
+/// Options for the validation run.
+#[derive(Debug, Clone)]
+pub struct ValidationOptions {
+    /// Where `manifest.json` lives.
+    pub artifact_dir: PathBuf,
+    /// Timed repetitions per measurement (median taken).
+    pub reps: usize,
+    /// Decode steps per batch point.
+    pub decode_steps: usize,
+}
+
+impl Default for ValidationOptions {
+    fn default() -> Self {
+        ValidationOptions {
+            artifact_dir: PathBuf::from("artifacts"),
+            reps: 20,
+            decode_steps: 24,
+        }
+    }
+}
+
+fn median(samples: &mut Vec<f64>) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// The "CPU chip" LIMINAL models the executable substrate as.
+fn cpu_chip(stream_bw: f64, tensor_flops: f64) -> Chip {
+    Chip {
+        name: "CPU-PJRT".into(),
+        mem_bw: stream_bw,
+        tensor_flops,
+        scalar_flops: tensor_flops / 8.0,
+        mem_capacity: 64.0 * crate::GIB,
+        sync: SyncModel::paper_default(),
+        pp_sync: 0.0,
+        die_area_mm2: 0.0,
+        mem_pj_per_bit: 0.0,
+        notes: "calibrated from stream + GEMM microbenchmarks".into(),
+    }
+}
+
+/// Build a `ModelSpec` for the executable decode model (fp32 elements).
+fn decode_model_spec(engine: &PjrtEngine, rt: &Runtime) -> Result<ModelSpec> {
+    let entry = rt.manifest().decode_bucket(engine.batch)?;
+    let g = |k: &str| {
+        entry
+            .config_num(k)
+            .with_context(|| format!("decode entry missing config.{k}"))
+    };
+    Ok(ModelSpec {
+        name: format!("tiny-decode-b{}", engine.batch),
+        num_layers: g("num_layers")? as u64,
+        num_dense_layers: g("num_layers")? as u64,
+        embed_dim: g("embed_dim")? as u64,
+        heads: g("heads")? as u64,
+        kv_heads: g("kv_heads")? as u64,
+        head_dim: g("head_dim")? as u64,
+        intermediate_dim: g("intermediate_dim")? as u64,
+        vocab: g("vocab")? as u64,
+        elem_bytes: 4.0, // the executable model runs fp32
+        mla: None,
+        moe: None,
+    })
+}
+
+/// Run the full validation; returns the Table 7 analog.
+pub fn run_validation(opts: &ValidationOptions) -> Result<Report> {
+    let mut report = Report::new(
+        "table7",
+        "Validation: LIMINAL prediction vs executed PJRT substrate",
+    );
+    if !opts.artifact_dir.join("manifest.json").exists() {
+        report.notes.push(format!(
+            "SKIPPED: no artifacts at {} (run `make artifacts`)",
+            opts.artifact_dir.display()
+        ));
+        return Ok(report);
+    }
+
+    let mut rt = Runtime::new(&opts.artifact_dir)?;
+
+    // --- Calibration ----------------------------------------------------
+    let stream_bw = Runtime::measure_stream_bandwidth();
+    let gemm = rt.load("gemm")?;
+    let gemm_args = rt.zero_inputs("gemm")?;
+    let mut times: Vec<f64> = (0..opts.reps)
+        .map(|_| gemm.execute_timed(&gemm_args))
+        .collect::<Result<_>>()?;
+    let gemm_time = median(&mut times);
+    let gemm_flops = gemm.entry.num("flops").context("gemm flops")?;
+    let tensor_peak = gemm_flops / gemm_time;
+    report.notes.push(format!(
+        "calibration: stream {:.2} GB/s, GEMM {:.2} GFLOP/s",
+        stream_bw / 1e9,
+        tensor_peak / 1e9
+    ));
+
+    let mut t = Table::new(
+        "Table 7 (analog)",
+        &["Workload", "LIMINAL", "Measured", "Ratio (LIMINAL/measured)"],
+    );
+
+    // --- Study 1: GEMV --------------------------------------------------
+    let gemv = rt.load("gemv")?;
+    let gemv_args = rt.zero_inputs("gemv")?;
+    let mut times: Vec<f64> = (0..opts.reps)
+        .map(|_| gemv.execute_timed(&gemv_args))
+        .collect::<Result<_>>()?;
+    let gemv_measured = median(&mut times);
+    let gemv_bytes = gemv.entry.num("bytes").context("gemv bytes")?;
+    let gemv_predicted = gemv_bytes / stream_bw;
+    t.push_row(vec![
+        format!("GEMV 1x{}x{}", gemv.entry.num("m").unwrap_or(0.0), gemv.entry.num("n").unwrap_or(0.0)),
+        format!("{:.1} µs", gemv_predicted * 1e6),
+        format!("{:.1} µs", gemv_measured * 1e6),
+        format!("{:.2}x faster than real", gemv_measured / gemv_predicted),
+    ]);
+
+    // --- Study 2: decode steps -------------------------------------------
+    let chip = cpu_chip(stream_bw, tensor_peak);
+    let sys = SystemConfig::new(chip, 1, 1);
+    for batch in [1u64, 8] {
+        let mut engine = PjrtEngine::new(&mut rt, batch)?;
+        engine.randomize_params(7)?;
+        // Warm the executable, then measure steps mid-context.
+        let tokens = vec![1i32; engine.batch as usize];
+        let mut lats = Vec::new();
+        for i in 0..opts.decode_steps {
+            if engine.pos >= engine.context {
+                engine.reset()?;
+            }
+            let (_, dt) = engine.step(&tokens)?;
+            if i >= 4 {
+                lats.push(dt);
+            }
+        }
+        let measured = median(&mut lats);
+        let measured_stps = engine.batch as f64 / measured;
+
+        let spec = decode_model_spec(&engine, &rt)?;
+        let app = crate::apps::Llama3::new(spec);
+        let mean_ctx = (engine.context / 2).max(1);
+        let perf = evaluate(
+            &app,
+            &sys,
+            &DecodePoint { batch: engine.batch, context: mean_ctx },
+            &EvalOptions::default(),
+        )?;
+        let predicted_stps = engine.batch as f64 * perf.utps;
+        t.push_row(vec![
+            format!("decode B={} (T/2={})", engine.batch, mean_ctx),
+            format!("{:.0} tok/s", predicted_stps),
+            format!("{:.0} tok/s", measured_stps),
+            format!("{:.2}x", predicted_stps / measured_stps),
+        ]);
+    }
+    report.notes.push(
+        "As in the paper's Appendix E, LIMINAL is an upper bound: the \
+         measured substrate pays dispatch, host-sync, and cache-refill \
+         costs the limit study idealizes away (paper's gap: ~2.3x on its \
+         commercial simulator, ~5x on the H100 GEMV)."
+            .into(),
+    );
+    report.tables.push(t);
+    Ok(report)
+}

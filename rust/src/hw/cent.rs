@@ -1,0 +1,81 @@
+//! CENT processing-in-memory comparator (paper Appendix C).
+//!
+//! CENT (Gu et al., ASPLOS'25) is a GPU-free, CXL-attached PIM system.
+//! LIMINAL models it as 32 CXL PIM devices; two mappings bracket its
+//! behaviour:
+//!
+//! * **CENT-PP** — pipeline parallelism across the devices. Straightforward
+//!   under the standard model: `TP = 1, PP = 32`.
+//! * **CENT-TP** — tensor parallelism for the weights, but the attention
+//!   mechanism is restricted to run on a *single* device, so the KV cache
+//!   streams at one device's bandwidth instead of the aggregate — the
+//!   crushing limitation the appendix calls out.
+//!
+//! Device parameters are our calibration of the CENT paper's hardware
+//! (per-device PIM bandwidth ~1 TB/s, ~12.5 GiB usable per device, CXL
+//! sync latency ~2 µs); they reproduce the *shape* of the paper's Tables
+//! 5/6 CENT rows (e.g. Llama3-70B CENT-TP decaying from ~300 TPS at 4K to
+//! ~40 at 128K; DeepSeekV3 not servable at all).
+
+use crate::{GIB, PFLOPS, TBPS};
+
+use super::chip::{Chip, SyncModel};
+
+/// Number of CXL PIM devices in the modeled CENT system.
+pub const CENT_DEVICES: u64 = 32;
+
+/// One CENT CXL-PIM device.
+pub fn cent_device() -> Chip {
+    Chip {
+        name: "CENT".into(),
+        mem_bw: 1.1 * TBPS,
+        // PIM near-bank ALUs: modest matrix throughput per device.
+        tensor_flops: 0.025 * PFLOPS,
+        scalar_flops: 0.005 * PFLOPS,
+        // 14 GiB/device: enough that CENT-TP serves Llama3-405B at 128K
+        // (Table 5 shows 11 TPS there) while DeepSeekV3 still cannot fit.
+        mem_capacity: 14.0 * GIB,
+        // CXL-switch-mediated collectives.
+        sync: SyncModel::Tiered { le16: 2e-6, gt16: 2e-6 },
+        pp_sync: 250e-9,
+        die_area_mm2: 0.0, // power comes from the CENT paper's reported W
+        mem_pj_per_bit: 0.0,
+        notes: "CXL-PIM device (CENT, Appendix C)".into(),
+    }
+}
+
+/// Reported whole-system power for the 32-device CENT box, watts
+/// (Appendix D defers to the CENT paper's reported number).
+pub const CENT_SYSTEM_WATTS: f64 = 4800.0;
+
+/// Reported CENT power scaled to however many devices a system uses.
+pub fn cent_system_watts_for(sys: &super::SystemConfig) -> f64 {
+    CENT_SYSTEM_WATTS * sys.n_chips() as f64 / CENT_DEVICES as f64
+}
+
+/// Which CENT mapping to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CentMapping {
+    /// Tensor-parallel weights, attention pinned to one device.
+    TensorParallel,
+    /// Pipeline parallel across all devices.
+    PipelineParallel,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cent_system_cannot_hold_deepseek() {
+        // Appendix C: CENT rows for DeepSeekV3 are all dashes.
+        let total = cent_device().mem_capacity * CENT_DEVICES as f64;
+        assert!(total < 625.0 * crate::GIB);
+    }
+
+    #[test]
+    fn cent_system_holds_llama70b() {
+        let total = cent_device().mem_capacity * CENT_DEVICES as f64;
+        assert!(total > 70.55e9);
+    }
+}

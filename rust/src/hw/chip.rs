@@ -1,0 +1,111 @@
+//! A single accelerator chip ("xPU") abstraction.
+
+/// How the chip's interconnect prices a tensor-parallel collective.
+///
+/// The paper's default rule (§2.2): 200 ns when 16 or fewer chips
+/// participate, 1.5 µs beyond that (CXL-class switches). Technologies
+/// with collective-optimized fabrics (COWS wafers) override with a flat
+/// latency; sweeps (Fig. 3/6) override with an explicit value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SyncModel {
+    /// The default two-regime rule: `le16` seconds at TP <= 16 chips,
+    /// `gt16` seconds above.
+    Tiered {
+        /// All-reduce latency when <= 16 chips participate.
+        le16: f64,
+        /// All-reduce latency when > 16 chips participate.
+        gt16: f64,
+    },
+    /// One latency regardless of the TP degree (e.g. on-wafer multicast
+    /// collectives: 800 ns across 25 die-lets for COWS).
+    Flat(f64),
+}
+
+impl SyncModel {
+    /// The paper's default tiered model: 200 ns / 1.5 µs.
+    pub fn paper_default() -> Self {
+        SyncModel::Tiered { le16: 200e-9, gt16: 1.5e-6 }
+    }
+
+    /// Tensor-parallel all-reduce latency for a `tp`-chip domain.
+    pub fn tp_sync(&self, tp: u64) -> f64 {
+        match *self {
+            SyncModel::Tiered { le16, gt16 } => {
+                if tp <= 16 {
+                    le16
+                } else {
+                    gt16
+                }
+            }
+            SyncModel::Flat(s) => s,
+        }
+    }
+}
+
+/// One accelerator chip, described only by its fundamental performance
+/// characteristics (paper Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chip {
+    /// Short name, e.g. `xPU-HBM3`.
+    pub name: String,
+    /// Memory bandwidth in bytes/second (decimal).
+    pub mem_bw: f64,
+    /// Peak tensor-engine throughput in FLOP/s (FP8).
+    pub tensor_flops: f64,
+    /// Peak scalar/vector-engine throughput in FLOP/s.
+    pub scalar_flops: f64,
+    /// Memory capacity in bytes.
+    pub mem_capacity: f64,
+    /// Collective latency model for tensor parallelism.
+    pub sync: SyncModel,
+    /// Producer-consumer latency across one pipeline-stage hop, seconds.
+    pub pp_sync: f64,
+    /// Die area in mm^2 (drives the 1 W/mm^2 power model). A COWS entry
+    /// carries the whole wafer's die-let area.
+    pub die_area_mm2: f64,
+    /// Memory access energy in pJ/bit for the backing store (0 for SRAM,
+    /// whose access energy is inside the die power envelope).
+    pub mem_pj_per_bit: f64,
+    /// Free-form provenance note (mirrors Table 1's "Notes" column).
+    pub notes: String,
+}
+
+impl Chip {
+    /// Effective TP all-reduce latency at a given TP degree.
+    pub fn tp_sync(&self, tp: u64) -> f64 {
+        self.sync.tp_sync(tp)
+    }
+
+    /// Return a copy with the TP sync latency forced to `seconds`
+    /// regardless of TP degree (used by the Fig. 2/3/6 sweeps).
+    pub fn with_flat_sync(&self, seconds: f64) -> Chip {
+        Chip { sync: SyncModel::Flat(seconds), ..self.clone() }
+    }
+
+    /// Return a copy with a different memory bandwidth (Fig. 2 sweep).
+    pub fn with_mem_bw(&self, mem_bw: f64) -> Chip {
+        Chip { mem_bw, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiered_sync_switches_at_16_chips() {
+        let s = SyncModel::paper_default();
+        assert_eq!(s.tp_sync(1), 200e-9);
+        assert_eq!(s.tp_sync(8), 200e-9);
+        assert_eq!(s.tp_sync(16), 200e-9);
+        assert_eq!(s.tp_sync(17), 1.5e-6);
+        assert_eq!(s.tp_sync(128), 1.5e-6);
+    }
+
+    #[test]
+    fn flat_sync_ignores_tp() {
+        let s = SyncModel::Flat(800e-9);
+        assert_eq!(s.tp_sync(1), 800e-9);
+        assert_eq!(s.tp_sync(128), 800e-9);
+    }
+}

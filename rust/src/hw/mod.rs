@@ -1,0 +1,21 @@
+//! Hardware abstraction (paper §2.1 "Abstracting Hardware" + Table 1).
+//!
+//! A DL accelerator is abstracted as an **xPU**: peak tensor and scalar
+//! compute throughput, memory size and bandwidth, and the latencies of
+//! reductions / direct communication between chips. Chips compose into a
+//! [`SystemConfig`] via tensor parallelism (strong scaling, `TP` chips
+//! per layer) and pipeline parallelism (weak scaling, `PP` stages).
+
+mod cent;
+mod chip;
+pub mod presets;
+mod system;
+
+pub use cent::CentMapping;
+pub use chip::{Chip, SyncModel};
+pub use system::SystemConfig;
+
+/// The paper's hard constraint on strong scaling: tensor parallelism may
+/// span at most 128 chips ("performing reductions across a larger number
+/// of chips introduces excessive latency and bandwidth constraints", §3).
+pub const MAX_TP: u64 = 128;

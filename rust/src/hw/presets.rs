@@ -1,0 +1,168 @@
+//! Chip presets (paper Table 1).
+//!
+//! Calibration note: Table 1 quotes HBM3 bandwidth as "4 TB/s", but the
+//! paper's own table entries (Table 2/5/6) only reproduce exactly with a
+//! per-chip streaming bandwidth of **4.4 TB/s** (e.g. Llama3-405B at
+//! TP128/4K: `406.9e9 B / (128 * 4.4e12 B/s) + 3*126*1.5µs = 1.290 ms ->
+//! 776 tokens/s`, the paper's value to the digit). We therefore treat
+//! Table 1's bandwidth column as rounded marketing numbers and keep the
+//! calibrated values here; each preset documents both. Capacities follow
+//! the binary (GiB) convention that reproduces the paper's max-batch
+//! figures.
+
+use crate::{GIB, PFLOPS, TBPS};
+
+use super::chip::{Chip, SyncModel};
+
+pub use super::cent::{
+    cent_device, cent_system_watts_for, CENT_DEVICES, CENT_SYSTEM_WATTS,
+};
+
+/// Ratio between the calibrated streaming bandwidth that reproduces the
+/// paper's tables and Table 1's rounded "4 TB/s" figure.
+pub const HBM3_CALIBRATION: f64 = 4.4 / 4.0;
+
+/// Baseline xPU with HBM3e memory (Blackwell-class die).
+pub fn hbm3() -> Chip {
+    Chip {
+        name: "xPU-HBM3".into(),
+        mem_bw: 4.4 * TBPS, // Table 1: "4 TB/s" (see module docs)
+        tensor_flops: 2.25 * PFLOPS,
+        scalar_flops: 0.2 * PFLOPS,
+        mem_capacity: 96.0 * GIB,
+        sync: SyncModel::paper_default(),
+        pp_sync: 100e-9,
+        die_area_mm2: 800.0,
+        mem_pj_per_bit: 3.9,
+        notes: "Based on Blackwell GPU (HBM3e)".into(),
+    }
+}
+
+/// xPU with an HBM4 memory system: 4.5x the bandwidth, 2x the capacity.
+pub fn hbm4() -> Chip {
+    Chip {
+        name: "xPU-HBM4".into(),
+        mem_bw: 18.0 * HBM3_CALIBRATION * TBPS,
+        tensor_flops: 2.25 * PFLOPS,
+        scalar_flops: 0.2 * PFLOPS,
+        mem_capacity: 192.0 * GIB,
+        sync: SyncModel::paper_default(),
+        pp_sync: 100e-9,
+        die_area_mm2: 800.0,
+        mem_pj_per_bit: 2.8,
+        notes: "HBM4".into(),
+    }
+}
+
+/// xPU with advanced 3D-stacked DRAM: very high bandwidth, small capacity.
+pub fn dram3d() -> Chip {
+    Chip {
+        name: "xPU-3D-DRAM".into(),
+        mem_bw: 30.0 * HBM3_CALIBRATION * TBPS,
+        tensor_flops: 2.25 * PFLOPS,
+        scalar_flops: 0.2 * PFLOPS,
+        mem_capacity: 36.0 * GIB,
+        sync: SyncModel::paper_default(),
+        pp_sync: 100e-9,
+        die_area_mm2: 800.0,
+        mem_pj_per_bit: 1.5,
+        notes: "Advanced 3D stacked DRAM".into(),
+    }
+}
+
+/// SRAM-only serving: 512 bytes/cycle x 128 tiles of on-die SRAM. Huge
+/// bandwidth, tiny capacity, half the tensor engine (area traded for
+/// SRAM macros).
+pub fn sram() -> Chip {
+    Chip {
+        name: "xPU-SRAM".into(),
+        mem_bw: 117.0 * TBPS,
+        tensor_flops: 1.13 * PFLOPS,
+        scalar_flops: 0.1 * PFLOPS,
+        mem_capacity: 512.0 * 1024.0 * 1024.0,
+        sync: SyncModel::paper_default(),
+        pp_sync: 100e-9,
+        die_area_mm2: 800.0,
+        mem_pj_per_bit: 0.0, // on-die, inside the 1 W/mm^2 envelope
+        notes: "Serve from SRAM: 512 Bytes/cyc x 128 tiles".into(),
+    }
+}
+
+/// Collectives-optimized wafer-scale (25 SRAM die-lets on one wafer with
+/// multicast partial sums; 800 ns wafer-wide all-reduce). One `Chip`
+/// record models one wafer.
+pub fn cows() -> Chip {
+    Chip {
+        name: "xPU-COWS".into(),
+        mem_bw: 2250.0 * TBPS,
+        tensor_flops: 28.13 * PFLOPS,
+        scalar_flops: 2.5 * PFLOPS,
+        mem_capacity: 11.0 * GIB,
+        sync: SyncModel::Flat(800e-9),
+        pp_sync: 100e-9,
+        die_area_mm2: 25.0 * 800.0,
+        mem_pj_per_bit: 0.0,
+        notes: "Collectives-optimized wafer-scale (25 die-lets)".into(),
+    }
+}
+
+/// Hypothetical chip for the Fig. 2 bandwidth sweep: an HBM3 xPU whose
+/// bandwidth is replaced by `tbps` and whose sync latency is pinned to
+/// 200 ns (the paper isolates bandwidth by assuming fast collectives).
+pub fn bw_point(tbps: f64) -> Chip {
+    let mut c = hbm3().with_mem_bw(tbps * TBPS).with_flat_sync(200e-9);
+    c.name = format!("xPU-BW{tbps:.0}");
+    c
+}
+
+/// All Table 1 presets, in table order.
+pub fn table1() -> Vec<Chip> {
+    vec![hbm3(), hbm4(), dram3d(), sram(), cows()]
+}
+
+/// Look up a preset by (case-insensitive) name; includes `cent`.
+pub fn by_name(name: &str) -> Option<Chip> {
+    let n = name.to_ascii_lowercase();
+    let n = n.trim_start_matches("xpu-");
+    match n {
+        "hbm3" => Some(hbm3()),
+        "hbm4" => Some(hbm4()),
+        "3d-dram" | "dram3d" | "3ddram" => Some(dram3d()),
+        "sram" => Some(sram()),
+        "cows" => Some(cows()),
+        "cent" => Some(super::cent::cent_device()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_presets_are_distinct_and_ordered() {
+        let t = table1();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0].name, "xPU-HBM3");
+        assert_eq!(t[4].name, "xPU-COWS");
+        // Bandwidth is monotonically increasing down Table 1.
+        for w in t.windows(2) {
+            assert!(w[1].mem_bw > w[0].mem_bw);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrips() {
+        for chip in table1() {
+            assert_eq!(by_name(&chip.name).unwrap().name, chip.name);
+        }
+        assert!(by_name("hbm3").is_some());
+        assert!(by_name("nonsense").is_none());
+    }
+
+    #[test]
+    fn sram_capacity_cannot_hold_any_studied_model_alone() {
+        // Key capacity story: SRAM designs need hundreds of chips.
+        assert!(sram().mem_capacity < 1.0 * GIB);
+    }
+}

@@ -1,0 +1,131 @@
+//! A system: `TP x PP` identical chips serving one model instance.
+
+use super::chip::Chip;
+use super::MAX_TP;
+
+/// A distributed system built from identical chips.
+///
+/// * `tp` chips form one tensor-parallel (strong-scaling) domain: every
+///   operator of a layer is split across them, so they aggregate memory
+///   bandwidth and compute *for token latency*, at the price of
+///   `sync_ops_per_layer` all-reduces per layer.
+/// * `pp` stages chain tensor-parallel domains (weak scaling): capacity
+///   aggregates across stages and throughput multiplies by `pp`, but a
+///   single token still traverses every stage serially, so per-token
+///   latency sees only one stage's bandwidth at a time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    /// The chip every slot is populated with.
+    pub chip: Chip,
+    /// Tensor-parallel degree (chips per pipeline stage), `<= MAX_TP`.
+    pub tp: u64,
+    /// Pipeline-parallel degree (number of stages), `>= 1`.
+    pub pp: u64,
+    /// If set, the KV-cache/attention traffic streams at this bandwidth
+    /// (bytes/s) instead of the TP-aggregate — models mappings that pin
+    /// attention to a subset of the machine, like CENT-TP (Appendix C).
+    pub kv_bw_override: Option<f64>,
+}
+
+impl SystemConfig {
+    /// Build a `tp x pp` system. Panics on a zero degree or `tp > MAX_TP`.
+    pub fn new(chip: Chip, tp: u64, pp: u64) -> Self {
+        assert!(tp >= 1 && pp >= 1, "degenerate system {tp}x{pp}");
+        assert!(tp <= MAX_TP, "TP {tp} exceeds the {MAX_TP}-chip limit");
+        SystemConfig { chip, tp, pp, kv_bw_override: None }
+    }
+
+    /// Total chips in the system.
+    pub fn n_chips(&self) -> u64 {
+        self.tp * self.pp
+    }
+
+    /// Bandwidth visible to one token as it executes a layer: the
+    /// TP-domain aggregate (PP does not reduce token latency).
+    pub fn stage_mem_bw(&self) -> f64 {
+        self.chip.mem_bw * self.tp as f64
+    }
+
+    /// Tensor compute visible to one token within a stage.
+    pub fn stage_tensor_flops(&self) -> f64 {
+        self.chip.tensor_flops * self.tp as f64
+    }
+
+    /// Scalar compute visible to one token within a stage.
+    pub fn stage_scalar_flops(&self) -> f64 {
+        self.chip.scalar_flops * self.tp as f64
+    }
+
+    /// Total memory capacity across all chips and stages.
+    pub fn total_capacity(&self) -> f64 {
+        self.chip.mem_capacity * self.n_chips() as f64
+    }
+
+    /// TP all-reduce latency for this system's TP degree.
+    pub fn tp_sync(&self) -> f64 {
+        self.chip.tp_sync(self.tp)
+    }
+
+    /// One-hop pipeline forwarding latency.
+    pub fn pp_sync(&self) -> f64 {
+        self.chip.pp_sync
+    }
+
+    /// Effective bandwidth for KV/attention traffic (see
+    /// [`SystemConfig::kv_bw_override`]).
+    pub fn kv_mem_bw(&self) -> f64 {
+        self.kv_bw_override.unwrap_or_else(|| self.stage_mem_bw())
+    }
+
+    /// Short display label, e.g. `xPU-HBM3-TP8` or `xPU-SRAM-TP128-PP7`.
+    pub fn label(&self) -> String {
+        if self.pp == 1 {
+            format!("{}-TP{}", self.chip.name, self.tp)
+        } else {
+            format!("{}-TP{}-PP{}", self.chip.name, self.tp, self.pp)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn aggregates_scale_with_tp_only_for_latency() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 4);
+        assert_eq!(sys.n_chips(), 32);
+        assert_eq!(sys.stage_mem_bw(), presets::hbm3().mem_bw * 8.0);
+        assert_eq!(
+            sys.total_capacity(),
+            presets::hbm3().mem_capacity * 32.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn tp_over_128_is_rejected() {
+        SystemConfig::new(presets::hbm3(), 256, 1);
+    }
+
+    #[test]
+    fn label_elides_pp1() {
+        assert_eq!(
+            SystemConfig::new(presets::hbm3(), 8, 1).label(),
+            "xPU-HBM3-TP8"
+        );
+        assert_eq!(
+            SystemConfig::new(presets::sram(), 128, 7).label(),
+            "xPU-SRAM-TP128-PP7"
+        );
+    }
+
+    #[test]
+    fn kv_bw_override_redirects_attention_traffic() {
+        let mut sys = SystemConfig::new(presets::cent_device(), 32, 1);
+        assert_eq!(sys.kv_mem_bw(), sys.stage_mem_bw());
+        sys.kv_bw_override = Some(sys.chip.mem_bw);
+        assert_eq!(sys.kv_mem_bw(), sys.chip.mem_bw);
+    }
+}

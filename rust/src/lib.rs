@@ -1,0 +1,79 @@
+//! # LIMINAL — LLM Inference Memory-bandwidth And Latency
+//!
+//! A limit-study framework for transformer LLM **auto-regressive decode**
+//! performance, reproducing Davies, Crago, Sankaralingam & Kozyrakis,
+//! *"Efficient LLM Inference: Bandwidth, Compute, Synchronization, and
+//! Capacity are all you need"* (the LIMINAL paper).
+//!
+//! The framework has three layers:
+//!
+//! * **Analytical core** ([`apps`], [`hw`], [`model`], [`parallel`],
+//!   [`power`], [`moe`]) — the paper's closed-form performance model:
+//!   applications are abstracted as op counts + data volumes + sync needs,
+//!   hardware as compute / bandwidth / capacity / sync latencies, and
+//!   per-token latency as `max(T_compute, T_mem) + T_exposed`.
+//! * **Experiment harness** ([`sweep`], [`experiments`], [`report`]) —
+//!   regenerates every table and figure in the paper's evaluation section
+//!   from the analytical core.
+//! * **Executable substrate** ([`runtime`], [`serving`], [`des`],
+//!   [`coordinator`]) — a PJRT runtime that loads the AOT-compiled JAX/
+//!   Pallas decode step, and a discrete-event serving simulator used both
+//!   as a dynamic serving testbed and as the "measured silicon" analog for
+//!   the paper's Appendix E validation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the cargo rpath to
+//! # // libxla_extension.so; the same assertion runs in unit tests.
+//! use liminal::prelude::*;
+//!
+//! let app = Registry::builtin().app("llama3-405b").unwrap();
+//! let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+//! let point = EvalPoint { batch: 1, context: 4096 };
+//! let perf = evaluate(app.as_ref(), &sys, &point, &EvalOptions::default()).unwrap();
+//! assert!((perf.utps - 776.0).abs() / 776.0 < 0.01); // paper Table 2
+//! ```
+#![deny(missing_docs)]
+
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod des;
+pub mod experiments;
+pub mod hw;
+pub mod model;
+pub mod moe;
+pub mod parallel;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod serving;
+pub mod sweep;
+pub mod util;
+
+/// Convenience re-exports of the most common types.
+pub mod prelude {
+    pub use crate::apps::{Application, ModelSpec, Registry};
+    pub use crate::hw::{presets, Chip, SystemConfig};
+    pub use crate::model::{
+        evaluate, Boundedness, EvalOptions, EvalPoint, LatencyBreakdown, Perf,
+    };
+    pub use crate::parallel::{fit_system, max_batch, FitRequest};
+    pub use crate::power::{PowerModel, SystemPower};
+    pub use crate::sweep::{Grid, Record, SweepRunner};
+}
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Number of bytes in one GiB (the paper's tables quote "GB" with binary
+/// semantics: 96 GB HBM3 chips aggregate to 824.6e9 bytes at TP8, which is
+/// what reproduces the paper's max-batch figures).
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// One terabyte per second (decimal), the unit used for memory bandwidth.
+pub const TBPS: f64 = 1e12;
+
+/// One petaflop per second, the unit used for compute throughput.
+pub const PFLOPS: f64 = 1e15;

@@ -1,0 +1,373 @@
+//! `liminal` — the LIMINAL limit-study launcher.
+//!
+//! ```text
+//! liminal list                         # models + chips
+//! liminal eval  <model> [--chip hbm3] [--tp 128] [--pp 1] [--batch 1]
+//!               [--context 4096] [--json]
+//! liminal sweep <model> [--chip hbm3] [--contexts 4096,131072]
+//!               [--tps 8,32,128] [--max-batch] [--csv out.csv]
+//! liminal experiment <id|all> [--out results] [--artifacts artifacts]
+//! liminal findings                     # Key Findings 1-10 pass/fail
+//! liminal serve <model> [--chip hbm3] [--tp 128] [--backend analytic|pjrt]
+//!               [--requests 100] [--rate 10] [--max-batch 32]
+//! liminal validate [--artifacts artifacts]
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use liminal::apps::DecodePoint;
+use liminal::config::ConfigFile;
+use liminal::coordinator::{self, Backend};
+use liminal::hw::{presets, SystemConfig};
+use liminal::model::{evaluate, max_batch_for_system, EvalOptions};
+use liminal::power::PowerModel;
+use liminal::report::fmt_tps;
+use liminal::sweep::{BatchSpec, Grid, SweepRunner};
+use liminal::util::cli::Args;
+use liminal::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("list") => cmd_list(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("findings") => cmd_findings(),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        _ => {
+            eprint!("{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "liminal — LLM decode limit-study framework
+
+USAGE:
+  liminal list
+  liminal eval <model> [--chip hbm3] [--tp N] [--pp N] [--batch B|max]
+               [--context T] [--config file.json] [--json]
+  liminal sweep <model...> [--chip hbm3] [--tps 8,32,128]
+               [--contexts 4096,...] [--max-batch] [--fit-pp] [--csv FILE]
+  liminal experiment <table1|table2|table4|table5|table6|table7|
+                      fig2|fig3|fig4|fig5|fig6|findings|moe-imbalance|
+                      compute-role|all>
+               [--out DIR] [--artifacts DIR]
+  liminal findings
+  liminal serve <model> [--chip hbm3] [--tp N] [--backend analytic|pjrt]
+               [--requests N] [--rate R] [--max-batch B] [--artifacts DIR]
+  liminal validate [--artifacts DIR]
+";
+
+fn load_config(args: &Args) -> ConfigFile {
+    match args.get("config") {
+        Some(path) => ConfigFile::load(Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }),
+        None => ConfigFile::default(),
+    }
+}
+
+fn resolve_chip(cfg: &ConfigFile, args: &Args) -> liminal::hw::Chip {
+    let name = args.get("chip").unwrap_or("hbm3");
+    cfg.chip(name).unwrap_or_else(|| {
+        eprintln!("error: unknown chip '{name}' (try hbm3, hbm4, 3d-dram, sram, cows, cent)");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_list(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    println!("models:");
+    for name in cfg.registry().names() {
+        println!("  {name}");
+    }
+    println!("chips:");
+    for chip in presets::table1() {
+        println!(
+            "  {:<12} {:>7.1} TB/s  {:>6.2} PFLOPS  {:>8.1} GiB  ({})",
+            chip.name,
+            chip.mem_bw / liminal::TBPS,
+            chip.tensor_flops / liminal::PFLOPS,
+            chip.mem_capacity / liminal::GIB,
+            chip.notes
+        );
+    }
+    println!("  {:<12} (Appendix C PIM comparator)", "CENT");
+    0
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let Some(model) = args.positional.get(1) else {
+        eprintln!("usage: liminal eval <model> [options]");
+        return 2;
+    };
+    let cfg = load_config(args);
+    let registry = cfg.registry();
+    let Some(app) = registry.app(model) else {
+        eprintln!("error: unknown model '{model}'");
+        return 2;
+    };
+    let chip = resolve_chip(&cfg, args);
+    let tp = args.get_parsed("tp", 128u64);
+    let pp = args.get_parsed("pp", 1u64);
+    let context = args.get_parsed("context", 4096u64);
+    let sys = SystemConfig::new(chip, tp, pp);
+
+    let batch = match args.get("batch") {
+        Some("max") => match max_batch_for_system(app.as_ref(), &sys, context) {
+            Some(b) => b,
+            None => {
+                eprintln!("error: model does not fit on {}", sys.label());
+                return 1;
+            }
+        },
+        Some(b) => b.parse().unwrap_or(1),
+        None => 1,
+    };
+
+    let pt = DecodePoint { batch, context };
+    match evaluate(app.as_ref(), &sys, &pt, &EvalOptions::default()) {
+        Ok(perf) => {
+            let power = PowerModel::default().system_power(&sys);
+            if args.flag("json") {
+                let j = Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("system", Json::Str(sys.label())),
+                    ("batch", Json::Num(batch as f64)),
+                    ("context", Json::Num(context as f64)),
+                    ("utps", Json::Num(perf.utps)),
+                    ("stps", Json::Num(perf.stps)),
+                    ("stps_per_watt", Json::Num(perf.stps / power.total_watts)),
+                    ("t_batch_s", Json::Num(perf.lat.t_batch)),
+                    ("t_mem_s", Json::Num(perf.lat.t_mem)),
+                    ("t_compute_s", Json::Num(perf.lat.t_compute)),
+                    ("t_exposed_s", Json::Num(perf.lat.t_exposed)),
+                    ("bound", Json::Str(format!("{:?}", perf.lat.bound))),
+                    ("capacity_gib", Json::Num(perf.capacity_bytes / liminal::GIB)),
+                    ("watts", Json::Num(power.total_watts)),
+                ]);
+                println!("{j}");
+            } else {
+                println!("{} serving {model}  B={batch} T={context}", sys.label());
+                println!(
+                    "  UTPS {:>10}    STPS {:>10}    STPS/W {:.3}",
+                    fmt_tps(perf.utps),
+                    fmt_tps(perf.stps),
+                    perf.stps / power.total_watts
+                );
+                println!(
+                    "  t_batch {:.3} ms = max(mem {:.3} ms, compute {:.3} ms) + exposed {:.3} ms [{}-bound]",
+                    perf.lat.t_batch * 1e3,
+                    perf.lat.t_mem * 1e3,
+                    perf.lat.t_compute * 1e3,
+                    perf.lat.t_exposed * 1e3,
+                    match perf.lat.bound {
+                        liminal::model::Boundedness::Memory => "memory",
+                        liminal::model::Boundedness::Compute => "compute",
+                    }
+                );
+                println!(
+                    "  capacity {:.1} GiB / {:.1} GiB   power {:.1} kW",
+                    perf.capacity_bytes / liminal::GIB,
+                    sys.total_capacity() / liminal::GIB,
+                    power.total_watts / 1e3
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("unservable: {e}");
+            1
+        }
+    }
+}
+
+fn parse_list(s: &str) -> Vec<u64> {
+    s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let models: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        vec!["llama3-70b".into(), "llama3-405b".into(), "deepseek-v3".into()]
+    };
+    let cfg = load_config(args);
+    let chip = resolve_chip(&cfg, args);
+    let grid = Grid {
+        models,
+        chips: vec![chip],
+        tps: args.get("tps").map(parse_list).unwrap_or(vec![8, 32, 128]),
+        contexts: args
+            .get("contexts")
+            .map(parse_list)
+            .unwrap_or(liminal::sweep::TABLE_CONTEXTS.to_vec()),
+        batch: if args.flag("max-batch") {
+            BatchSpec::MaxFit
+        } else {
+            BatchSpec::OneAndMaxFit
+        },
+        fit_pp: args.flag("fit-pp"),
+    };
+    let runner = SweepRunner { registry: cfg.registry(), ..Default::default() };
+    let records = runner.run(&grid);
+
+    let mut table = liminal::report::Table::new(
+        "sweep",
+        &["model", "system", "context", "batch", "utps", "stps", "stps_per_watt"],
+    );
+    for r in &records {
+        table.push_row(vec![
+            r.model.clone(),
+            r.system.clone(),
+            r.context.to_string(),
+            r.batch.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            r.utps.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+            r.stps.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+            r.stps_per_watt
+                .map(|v| format!("{v:.4}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    if let Some(path) = args.get("csv") {
+        if let Err(e) = std::fs::write(path, table.to_csv()) {
+            eprintln!("error writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {} rows to {path}", records.len());
+    } else {
+        print!("{}", table.to_markdown());
+    }
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let Some(id) = args.positional.get(1) else {
+        eprintln!("usage: liminal experiment <id|all>");
+        return 2;
+    };
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let ids: Vec<&str> = if id == "all" {
+        liminal::experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    if std::fs::create_dir_all(&out_dir).is_err() {
+        eprintln!("error: cannot create {}", out_dir.display());
+        return 1;
+    }
+    let mut failures = 0;
+    for id in ids {
+        match liminal::experiments::run(id, &artifacts) {
+            Ok(report) => {
+                let path = out_dir.join(format!("{id}.md"));
+                let mut err = std::fs::write(&path, report.to_markdown()).err();
+                if args.flag("json") {
+                    let jpath = out_dir.join(format!("{id}.json"));
+                    err = err.or(std::fs::write(&jpath, report.to_json().to_string()).err());
+                }
+                match err {
+                    Some(e) => {
+                        eprintln!("{id}: write failed: {e}");
+                        failures += 1;
+                    }
+                    None => println!("{id}: wrote {}", path.display()),
+                }
+            }
+            Err(e) => {
+                eprintln!("{id}: FAILED: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_findings() -> i32 {
+    match liminal::experiments::run_findings() {
+        Ok(r) => {
+            print!("{}", r.to_markdown());
+            if r.notes.iter().any(|n| n.contains("FAILURES")) {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("findings failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(model) = args.positional.get(1) else {
+        eprintln!("usage: liminal serve <model> [options]");
+        return 2;
+    };
+    let cfg = load_config(args);
+    let chip = resolve_chip(&cfg, args);
+    let tp = args.get_parsed("tp", 128u64);
+    let sys = SystemConfig::new(chip, tp, args.get_parsed("pp", 1u64));
+    let mut job = coordinator::default_job(model, sys);
+    job.max_batch = args.get_parsed("max-batch", 32usize);
+    job.workload.n_requests = args.get_parsed("requests", 100u64);
+    job.workload.arrival_rate = args.get_parsed("rate", 10.0f64);
+    job.artifact_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    job.backend = match args.get("backend").unwrap_or("analytic") {
+        "pjrt" => Backend::Pjrt,
+        _ => Backend::Analytic,
+    };
+    match coordinator::serve(&job) {
+        Ok(report) => {
+            println!("{}", report.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let opts = liminal::experiments::ValidationOptions {
+        artifact_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        ..Default::default()
+    };
+    match liminal::experiments::run_validation(&opts) {
+        Ok(r) => {
+            print!("{}", r.to_markdown());
+            0
+        }
+        Err(e) => {
+            eprintln!("validate failed: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn usage_mentions_every_subcommand() {
+        for sub in ["list", "eval", "sweep", "experiment", "findings", "serve", "validate"] {
+            assert!(super::USAGE.contains(sub), "usage missing {sub}");
+        }
+    }
+
+    #[test]
+    fn parse_list_handles_spaces() {
+        assert_eq!(super::parse_list("8, 32 ,128"), vec![8, 32, 128]);
+    }
+}

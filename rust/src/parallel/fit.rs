@@ -1,0 +1,140 @@
+//! System sizing: given a chip, a model, and a working point, compose
+//! TP and PP so the model actually fits.
+//!
+//! The paper's policy (§2.1): strong-scale (TP) as far as useful — up to
+//! the 128-chip collective limit — then weak-scale (PP) until the
+//! weights + KV cache fit. "In all experiments, the system is sized to
+//! serve at least 1 user" (§3).
+
+use std::fmt;
+
+use crate::apps::{Application, DecodePoint};
+use crate::hw::{Chip, SystemConfig, MAX_TP};
+
+/// Request to size a system.
+#[derive(Debug, Clone)]
+pub struct FitRequest {
+    /// The chip to build from.
+    pub chip: Chip,
+    /// Fixed TP degree, or `None` to use the largest allowed (128).
+    pub tp: Option<u64>,
+    /// Working point that must fit.
+    pub point: DecodePoint,
+    /// Upper bound on pipeline stages (sanity guard; a model that needs
+    /// more stages than this is declared unservable).
+    pub max_pp: u64,
+}
+
+impl FitRequest {
+    /// Fit `point` on `chip` with defaults (TP=128, PP up to 4096).
+    pub fn new(chip: Chip, point: DecodePoint) -> Self {
+        FitRequest { chip, tp: None, point, max_pp: 4096 }
+    }
+}
+
+/// Why a system could not be sized.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FitError {
+    /// Even `max_pp` stages of `MAX_TP` chips cannot hold the workload.
+    CapacityExceeded {
+        /// Bytes required by the working point.
+        required_bytes: f64,
+        /// Bytes available at the largest permitted system.
+        max_system_bytes: f64,
+    },
+}
+
+impl fmt::Display for FitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FitError::CapacityExceeded { required_bytes, max_system_bytes } => write!(
+                f,
+                "workload needs {:.1} GiB, largest permitted system holds {:.1} GiB",
+                required_bytes / crate::GIB,
+                max_system_bytes / crate::GIB
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
+
+/// Minimum number of pipeline stages of `tp` chips needed to hold the
+/// working point.
+pub fn min_pp(app: &dyn Application, chip: &Chip, tp: u64, pt: &DecodePoint) -> u64 {
+    let per_stage = chip.mem_capacity * tp as f64;
+    (app.capacity_bytes(pt) / per_stage).ceil().max(1.0) as u64
+}
+
+/// Compose a system that serves `req.point`: TP as requested (or 128),
+/// PP grown until capacity fits.
+pub fn fit_system(app: &dyn Application, req: &FitRequest) -> Result<SystemConfig, FitError> {
+    let tp = req.tp.unwrap_or(MAX_TP).min(MAX_TP).max(1);
+    let pp = min_pp(app, &req.chip, tp, &req.point);
+    if pp > req.max_pp {
+        return Err(FitError::CapacityExceeded {
+            required_bytes: app.capacity_bytes(&req.point),
+            max_system_bytes: req.chip.mem_capacity * tp as f64 * req.max_pp as f64,
+        });
+    }
+    Ok(SystemConfig::new(req.chip.clone(), tp, pp))
+}
+
+/// Largest batch that fits on an already-sized system; see
+/// [`crate::model::max_batch_for_system`]. Re-exported here because batch
+/// search is logically part of system sizing.
+pub fn max_batch(app: &dyn Application, sys: &SystemConfig, context: u64) -> Option<u64> {
+    crate::model::max_batch_for_system(app, sys, context)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{DeepSeekV3, Llama3};
+    use crate::hw::presets;
+
+    #[test]
+    fn hbm3_fits_all_models_in_one_stage() {
+        for tp in [8u64, 32, 128] {
+            let pt = DecodePoint { batch: 1, context: 4096 };
+            assert_eq!(min_pp(&Llama3::llama3_405b(), &presets::hbm3(), tp, &pt), 1);
+        }
+        // DeepSeek needs 671 GiB; TP8 x 96 GiB = 768 GiB — just fits.
+        let pt = DecodePoint { batch: 1, context: 4096 };
+        assert_eq!(min_pp(&DeepSeekV3::v3(), &presets::hbm3(), 8, &pt), 1);
+    }
+
+    #[test]
+    fn sram_systems_need_many_stages() {
+        // Llama3-405B + 128K KV on 0.5 GiB chips: TP128 holds 64 GiB per
+        // stage, so ~7 stages (paper §4.7's "capacity challenges").
+        let pt = DecodePoint { batch: 1, context: 131072 };
+        let sys = fit_system(
+            &Llama3::llama3_405b(),
+            &FitRequest::new(presets::sram(), pt),
+        )
+        .unwrap();
+        assert_eq!(sys.tp, 128);
+        assert!(sys.pp >= 6 && sys.pp <= 8, "pp = {}", sys.pp);
+    }
+
+    #[test]
+    fn impossible_fits_are_reported() {
+        let pt = DecodePoint { batch: 1, context: 4096 };
+        let req = FitRequest {
+            max_pp: 1,
+            tp: Some(8),
+            ..FitRequest::new(presets::sram(), pt)
+        };
+        let err = fit_system(&Llama3::llama3_70b(), &req).unwrap_err();
+        assert!(err.to_string().contains("GiB"));
+    }
+
+    #[test]
+    fn cows_wafer_count_for_llama70b() {
+        // 70.55e9 weights + small KV over 11 GiB wafers -> 6-7 wafers.
+        let pt = DecodePoint { batch: 1, context: 4096 };
+        let pp = min_pp(&Llama3::llama3_70b(), &presets::cows(), 1, &pt);
+        assert!(pp >= 6 && pp <= 7, "pp = {pp}");
+    }
+}

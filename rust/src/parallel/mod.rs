@@ -1,0 +1,7 @@
+//! Parallelism composition: strong scaling (TP) to cut latency, weak
+//! scaling (PP) to fit capacity and multiply throughput (paper §2.1,
+//! "Distributed Execution").
+
+mod fit;
+
+pub use fit::{fit_system, max_batch, min_pp, FitError, FitRequest};

@@ -1,0 +1,138 @@
+//! Power / cost-efficiency model (paper Appendix D).
+//!
+//! * Accelerator die: 1 W/mm² (a reticle-limited 800 mm² die burns 800 W).
+//! * DRAM: access energy in pJ/bit at the streamed bandwidth (HBM3e ~3.9,
+//!   HBM4 ~2.8, 3D-DRAM ~1.5 — from the DRAMPower/CACTI-3DD line of
+//!   models the paper cites). SRAM/COWS access energy is inside the die
+//!   envelope.
+//! * Host: a fixed 8 chips per server, 300 W per server.
+//! * CENT: the CENT paper's reported system power is used verbatim.
+//!
+//! STPS/W is the paper's stand-in for both power and dollar cost.
+
+use crate::hw::SystemConfig;
+
+/// Parameters of the Appendix D power model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerModel {
+    /// Accelerator die power density, W/mm².
+    pub w_per_mm2: f64,
+    /// Host-server power excluding accelerators, watts.
+    pub server_watts: f64,
+    /// Accelerator chips per host server.
+    pub chips_per_server: u64,
+    /// Fraction of peak bandwidth assumed streaming for memory power
+    /// (decode saturates the memory system, so 1.0).
+    pub mem_duty_cycle: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            w_per_mm2: 1.0,
+            server_watts: 300.0,
+            chips_per_server: 8,
+            mem_duty_cycle: 1.0,
+        }
+    }
+}
+
+/// Itemized system power, watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemPower {
+    /// All accelerator dies.
+    pub die_watts: f64,
+    /// All memory devices.
+    pub mem_watts: f64,
+    /// All host servers.
+    pub server_watts: f64,
+    /// Total.
+    pub total_watts: f64,
+}
+
+impl PowerModel {
+    /// Power of one chip's die + memory.
+    pub fn chip_watts(&self, chip: &crate::hw::Chip) -> f64 {
+        let die = chip.die_area_mm2 * self.w_per_mm2;
+        let mem = chip.mem_pj_per_bit * 1e-12 * chip.mem_bw * 8.0 * self.mem_duty_cycle;
+        die + mem
+    }
+
+    /// Itemized power for a whole system.
+    pub fn system_power(&self, sys: &SystemConfig) -> SystemPower {
+        // CENT models power from its paper's reported figure rather than
+        // the die-area model (die_area == 0 marks such chips).
+        if sys.chip.die_area_mm2 == 0.0 {
+            let total = crate::hw::presets::cent_system_watts_for(sys);
+            return SystemPower {
+                die_watts: 0.0,
+                mem_watts: 0.0,
+                server_watts: 0.0,
+                total_watts: total,
+            };
+        }
+        let n = sys.n_chips() as f64;
+        let die = sys.chip.die_area_mm2 * self.w_per_mm2 * n;
+        let mem =
+            sys.chip.mem_pj_per_bit * 1e-12 * sys.chip.mem_bw * 8.0 * self.mem_duty_cycle * n;
+        let servers = (sys.n_chips() + self.chips_per_server - 1) / self.chips_per_server;
+        let server = servers as f64 * self.server_watts;
+        SystemPower {
+            die_watts: die,
+            mem_watts: mem,
+            server_watts: server,
+            total_watts: die + mem + server,
+        }
+    }
+
+    /// System tokens/second per watt.
+    pub fn stps_per_watt(&self, stps: f64, sys: &SystemConfig) -> f64 {
+        stps / self.system_power(sys).total_watts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{presets, SystemConfig};
+
+    #[test]
+    fn reticle_die_burns_800w() {
+        let m = PowerModel::default();
+        let hbm3 = presets::hbm3();
+        let die_only = hbm3.die_area_mm2 * m.w_per_mm2;
+        assert_eq!(die_only, 800.0);
+        // Memory adds a non-trivial but sub-dominant slice.
+        let total = m.chip_watts(&hbm3);
+        assert!(total > 800.0 && total < 1000.0, "got {total}");
+    }
+
+    #[test]
+    fn system_power_counts_servers() {
+        let m = PowerModel::default();
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let p = m.system_power(&sys);
+        assert_eq!(p.server_watts, 300.0);
+        let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+        let p = m.system_power(&sys);
+        assert_eq!(p.server_watts, 16.0 * 300.0);
+    }
+
+    #[test]
+    fn sram_and_cows_pay_no_separate_memory_power() {
+        let m = PowerModel::default();
+        assert_eq!(m.system_power(&SystemConfig::new(presets::sram(), 8, 1)).mem_watts, 0.0);
+        let cows = m.system_power(&SystemConfig::new(presets::cows(), 1, 1));
+        assert_eq!(cows.mem_watts, 0.0);
+        // One wafer = 25 die-lets at 800 mm² each.
+        assert_eq!(cows.die_watts, 25.0 * 800.0);
+    }
+
+    #[test]
+    fn cent_uses_reported_power() {
+        let m = PowerModel::default();
+        let sys = SystemConfig::new(presets::cent_device(), 32, 1);
+        let p = m.system_power(&sys);
+        assert_eq!(p.total_watts, crate::hw::presets::cent_system_watts_for(&sys));
+    }
+}

@@ -1,0 +1,164 @@
+//! Report emitters: render experiment output as markdown tables, CSV, or
+//! JSON, plus the normalization helpers the paper's figures use.
+
+mod normalize;
+mod table;
+
+pub use normalize::{normalize_series, normalize_to_first};
+pub use table::{Series, Table};
+
+/// A complete experiment report: any number of tables plus figure series.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Experiment identifier (e.g. `table2`, `fig3`).
+    pub id: String,
+    /// Human title.
+    pub title: String,
+    /// Free-form commentary (what the paper's artifact shows).
+    pub notes: Vec<String>,
+    /// Rendered tables.
+    pub tables: Vec<Table>,
+    /// Figure series (x/y point lists keyed by label).
+    pub series: Vec<Series>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new(id: &str, title: &str) -> Report {
+        Report { id: id.into(), title: title.into(), ..Default::default() }
+    }
+
+    /// Render as a JSON document (tables + series, machine-readable).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("notes", Json::Arr(self.notes.iter().cloned().map(Json::Str).collect())),
+            (
+                "tables",
+                Json::Arr(
+                    self.tables
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("title", Json::Str(t.title.clone())),
+                                (
+                                    "headers",
+                                    Json::Arr(t.headers.iter().cloned().map(Json::Str).collect()),
+                                ),
+                                (
+                                    "rows",
+                                    Json::Arr(
+                                        t.rows
+                                            .iter()
+                                            .map(|r| {
+                                                Json::Arr(
+                                                    r.iter().cloned().map(Json::Str).collect(),
+                                                )
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "series",
+                Json::Arr(
+                    self.series
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("label", Json::Str(s.label.clone())),
+                                ("x", Json::Str(s.x_name.clone())),
+                                ("y", Json::Str(s.y_name.clone())),
+                                (
+                                    "points",
+                                    Json::Arr(
+                                        s.points
+                                            .iter()
+                                            .map(|&(x, y)| {
+                                                Json::Arr(vec![Json::Num(x), Json::Num(y)])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render everything as a single markdown document.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("# {} — {}\n\n", self.id, self.title);
+        for n in &self.notes {
+            out.push_str(&format!("> {n}\n"));
+        }
+        if !self.notes.is_empty() {
+            out.push('\n');
+        }
+        for t in &self.tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        for s in &self.series {
+            out.push_str(&s.to_markdown());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a throughput the way the paper's tables do: 3 significant-ish
+/// digits with K/M suffixes (`2.1K`, `337K`, `1.5M`, `86`).
+pub fn fmt_tps(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.1}M", v / 1e6)
+    } else if v >= 10_000.0 {
+        format!("{:.0}K", v / 1e3)
+    } else if v >= 1000.0 {
+        format!("{:.1}K", v / 1e3)
+    } else if v >= 10.0 {
+        format!("{:.0}", v)
+    } else {
+        format!("{:.1}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_to_json_roundtrips() {
+        let mut r = Report::new("x", "t");
+        let mut tbl = Table::new("tt", &["a"]);
+        tbl.push_row(vec!["1".into()]);
+        r.tables.push(tbl);
+        let mut s = Series::new("s", "x", "y");
+        s.points.push((1.0, 2.0));
+        r.series.push(s);
+        let j = r.to_json().to_string();
+        let back = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(back.get("id").unwrap().as_str(), Some("x"));
+        assert_eq!(
+            back.get("tables").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn fmt_tps_matches_paper_style() {
+        assert_eq!(fmt_tps(2_056.0), "2.1K");
+        assert_eq!(fmt_tps(337_000.0), "337K");
+        assert_eq!(fmt_tps(1_500_000.0), "1.5M");
+        assert_eq!(fmt_tps(86.0), "86");
+        assert_eq!(fmt_tps(2.3), "2.3");
+    }
+}

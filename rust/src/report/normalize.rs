@@ -1,0 +1,45 @@
+//! Normalization helpers for figure reproduction (the paper's figures
+//! report values normalized to a baseline: Fig. 2 to HBM3-TP128, Fig. 4
+//! to the 4K-context point, Fig. 5 to HBM3's STPS/W).
+
+use super::Series;
+
+/// Divide every y by the first point's y (Fig. 4 style: normalize a
+/// context sweep to its 4K entry). No-op on empty series; panics on a
+/// zero baseline.
+pub fn normalize_to_first(series: &mut Series) {
+    let Some(&(_, base)) = series.points.first() else { return };
+    assert!(base != 0.0, "cannot normalize to a zero baseline");
+    for (_, y) in &mut series.points {
+        *y /= base;
+    }
+}
+
+/// Divide every y by an external baseline value (Fig. 2/5 style).
+pub fn normalize_series(series: &mut Series, baseline: f64) {
+    assert!(baseline != 0.0, "cannot normalize to a zero baseline");
+    for (_, y) in &mut series.points {
+        *y /= baseline;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_to_first_sets_baseline_to_one() {
+        let mut s = Series::new("s", "x", "y");
+        s.points = vec![(0.0, 4.0), (1.0, 8.0)];
+        normalize_to_first(&mut s);
+        assert_eq!(s.points, vec![(0.0, 1.0), (1.0, 2.0)]);
+    }
+
+    #[test]
+    fn normalize_series_uses_external_baseline() {
+        let mut s = Series::new("s", "x", "y");
+        s.points = vec![(0.0, 4.0), (1.0, 8.0)];
+        normalize_series(&mut s, 2.0);
+        assert_eq!(s.points, vec![(0.0, 2.0), (1.0, 4.0)]);
+    }
+}

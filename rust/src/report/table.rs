@@ -1,0 +1,134 @@
+//! Table and series primitives.
+
+/// A rendered table: headers plus string rows (values are pre-formatted
+/// so the emitter stays dumb and the experiment controls precision).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    /// Table caption.
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Row-major cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with headers.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (pads/truncates to the header width).
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        let mut cells = cells;
+        cells.resize(self.headers.len(), String::new());
+        self.rows.push(cells);
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("## {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// CSV rendering (RFC-4180-ish; cells containing commas are quoted).
+    pub fn to_csv(&self) -> String {
+        let quote = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| quote(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A figure series: labeled (x, y) points.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    /// Series label (legend entry).
+    pub label: String,
+    /// X-axis name.
+    pub x_name: String,
+    /// Y-axis name.
+    pub y_name: String,
+    /// Data points.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new(label: &str, x_name: &str, y_name: &str) -> Series {
+        Series {
+            label: label.into(),
+            x_name: x_name.into(),
+            y_name: y_name.into(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Render as a small markdown table (figures are data, plots are the
+    /// reader's business).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!(
+            "### series: {} ({} vs {})\n\n| {} | {} |\n|---|---|\n",
+            self.label, self.y_name, self.x_name, self.x_name, self.y_name
+        );
+        for (x, y) in &self.points {
+            out.push_str(&format!("| {x:.6} | {y:.6} |\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_shape() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = Table::new("demo", &["a"]);
+        t.push_row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn rows_are_padded_to_header_width() {
+        let mut t = Table::new("demo", &["a", "b", "c"]);
+        t.push_row(vec!["1".into()]);
+        assert_eq!(t.rows[0].len(), 3);
+    }
+}

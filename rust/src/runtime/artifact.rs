@@ -1,0 +1,188 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Shape + dtype of one positional input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimension sizes (row-major).
+    pub shape: Vec<usize>,
+    /// JAX dtype string (`float32`, `int32`, ...).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Entry name (e.g. `decode_b1`).
+    pub name: String,
+    /// HLO text file path (absolute).
+    pub path: PathBuf,
+    /// Positional input specs, in HLO parameter order.
+    pub inputs: Vec<TensorSpec>,
+    /// Entry kind (`decode_step`, `grid_eval`, `gemv`, `gemm`).
+    pub kind: String,
+    /// Raw manifest record for kind-specific fields (batch, config, ...).
+    pub raw: Json,
+}
+
+impl ArtifactEntry {
+    /// Kind-specific numeric field (e.g. `batch`, `flops`).
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.raw.get(key).and_then(Json::as_f64)
+    }
+
+    /// Nested decode-step config field.
+    pub fn config_num(&self, key: &str) -> Option<f64> {
+        self.raw.get("config")?.get(key)?.as_f64()
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest lives in.
+    pub dir: PathBuf,
+    /// Entries by name.
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON given its directory.
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest is not valid JSON")?;
+        let entries_json = root
+            .get("entries")
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?;
+        let Json::Obj(map) = entries_json else {
+            return Err(anyhow!("manifest 'entries' must be an object"));
+        };
+        let mut entries = BTreeMap::new();
+        for (name, rec) in map {
+            let file = rec
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name}: missing 'file'"))?;
+            let inputs = rec
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry {name}: missing 'inputs'"))?
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("entry {name}: bad input shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().map(|d| d as usize))
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or_else(|| anyhow!("entry {name}: bad dims"))?;
+                    let dtype = i
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(TensorSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    path: dir.join(file),
+                    inputs,
+                    kind: rec
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    raw: rec.clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Look up an entry.
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact entry named '{name}'"))
+    }
+
+    /// The decode entry whose batch bucket is the smallest `>= batch`
+    /// (serving engines round up to a compiled bucket).
+    pub fn decode_bucket(&self, batch: u64) -> Result<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.kind == "decode_step")
+            .filter(|e| e.num("batch").map_or(false, |b| b as u64 >= batch))
+            .min_by_key(|e| e.num("batch").unwrap_or(f64::MAX) as u64)
+            .ok_or_else(|| anyhow!("no decode bucket holds batch {batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "entries": {
+        "decode_b1": {"file": "decode_b1.hlo.txt", "kind": "decode_step",
+          "batch": 1,
+          "inputs": [{"shape": [1], "dtype": "int32"}],
+          "config": {"context": 128}},
+        "decode_b4": {"file": "decode_b4.hlo.txt", "kind": "decode_step",
+          "batch": 4, "inputs": []},
+        "gemv": {"file": "gemv.hlo.txt", "kind": "gemv",
+          "bytes": 1024, "inputs": [{"shape": [1, 16], "dtype": "float32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_entries_and_specs() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let d = m.entry("decode_b1").unwrap();
+        assert_eq!(d.inputs[0].shape, vec![1]);
+        assert_eq!(d.inputs[0].dtype, "int32");
+        assert_eq!(d.config_num("context"), Some(128.0));
+        assert_eq!(m.entry("gemv").unwrap().num("bytes"), Some(1024.0));
+    }
+
+    #[test]
+    fn bucket_rounds_up() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.decode_bucket(1).unwrap().name, "decode_b1");
+        assert_eq!(m.decode_bucket(2).unwrap().name, "decode_b4");
+        assert_eq!(m.decode_bucket(4).unwrap().name, "decode_b4");
+        assert!(m.decode_bucket(5).is_err());
+    }
+
+    #[test]
+    fn missing_entry_is_an_error() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+}

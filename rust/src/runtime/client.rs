@@ -1,0 +1,138 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use super::artifact::{ArtifactEntry, Manifest};
+use crate::Result;
+
+/// A compiled entry point, ready to execute.
+pub struct Loaded {
+    /// The manifest record this was compiled from.
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Loaded {
+    /// Execute with host literals; returns the flattened output tuple.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (no host copies); returns
+    /// the raw output buffers so callers can feed them back in — the
+    /// serving engine threads KV caches through steps this way.
+    pub fn execute_buffers(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b(args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Execute and return only the wall-clock seconds (used by the
+    /// Appendix-E-style validation and perf benches).
+    pub fn execute_timed(&self, args: &[xla::Literal]) -> Result<f64> {
+        let t0 = Instant::now();
+        let out = self.exe.execute::<xla::Literal>(args)?;
+        // Force completion by syncing the first output to host.
+        let _ = out[0][0].to_literal_sync()?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+/// The PJRT runtime: one CPU client plus a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, std::sync::Arc<Loaded>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Platform string (e.g. `cpu`), for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Access the underlying client (buffer creation etc.).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an entry (cached).
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Loaded>> {
+        if let Some(l) = self.cache.get(name) {
+            return Ok(l.clone());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let loaded = std::sync::Arc::new(Loaded { entry, exe });
+        self.cache.insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Build zero-filled literals matching an entry's input specs
+    /// (useful for smoke tests and timing runs where values don't
+    /// matter).
+    pub fn zero_inputs(&self, name: &str) -> Result<Vec<xla::Literal>> {
+        let entry = self.manifest.entry(name)?;
+        entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                let ty = match spec.dtype.as_str() {
+                    "float32" => xla::PrimitiveType::F32,
+                    "int32" => xla::PrimitiveType::S32,
+                    "int64" => xla::PrimitiveType::S64,
+                    "float64" => xla::PrimitiveType::F64,
+                    other => anyhow::bail!("unsupported artifact dtype {other}"),
+                };
+                Ok(xla::Literal::create_from_shape(ty, &spec.shape))
+            })
+            .collect()
+    }
+
+    /// Measure sustained host memory stream bandwidth (bytes/s) with a
+    /// large copy — the `mem_bw` of the "CPU chip" LIMINAL uses in the
+    /// Appendix-E-style validation.
+    pub fn measure_stream_bandwidth() -> f64 {
+        const BYTES: usize = 256 << 20; // 256 MiB
+        let src = vec![1u8; BYTES];
+        let mut dst = vec![0u8; BYTES];
+        // Warm up once, then take the best of 3 (peak streaming rate).
+        let mut best = f64::MAX;
+        for _ in 0..4 {
+            let t0 = Instant::now();
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&dst);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        // A copy moves 2x the buffer (read + write).
+        (2 * BYTES) as f64 / best
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust request path (Python never runs at serving time).
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! Artifacts are described by `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`.
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
+pub use client::{Loaded, Runtime};

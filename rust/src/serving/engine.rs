@@ -1,0 +1,76 @@
+//! Step engines: pluggable per-step latency sources for the simulator.
+
+use std::sync::Arc;
+
+use crate::apps::{Application, DecodePoint};
+use crate::hw::SystemConfig;
+use crate::model::{evaluate, EvalOptions};
+
+/// Something that can price one decode step of a whole batch.
+pub trait StepEngine {
+    /// Seconds to execute one step with `batch` active sequences whose
+    /// longest context is `max_context` tokens.
+    fn step_latency(&mut self, batch: u64, max_context: u64) -> f64;
+
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> String;
+}
+
+/// LIMINAL-priced engine: each step costs the analytical `T_batch` for
+/// the *current* batch size and context — the dynamic counterpart of the
+/// paper's steady-state tables.
+pub struct AnalyticEngine {
+    /// Application being served.
+    pub app: Arc<dyn Application>,
+    /// System serving it.
+    pub sys: SystemConfig,
+    /// Model options.
+    pub opts: EvalOptions,
+}
+
+impl AnalyticEngine {
+    /// New engine; capacity enforcement is disabled here because the
+    /// batcher's KV budget already gates admission (double-gating would
+    /// make transient over-admission a hard error instead of pressure).
+    pub fn new(app: Arc<dyn Application>, sys: SystemConfig) -> Self {
+        let opts = EvalOptions { enforce_capacity: false, ..Default::default() };
+        AnalyticEngine { app, sys, opts }
+    }
+}
+
+impl StepEngine for AnalyticEngine {
+    fn step_latency(&mut self, batch: u64, max_context: u64) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let pt = DecodePoint { batch, context: max_context.max(1) };
+        evaluate(self.app.as_ref(), &self.sys, &pt, &self.opts)
+            .map(|p| p.lat.t_batch)
+            .unwrap_or(f64::INFINITY)
+    }
+
+    fn name(&self) -> String {
+        format!("analytic({} on {})", self.app.name(), self.sys.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Registry;
+    use crate::hw::presets;
+
+    #[test]
+    fn analytic_step_latency_matches_model() {
+        let app = Registry::builtin().app("llama3-70b").unwrap();
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut eng = AnalyticEngine::new(app.clone(), sys.clone());
+        let lat = eng.step_latency(1, 4096);
+        // Table 2: 486 UTPS -> ~2.06 ms/token.
+        assert!((1.0 / lat - 486.0).abs() < 10.0, "utps {}", 1.0 / lat);
+        // Larger batch, longer step.
+        assert!(eng.step_latency(32, 4096) > lat);
+        // Idle batch costs nothing.
+        assert_eq!(eng.step_latency(0, 4096), 0.0);
+    }
+}

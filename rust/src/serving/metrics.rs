@@ -1,0 +1,145 @@
+//! Serving metrics: per-request latency statistics and system totals.
+
+use super::request::Request;
+
+/// Percentile of a sorted-or-not sample set (nearest-rank).
+pub fn percentile(samples: &mut Vec<f64>, p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (samples.len() as f64 - 1.0)).round() as usize;
+    samples[rank.min(samples.len() - 1)]
+}
+
+/// Aggregated results of one serving-simulation run.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    /// Engine backend name.
+    pub engine: String,
+    /// Requests completed.
+    pub completed: u64,
+    /// Total tokens generated.
+    pub tokens: u64,
+    /// Wall/simulated span from first arrival to last completion, s.
+    pub span: f64,
+    /// System tokens/second over the span.
+    pub stps: f64,
+    /// Mean per-user decode throughput (tokens / residence time).
+    pub utps_mean: f64,
+    /// p50 per-user throughput.
+    pub utps_p50: f64,
+    /// p99 per-user throughput (worst users).
+    pub utps_p99_low: f64,
+    /// Mean queueing delay (arrival -> admission), s.
+    pub queue_delay_mean: f64,
+    /// Steps executed.
+    pub steps: u64,
+    /// Mean batch occupancy across steps.
+    pub mean_batch: f64,
+}
+
+impl ServingReport {
+    /// Build from completed requests + step accounting.
+    pub fn from_requests(
+        engine: String,
+        reqs: &[Request],
+        steps: u64,
+        batch_integral: f64,
+        end_time: f64,
+    ) -> ServingReport {
+        let completed: Vec<&Request> =
+            reqs.iter().filter(|r| r.completed_at.is_some()).collect();
+        let tokens: u64 = completed.iter().map(|r| r.generated).sum();
+        let first = reqs.iter().map(|r| r.arrival).fold(f64::MAX, f64::min);
+        let span = (end_time - first).max(1e-12);
+
+        let mut utps: Vec<f64> = completed
+            .iter()
+            .filter_map(|r| {
+                let t = r.completed_at? - r.admitted_at?;
+                (t > 0.0).then_some(r.generated as f64 / t)
+            })
+            .collect();
+        let utps_mean = if utps.is_empty() {
+            0.0
+        } else {
+            utps.iter().sum::<f64>() / utps.len() as f64
+        };
+        let mut delays: Vec<f64> = completed
+            .iter()
+            .filter_map(|r| Some(r.admitted_at? - r.arrival))
+            .collect();
+        let queue_delay_mean = if delays.is_empty() {
+            0.0
+        } else {
+            delays.iter().sum::<f64>() / delays.len() as f64
+        };
+        delays.clear();
+
+        ServingReport {
+            engine,
+            completed: completed.len() as u64,
+            tokens,
+            span,
+            stps: tokens as f64 / span,
+            utps_mean,
+            utps_p50: percentile(&mut utps, 50.0),
+            utps_p99_low: percentile(&mut utps, 1.0),
+            queue_delay_mean,
+            steps,
+            mean_batch: if steps == 0 { 0.0 } else { batch_integral / steps as f64 },
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} reqs, {} tokens in {:.2}s -> STPS {:.1}, UTPS mean {:.1} / p50 {:.1}, \
+             queue delay {:.3}s, mean batch {:.1}",
+            self.engine,
+            self.completed,
+            self.tokens,
+            self.span,
+            self.stps,
+            self.utps_mean,
+            self.utps_p50,
+            self.queue_delay_mean,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&mut v, 50.0), 3.0);
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 100.0), 5.0);
+        let mut empty: Vec<f64> = vec![];
+        assert!(percentile(&mut empty, 50.0).is_nan());
+    }
+
+    #[test]
+    fn report_computes_throughputs() {
+        let reqs = vec![Request {
+            id: 0,
+            arrival: 0.0,
+            context_len: 10,
+            gen_len: 10,
+            generated: 10,
+            admitted_at: Some(0.0),
+            completed_at: Some(2.0),
+        }];
+        let rep = ServingReport::from_requests("t".into(), &reqs, 10, 10.0, 2.0);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.tokens, 10);
+        assert!((rep.stps - 5.0).abs() < 1e-9);
+        assert!((rep.utps_mean - 5.0).abs() < 1e-9);
+        assert_eq!(rep.mean_batch, 1.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Decode serving simulator: a vLLM-router-style continuous-batching
+//! engine over the LIMINAL substrate.
+//!
+//! Two latency backends plug into the same scheduler:
+//!
+//! * [`AnalyticEngine`] — per-step latency from the LIMINAL model, used
+//!   to explore paper-scale systems (TP128 clusters serving Llama3-405B)
+//!   under dynamic load instead of the steady-state closed forms.
+//! * [`PjrtEngine`] — the real thing at small scale: executes the
+//!   AOT-compiled JAX/Pallas decode step through PJRT, measuring true
+//!   wall-clock including every software overhead the paper's limit
+//!   study idealizes away (Appendix E's "simulated tokens/sec" analog).
+//!
+//! The scheduler is a discrete-event simulation ([`crate::des`]): Poisson
+//! arrivals, a FIFO admission queue, KV-capacity-gated continuous
+//! batching, and per-request completion tracking.
+
+mod batcher;
+mod engine;
+mod metrics;
+mod pjrt_engine;
+mod request;
+mod sim;
+
+pub use batcher::{Batcher, KvBudget};
+pub use engine::{AnalyticEngine, StepEngine};
+pub use metrics::{percentile, ServingReport};
+pub use pjrt_engine::PjrtEngine;
+pub use request::{Request, WorkloadGen, WorkloadSpec};
+pub use sim::{ServingSim, SimConfig};

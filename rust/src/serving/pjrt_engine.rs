@@ -1,0 +1,180 @@
+//! PJRT-backed step engine: executes the AOT-compiled decode step and
+//! reports *measured* wall-clock per step.
+//!
+//! This is the repository's "real silicon" analog for Appendix E: where
+//! LIMINAL idealizes software away, this path pays every cost — PJRT
+//! dispatch, host-device literal copies, tuple re-materialization — and
+//! the gap between its tokens/sec and LIMINAL's prediction is exactly
+//! the paper's reported validation gap, reproduced in `experiments::
+//! validation`.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::runtime::{Loaded, Runtime, TensorSpec};
+use crate::Result;
+
+use super::engine::StepEngine;
+
+/// Executable decode engine over one compiled batch bucket.
+pub struct PjrtEngine {
+    loaded: Arc<Loaded>,
+    /// Flattened inputs: params (constant), token ids, caches, pos.
+    inputs: Vec<xla::Literal>,
+    token_idx: usize,
+    kc_idx: usize,
+    vc_idx: usize,
+    pos_idx: usize,
+    /// Compiled batch bucket size.
+    pub batch: u64,
+    /// Cache context length T.
+    pub context: u64,
+    /// Vocabulary size (for greedy sampling).
+    pub vocab: u64,
+    /// Current cache fill position.
+    pub pos: u64,
+    steps_executed: u64,
+}
+
+impl PjrtEngine {
+    /// Load the decode bucket that can hold `batch` sequences.
+    pub fn new(rt: &mut Runtime, batch: u64) -> Result<PjrtEngine> {
+        let name = rt.manifest().decode_bucket(batch)?.name.clone();
+        let loaded = rt.load(&name)?;
+        let entry = &loaded.entry;
+        let b = entry.num("batch").context("decode entry missing batch")? as u64;
+        let context = entry.config_num("context").context("missing context")? as u64;
+        let vocab = entry.config_num("vocab").context("missing vocab")? as u64;
+
+        // Identify the positional role of each input by shape/dtype:
+        // token ids = int32 [B]; pos = int32 []; caches = the two
+        // 5-D float32 arrays; everything else is a parameter.
+        let find = |pred: &dyn Fn(&TensorSpec) -> bool| -> Vec<usize> {
+            entry
+                .inputs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| pred(s))
+                .map(|(i, _)| i)
+                .collect()
+        };
+        let token_idx = *find(&|s| s.dtype == "int32" && s.shape.len() == 1)
+            .first()
+            .context("no token input")?;
+        let pos_idx = *find(&|s| s.dtype == "int32" && s.shape.is_empty())
+            .first()
+            .context("no pos input")?;
+        let caches = find(&|s| s.dtype == "float32" && s.shape.len() == 5);
+        anyhow::ensure!(caches.len() == 2, "expected 2 KV cache inputs");
+        let (kc_idx, vc_idx) = (caches[0], caches[1]);
+
+        let inputs = rt.zero_inputs(&name)?;
+        Ok(PjrtEngine {
+            loaded,
+            inputs,
+            token_idx,
+            kc_idx,
+            vc_idx,
+            pos_idx,
+            batch: b,
+            context,
+            vocab,
+            pos: 0,
+            steps_executed: 0,
+        })
+    }
+
+    /// Randomize the parameters (zero weights make degenerate logits).
+    /// Deterministic given `seed`; cheap enough to run once at startup.
+    pub fn randomize_params(&mut self, seed: u64) -> Result<()> {
+        let mut rng = crate::util::rng::Pcg32::seed_from(seed);
+        for (i, lit) in self.inputs.iter_mut().enumerate() {
+            if i == self.token_idx || i == self.pos_idx || i == self.kc_idx || i == self.vc_idx {
+                continue;
+            }
+            let n = lit.element_count();
+            let scale = 1.0 / (n as f64).sqrt().max(1.0) as f32;
+            let data: Vec<f32> = (0..n)
+                .map(|_| (rng.f64() as f32 - 0.5) * 4.0 * scale)
+                .collect();
+            lit.copy_raw_from(&data)?;
+        }
+        Ok(())
+    }
+
+    /// Reset the KV cache and position (new conversation batch).
+    pub fn reset(&mut self) -> Result<()> {
+        for idx in [self.kc_idx, self.vc_idx] {
+            let n = self.inputs[idx].element_count();
+            self.inputs[idx].copy_raw_from(&vec![0f32; n])?;
+        }
+        self.pos = 0;
+        Ok(())
+    }
+
+    /// Execute one decode step with the given current tokens (length ==
+    /// `batch`); returns `(next_tokens, wall_seconds)`. Greedy argmax
+    /// sampling on the host, caches threaded to the next step.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<(Vec<i32>, f64)> {
+        anyhow::ensure!(tokens.len() as u64 == self.batch, "token count != batch");
+        anyhow::ensure!(self.pos < self.context, "KV cache full");
+        self.inputs[self.token_idx].copy_raw_from(tokens)?;
+        self.inputs[self.pos_idx].copy_raw_from(&[self.pos as i32])?;
+
+        let t0 = std::time::Instant::now();
+        let mut out = self.loaded.execute(&self.inputs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(out.len() == 3, "decode step must return 3 outputs");
+
+        // Thread caches back (out[1] = k, out[2] = v).
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        self.inputs[self.kc_idx] = kc;
+        self.inputs[self.vc_idx] = vc;
+        self.pos += 1;
+        self.steps_executed += 1;
+
+        // Greedy argmax per sequence.
+        let flat: Vec<f32> = logits.to_vec()?;
+        let v = self.vocab as usize;
+        let next = (0..self.batch as usize)
+            .map(|b| {
+                let row = &flat[b * v..(b + 1) * v];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect();
+        Ok((next, dt))
+    }
+
+    /// Steps executed since creation.
+    pub fn steps_executed(&self) -> u64 {
+        self.steps_executed
+    }
+}
+
+impl StepEngine for PjrtEngine {
+    fn step_latency(&mut self, batch: u64, _max_context: u64) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        if self.pos >= self.context {
+            // Rolling window: restart the cache (simulator semantics).
+            let _ = self.reset();
+        }
+        let tokens = vec![1i32; self.batch as usize];
+        match self.step(&tokens) {
+            Ok((_, dt)) => dt,
+            Err(_) => f64::INFINITY,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt(decode_b{} T={})", self.batch, self.context)
+    }
+}

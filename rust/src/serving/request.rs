@@ -1,0 +1,153 @@
+//! Requests and synthetic workload generation.
+
+use crate::util::rng::Pcg32;
+
+/// One decode request: arrives with a prefilled context of
+/// `context_len` tokens and wants `gen_len` new tokens (prefill is
+/// served elsewhere, as in disaggregated deployments — the paper's
+/// decode-only focus, §2.1).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Unique id (assigned by the generator).
+    pub id: u64,
+    /// Arrival time, seconds.
+    pub arrival: f64,
+    /// Context length already in the KV cache at admission.
+    pub context_len: u64,
+    /// Tokens to generate.
+    pub gen_len: u64,
+    /// Tokens generated so far (mutated by the simulator).
+    pub generated: u64,
+    /// Admission time (None while queued).
+    pub admitted_at: Option<f64>,
+    /// Completion time.
+    pub completed_at: Option<f64>,
+}
+
+impl Request {
+    /// Current total sequence length (context + generated).
+    pub fn seq_len(&self) -> u64 {
+        self.context_len + self.generated
+    }
+
+    /// Whether generation is finished.
+    pub fn done(&self) -> bool {
+        self.generated >= self.gen_len
+    }
+}
+
+/// Synthetic workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Mean request arrival rate, requests/second (Poisson process).
+    pub arrival_rate: f64,
+    /// Number of requests to generate.
+    pub n_requests: u64,
+    /// Context length range `[lo, hi)` (uniform).
+    pub context: (u64, u64),
+    /// Generation length range `[lo, hi)` (uniform).
+    pub gen: (u64, u64),
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            arrival_rate: 10.0,
+            n_requests: 100,
+            context: (1024, 8192),
+            gen: (64, 256),
+            seed: 7,
+        }
+    }
+}
+
+/// Deterministic synthetic workload generator.
+pub struct WorkloadGen {
+    spec: WorkloadSpec,
+    rng: Pcg32,
+    next_id: u64,
+    clock: f64,
+}
+
+impl WorkloadGen {
+    /// New generator for a spec.
+    pub fn new(spec: WorkloadSpec) -> Self {
+        let rng = Pcg32::seed_from(spec.seed);
+        WorkloadGen { spec, rng, next_id: 0, clock: 0.0 }
+    }
+
+    /// Generate all requests up front (arrival times are a Poisson
+    /// process; lengths uniform in their ranges).
+    pub fn generate(mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.spec.n_requests as usize);
+        for _ in 0..self.spec.n_requests {
+            self.clock += self.rng.exp(self.spec.arrival_rate);
+            let (clo, chi) = self.spec.context;
+            let (glo, ghi) = self.spec.gen;
+            out.push(Request {
+                id: self.next_id,
+                arrival: self.clock,
+                context_len: if chi > clo {
+                    clo + self.rng.below((chi - clo) as u32) as u64
+                } else {
+                    clo
+                },
+                gen_len: if ghi > glo {
+                    (glo + self.rng.below((ghi - glo) as u32) as u64).max(1)
+                } else {
+                    glo.max(1)
+                },
+                generated: 0,
+                admitted_at: None,
+                completed_at: None,
+            });
+            self.next_id += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = WorkloadGen::new(WorkloadSpec::default()).generate();
+        let b = WorkloadGen::new(WorkloadSpec::default()).generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.context_len, y.context_len);
+            assert_eq!(x.gen_len, y.gen_len);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_increasing_and_rate_is_close() {
+        let spec = WorkloadSpec { arrival_rate: 50.0, n_requests: 2000, ..Default::default() };
+        let reqs = WorkloadGen::new(spec).generate();
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = reqs.last().unwrap().arrival;
+        let rate = 2000.0 / span;
+        assert!((rate - 50.0).abs() / 50.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn lengths_respect_ranges() {
+        let spec = WorkloadSpec {
+            context: (100, 200),
+            gen: (10, 20),
+            n_requests: 500,
+            ..Default::default()
+        };
+        for r in WorkloadGen::new(spec).generate() {
+            assert!((100..200).contains(&r.context_len));
+            assert!((10..20).contains(&r.gen_len));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Sweep grid definition: the cross product of models, chips, TP degrees,
+//! contexts, and batch policies.
+
+use crate::hw::Chip;
+
+/// How the batch dimension of a sweep is chosen.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchSpec {
+    /// Fixed batch sizes.
+    Fixed(Vec<u64>),
+    /// The largest batch that fits each (system, context) cell — the
+    /// paper's max-STPS policy.
+    MaxFit,
+    /// Both batch 1 and the max-fit batch (UTPS + STPS in one sweep).
+    OneAndMaxFit,
+}
+
+/// A sweep grid. Each axis is explicit so records are self-describing.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    /// Model names resolved against the registry at run time.
+    pub models: Vec<String>,
+    /// Chips to evaluate.
+    pub chips: Vec<Chip>,
+    /// Tensor-parallel degrees.
+    pub tps: Vec<u64>,
+    /// Context lengths, tokens.
+    pub contexts: Vec<u64>,
+    /// Batch policy.
+    pub batch: BatchSpec,
+    /// Grow PP to fit (true for capacity-starved chips like SRAM/COWS);
+    /// when false, cells that do not fit are recorded as unservable.
+    pub fit_pp: bool,
+}
+
+impl Grid {
+    /// A grid over the paper's three models with one chip.
+    pub fn paper_models(chip: Chip) -> Grid {
+        Grid {
+            models: vec![
+                "llama3-70b".into(),
+                "llama3-405b".into(),
+                "deepseek-v3".into(),
+            ],
+            chips: vec![chip],
+            tps: vec![8, 32, 128],
+            contexts: super::TABLE_CONTEXTS.to_vec(),
+            batch: BatchSpec::OneAndMaxFit,
+            fit_pp: false,
+        }
+    }
+
+    /// Number of (model, chip, tp, context) cells (batch expansion is
+    /// policy-dependent and happens in the runner).
+    pub fn n_cells(&self) -> usize {
+        self.models.len() * self.chips.len() * self.tps.len() * self.contexts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn cell_count_is_product_of_axes() {
+        let g = Grid::paper_models(presets::hbm3());
+        assert_eq!(g.n_cells(), 3 * 1 * 3 * 6);
+    }
+}

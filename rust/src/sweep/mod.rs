@@ -1,0 +1,21 @@
+//! Parameter-sweep engine: the systematic `application x hardware`
+//! exploration the paper positions as LIMINAL's key advantage over
+//! silicon measurements and point studies.
+
+mod grid;
+mod record;
+mod runner;
+
+pub use grid::{BatchSpec, Grid};
+pub use record::Record;
+pub use runner::SweepRunner;
+
+/// Context lengths used throughout the paper's evaluation (1K..128K).
+pub const PAPER_CONTEXTS: [u64; 8] =
+    [1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072];
+
+/// The subset of contexts the appendix tables report (4K..128K).
+pub const TABLE_CONTEXTS: [u64; 6] = [4096, 8192, 16384, 32768, 65536, 131072];
+
+/// TP degrees highlighted in Table 2/5/6.
+pub const PAPER_TPS: [u64; 3] = [8, 32, 128];

@@ -1,0 +1,84 @@
+//! One sweep result row, serializable for CSV/JSON export.
+
+use crate::model::{LatencyBreakdown, Perf};
+
+/// A fully-evaluated sweep cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// Model name.
+    pub model: String,
+    /// Chip name.
+    pub chip: String,
+    /// System label (chip-TPx[-PPy]).
+    pub system: String,
+    /// Tensor-parallel degree.
+    pub tp: u64,
+    /// Pipeline-parallel degree.
+    pub pp: u64,
+    /// Batch size evaluated (`None` when the cell is unservable).
+    pub batch: Option<u64>,
+    /// Context length, tokens.
+    pub context: u64,
+    /// Per-user tokens/second (`None` when unservable).
+    pub utps: Option<f64>,
+    /// System tokens/second.
+    pub stps: Option<f64>,
+    /// System tokens/second/watt.
+    pub stps_per_watt: Option<f64>,
+    /// Total system power, watts.
+    pub watts: Option<f64>,
+    /// Full latency breakdown for servable cells.
+    pub lat: Option<LatencyBreakdown>,
+    /// Capacity required, bytes.
+    pub capacity_bytes: Option<f64>,
+}
+
+impl Record {
+    /// An unservable cell (dash in the paper's tables).
+    pub fn unservable(model: &str, system: &str, tp: u64, pp: u64, context: u64) -> Record {
+        Record {
+            model: model.into(),
+            chip: system.split("-TP").next().unwrap_or(system).into(),
+            system: system.into(),
+            tp,
+            pp,
+            batch: None,
+            context,
+            utps: None,
+            stps: None,
+            stps_per_watt: None,
+            watts: None,
+            lat: None,
+            capacity_bytes: None,
+        }
+    }
+
+    /// Build from an evaluation.
+    pub fn from_perf(
+        model: &str,
+        sys: &crate::hw::SystemConfig,
+        perf: &Perf,
+        watts: f64,
+    ) -> Record {
+        Record {
+            model: model.into(),
+            chip: sys.chip.name.clone(),
+            system: sys.label(),
+            tp: sys.tp,
+            pp: sys.pp,
+            batch: Some(perf.point.batch),
+            context: perf.point.context,
+            utps: Some(perf.utps),
+            stps: Some(perf.stps),
+            stps_per_watt: Some(perf.stps / watts),
+            watts: Some(watts),
+            lat: Some(perf.lat),
+            capacity_bytes: Some(perf.capacity_bytes),
+        }
+    }
+
+    /// True when this cell could be served.
+    pub fn servable(&self) -> bool {
+        self.utps.is_some()
+    }
+}

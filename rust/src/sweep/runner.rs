@@ -1,0 +1,196 @@
+//! Rayon-parallel sweep execution.
+
+use crate::apps::{Application, DecodePoint, Registry};
+use crate::hw::{Chip, SystemConfig};
+use crate::model::{evaluate, max_batch_for_system, EvalOptions};
+use crate::parallel::{fit_system, FitRequest};
+use crate::power::PowerModel;
+
+use super::{BatchSpec, Grid, Record};
+
+/// Executes sweep grids against the analytical model.
+#[derive(Clone)]
+pub struct SweepRunner {
+    /// Model registry used to resolve grid model names.
+    pub registry: Registry,
+    /// Evaluation options shared by all cells.
+    pub opts: EvalOptions,
+    /// Power model for STPS/W columns.
+    pub power: PowerModel,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner {
+            registry: Registry::builtin(),
+            opts: EvalOptions::default(),
+            power: PowerModel::default(),
+        }
+    }
+}
+
+impl SweepRunner {
+    /// Run the grid, producing one record per (cell, batch) pair, in a
+    /// deterministic order (axes iterate in declaration order).
+    pub fn run(&self, grid: &Grid) -> Vec<Record> {
+        // Cells are independent: fan out across threads, preserving order.
+        let cells: Vec<(String, Chip, u64, u64)> = grid
+            .models
+            .iter()
+            .flat_map(|m| {
+                grid.chips.iter().flat_map(move |c| {
+                    grid.tps.iter().flat_map(move |&tp| {
+                        grid.contexts
+                            .iter()
+                            .map(move |&ctx| (m.clone(), c.clone(), tp, ctx))
+                    })
+                })
+            })
+            .collect();
+
+        crate::util::par::parallel_map(cells, |(model, chip, tp, ctx)| {
+            self.run_cell(grid, model, chip, *tp, *ctx)
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Evaluate one (model, chip, tp, context) cell under the grid's
+    /// batch policy.
+    fn run_cell(
+        &self,
+        grid: &Grid,
+        model: &str,
+        chip: &Chip,
+        tp: u64,
+        context: u64,
+    ) -> Vec<Record> {
+        let Some(app) = self.registry.app(model) else {
+            return vec![Record::unservable(model, &format!("{}-TP{tp}", chip.name), tp, 1, context)];
+        };
+        let app: &dyn Application = app.as_ref();
+
+        let batches: Vec<Option<u64>> = match &grid.batch {
+            BatchSpec::Fixed(bs) => bs.iter().map(|&b| Some(b)).collect(),
+            BatchSpec::MaxFit => vec![None],
+            BatchSpec::OneAndMaxFit => vec![Some(1), None],
+        };
+
+        batches
+            .into_iter()
+            .map(|b| self.eval_one(grid, app, model, chip, tp, context, b))
+            .collect()
+    }
+
+    /// Evaluate one batch choice; `batch = None` means "max that fits".
+    fn eval_one(
+        &self,
+        grid: &Grid,
+        app: &dyn Application,
+        model: &str,
+        chip: &Chip,
+        tp: u64,
+        context: u64,
+        batch: Option<u64>,
+    ) -> Record {
+        // Size the system: PP grows to fit (SRAM/COWS) or is pinned to 1.
+        let probe = DecodePoint { batch: batch.unwrap_or(1), context };
+        let sys = if grid.fit_pp {
+            match fit_system(app, &FitRequest { tp: Some(tp), ..FitRequest::new(chip.clone(), probe) }) {
+                Ok(s) => s,
+                Err(_) => {
+                    return Record::unservable(
+                        model,
+                        &format!("{}-TP{tp}", chip.name),
+                        tp,
+                        0,
+                        context,
+                    )
+                }
+            }
+        } else {
+            SystemConfig::new(chip.clone(), tp, 1)
+        };
+
+        let b = match batch {
+            Some(b) => b,
+            None => match max_batch_for_system(app, &sys, context) {
+                Some(b) => b,
+                None => {
+                    return Record::unservable(model, &sys.label(), sys.tp, sys.pp, context)
+                }
+            },
+        };
+
+        let pt = DecodePoint { batch: b, context };
+        match evaluate(app, &sys, &pt, &self.opts) {
+            Ok(perf) => {
+                let watts = self.power.system_power(&sys).total_watts;
+                Record::from_perf(model, &sys, &perf, watts)
+            }
+            Err(_) => Record::unservable(model, &sys.label(), sys.tp, sys.pp, context),
+        }
+    }
+
+    /// Convenience: evaluate a single fully-specified point.
+    pub fn eval_point(
+        &self,
+        model: &str,
+        sys: &SystemConfig,
+        pt: &DecodePoint,
+    ) -> Option<Record> {
+        let app = self.registry.app(model)?;
+        match evaluate(app.as_ref(), sys, pt, &self.opts) {
+            Ok(perf) => {
+                let watts = self.power.system_power(sys).total_watts;
+                Some(Record::from_perf(model, sys, &perf, watts))
+            }
+            Err(_) => Some(Record::unservable(model, &sys.label(), sys.tp, sys.pp, pt.context)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn paper_grid_produces_two_records_per_cell() {
+        let runner = SweepRunner::default();
+        let grid = Grid::paper_models(presets::hbm3());
+        let recs = runner.run(&grid);
+        assert_eq!(recs.len(), grid.n_cells() * 2);
+    }
+
+    #[test]
+    fn order_is_deterministic() {
+        let runner = SweepRunner::default();
+        let mut grid = Grid::paper_models(presets::hbm3());
+        grid.contexts = vec![4096];
+        let a = runner.run(&grid);
+        let b = runner.run(&grid);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.system, y.system);
+            assert_eq!(x.utps, y.utps);
+        }
+    }
+
+    #[test]
+    fn unservable_cells_become_dashes() {
+        let runner = SweepRunner::default();
+        let grid = Grid {
+            models: vec!["deepseek-v3".into()],
+            chips: vec![presets::hbm3()],
+            tps: vec![2], // 192 GiB — cannot hold 625 GiB of weights
+            contexts: vec![4096],
+            batch: BatchSpec::Fixed(vec![1]),
+            fit_pp: false,
+        };
+        let recs = runner.run(&grid);
+        assert_eq!(recs.len(), 1);
+        assert!(!recs[0].servable());
+    }
+}

@@ -1,0 +1,135 @@
+//! Micro-benchmark harness for `cargo bench` (harness = false targets).
+//!
+//! Auto-calibrates iteration counts, reports min/median/mean per
+//! iteration, and honors the standard `cargo bench <filter>` argument so
+//! individual benches can be run in isolation. Results are also appended
+//! as JSON lines to `target/liminal-bench.jsonl` for the perf log.
+
+use std::hint::black_box;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// A bench suite: owns the CLI filter and the output sink.
+pub struct Suite {
+    filter: Option<String>,
+    sink: Option<std::fs::File>,
+}
+
+impl Suite {
+    /// Parse `cargo bench` style args (`--bench` is passed through by
+    /// cargo; a bare positional is the name filter).
+    pub fn from_args() -> Suite {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        let sink = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open("target/liminal-bench.jsonl")
+            .ok();
+        Suite { filter, sink }
+    }
+
+    /// Run one benchmark: calls `f` repeatedly, auto-scaling iterations,
+    /// and prints a one-line summary. Use [`black_box`] inside `f` on
+    /// inputs/outputs to defeat constant folding.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warm up + calibrate: find an iteration count that runs >= 20 ms.
+        let mut iters: u64 = 1;
+        let per_iter = loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= Duration::from_millis(20) || iters >= (1 << 30) {
+                break dt.as_secs_f64() / iters as f64;
+            }
+            let scale = (0.025 / dt.as_secs_f64().max(1e-9)).clamp(2.0, 100.0);
+            iters = ((iters as f64) * scale) as u64;
+        };
+
+        // Measure: 11 samples of the calibrated batch.
+        let mut samples: Vec<f64> = (0..11)
+            .map(|_| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let _ = per_iter; // calibration value; superseded by samples
+
+        println!(
+            "bench {name:<44} min {:>12} median {:>12} mean {:>12} ({iters} iters/sample)",
+            fmt_dur(min),
+            fmt_dur(median),
+            fmt_dur(mean)
+        );
+        if let Some(sink) = &mut self.sink {
+            let row = Json::obj(vec![
+                ("name", Json::Str(name.into())),
+                ("min_s", Json::Num(min)),
+                ("median_s", Json::Num(median)),
+                ("mean_s", Json::Num(mean)),
+                ("iters", Json::Num(iters as f64)),
+                (
+                    "unix_ms",
+                    Json::Num(
+                        std::time::SystemTime::now()
+                            .duration_since(std::time::UNIX_EPOCH)
+                            .map(|d| d.as_millis() as f64)
+                            .unwrap_or(0.0),
+                    ),
+                ),
+            ]);
+            let _ = writeln!(sink, "{row}");
+        }
+    }
+
+    /// Run a benchmark whose result must not be optimized away: `f`
+    /// returns a value which is black-boxed.
+    pub fn bench_val<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) {
+        self.bench(name, || {
+            black_box(f());
+        });
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_dur_picks_sane_units() {
+        assert_eq!(fmt_dur(2.5), "2.500 s");
+        assert_eq!(fmt_dur(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_dur(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_dur(25e-9), "25.0 ns");
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser for the `liminal` launcher.
+//!
+//! Supports `subcommand positional... --key value --key=value --flag`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (the first is the subcommand).
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; exits with a message on parse failure.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("eval llama3-70b --tp 8 --context=4096 --json");
+        assert_eq!(a.subcommand(), Some("eval"));
+        assert_eq!(a.positional[1], "llama3-70b");
+        assert_eq!(a.get("tp"), Some("8"));
+        assert_eq!(a.get("context"), Some("4096"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("eval --batch 4");
+        assert_eq!(a.get_parsed("batch", 1u64), 4);
+        assert_eq!(a.get_parsed("tp", 128u64), 128);
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse("x --offset -3");
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree substrate: small, dependency-free building blocks.
+//!
+//! This workspace builds fully offline, so everything beyond the xla
+//! PJRT bindings is implemented here rather than pulled from crates.io:
+//! a JSON value model + parser ([`json`]), a deterministic counter-based
+//! RNG ([`rng`]), a scoped-thread parallel map ([`par`]), a
+//! micro-benchmark harness ([`bench`]), and a CLI argument parser
+//! ([`cli`]). Each is deliberately minimal, documented, and tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;

@@ -1,0 +1,145 @@
+//! Deterministic pseudo-random numbers for the Monte-Carlo models.
+//!
+//! PCG32 (O'Neill 2014, `pcg32_xsh_rr`) seeded through SplitMix64 —
+//! small, fast, statistically solid for simulation workloads, and fully
+//! reproducible across platforms. Bounded sampling uses Lemire's
+//! nearly-divisionless rejection method (no modulo bias).
+
+/// PCG32: 64-bit state, 32-bit output, period 2^64.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed via SplitMix64 so similar seeds diverge immediately.
+    pub fn seed_from(seed: u64) -> Pcg32 {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let mut rng = Pcg32 { state: 0, inc: next() | 1 };
+        rng.state = next();
+        rng.next_u32();
+        rng
+    }
+
+    /// Next 32 uniformly random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection; `bound > 0`).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (bound as u64);
+            let lo = m as u32;
+            if lo >= bound {
+                return (m >> 32) as u32;
+            }
+            // Slow path: exact threshold check.
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponentially distributed f64 with the given rate.
+    #[inline]
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.f64()).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg32::seed_from(7);
+        let mut b = Pcg32::seed_from(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg32::seed_from(1);
+        let mut b = Pcg32::seed_from(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Pcg32::seed_from(42);
+        let mut counts = [0u32; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            // Expect 10_000 +- ~5 sigma (~500).
+            assert!((c as i64 - 10_000).abs() < 600, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn f64_is_unit_interval() {
+        let mut rng = Pcg32::seed_from(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn exp_has_expected_mean() {
+        let mut rng = Pcg32::seed_from(9);
+        let rate = 4.0;
+        let mean =
+            (0..20_000).map(|_| rng.exp(rate)).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.25).abs() < 0.02, "mean {mean}");
+    }
+}

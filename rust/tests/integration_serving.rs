@@ -1,0 +1,82 @@
+//! Serving-simulator integration at paper scale: the dynamic system
+//! reproduces the steady-state model's behavior under load.
+
+use std::sync::Arc;
+
+use liminal::apps::Registry;
+use liminal::hw::{presets, SystemConfig};
+use liminal::serving::{
+    AnalyticEngine, Batcher, KvBudget, ServingSim, SimConfig, WorkloadGen, WorkloadSpec,
+};
+
+fn run_70b(
+    tp: u64,
+    max_batch: usize,
+    rate: f64,
+    n: u64,
+) -> liminal::serving::ServingReport {
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-70b").unwrap();
+    let sys = SystemConfig::new(presets::hbm3(), tp, 1);
+    let kv = KvBudget::new(
+        sys.total_capacity(),
+        app.weight_bytes(),
+        app.kv_bytes_per_token(),
+    );
+    let batcher = Batcher::new(max_batch, kv);
+    let mut engine = AnalyticEngine::new(Arc::clone(&app), sys);
+    let workload = WorkloadGen::new(WorkloadSpec {
+        arrival_rate: rate,
+        n_requests: n,
+        context: (2048, 8192),
+        gen: (32, 128),
+        seed: 99,
+    })
+    .generate();
+    ServingSim::new(batcher, &mut engine, SimConfig::default()).run(workload)
+}
+
+#[test]
+fn light_load_gives_near_single_user_latency() {
+    // At trickle arrival rates, each user should see close to the
+    // steady-state single-user UTPS (457-486 for TP8 at these contexts).
+    let rep = run_70b(8, 32, 0.5, 20);
+    assert_eq!(rep.completed, 20);
+    assert!(rep.utps_mean > 350.0, "{}", rep.utps_mean);
+    assert!(rep.queue_delay_mean < 0.01, "{}", rep.queue_delay_mean);
+}
+
+#[test]
+fn saturation_trades_utps_for_stps() {
+    let light = run_70b(8, 64, 1.0, 40);
+    let heavy = run_70b(8, 64, 500.0, 40);
+    // Heavy load: more throughput, worse per-user rate.
+    assert!(heavy.stps > light.stps * 2.0, "{} vs {}", heavy.stps, light.stps);
+    assert!(heavy.utps_mean < light.utps_mean);
+    assert!(heavy.mean_batch > light.mean_batch);
+}
+
+#[test]
+fn small_batch_cap_creates_queueing() {
+    let capped = run_70b(8, 2, 200.0, 60);
+    let open = run_70b(8, 64, 200.0, 60);
+    assert!(capped.queue_delay_mean > 5.0 * open.queue_delay_mean.max(1e-6));
+    assert!(capped.stps < open.stps);
+}
+
+#[test]
+fn bigger_systems_serve_faster_dynamically() {
+    // The Table 2 scaling story holds under dynamic load too.
+    let tp8 = run_70b(8, 32, 100.0, 50);
+    let tp128 = run_70b(128, 32, 100.0, 50);
+    assert!(tp128.utps_mean > 2.0 * tp8.utps_mean);
+}
+
+#[test]
+fn all_tokens_accounted() {
+    let rep = run_70b(32, 16, 50.0, 30);
+    assert_eq!(rep.completed, 30);
+    // 30 requests x gen in [32, 128) -> tokens in a sane envelope.
+    assert!(rep.tokens >= 30 * 32 && rep.tokens < 30 * 128);
+    assert!(rep.steps as f64 >= rep.tokens as f64 / 16.0);
+}

@@ -1,0 +1,207 @@
+//! Property-based tests over the analytical core, driven by the in-tree
+//! deterministic RNG (randomized but fully reproducible: fixed seeds,
+//! many cases per property).
+
+use liminal::apps::{Application, DecodePoint, DeepSeekV3, Llama3, ModelSpec, Registry};
+use liminal::hw::{presets, Chip, SyncModel, SystemConfig};
+use liminal::model::{evaluate, max_batch_for_system, EvalOptions};
+use liminal::moe::imbalance_factor;
+use liminal::parallel::{fit_system, FitRequest};
+use liminal::util::json::Json;
+use liminal::util::rng::Pcg32;
+
+const CASES: usize = 200;
+
+/// Random dense model spec in a sane envelope.
+fn random_spec(rng: &mut Pcg32) -> ModelSpec {
+    let mut spec = ModelSpec::llama3_70b();
+    spec.name = "random".into();
+    spec.num_layers = rng.range(1, 160) as u64;
+    spec.num_dense_layers = spec.num_layers;
+    spec.embed_dim = 128 * rng.range(1, 160) as u64;
+    spec.kv_heads = 1 << rng.range(0, 4); // 1..8
+    spec.heads = spec.kv_heads * (1 << rng.range(0, 5)); // xGQA group
+    spec.head_dim = 64 * rng.range(1, 4) as u64;
+    spec.intermediate_dim = 256 * rng.range(1, 256) as u64;
+    spec.vocab = 1000 * rng.range(1, 200) as u64;
+    spec
+}
+
+fn random_chip(rng: &mut Pcg32) -> Chip {
+    let mut chip = presets::hbm3();
+    chip.mem_bw = 1e12 * (1.0 + rng.f64() * 120.0);
+    chip.tensor_flops = 1e14 * (1.0 + rng.f64() * 50.0);
+    chip.scalar_flops = chip.tensor_flops / 10.0;
+    chip.mem_capacity = liminal::GIB * (8.0 + rng.f64() * 256.0);
+    chip.sync = if rng.f64() < 0.5 {
+        SyncModel::Flat(rng.f64() * 10e-6)
+    } else {
+        SyncModel::paper_default()
+    };
+    chip
+}
+
+fn random_point(rng: &mut Pcg32) -> DecodePoint {
+    DecodePoint {
+        batch: 1 + rng.below(256) as u64,
+        context: 128 + rng.below(1 << 17) as u64,
+    }
+}
+
+/// t_batch is finite, positive, and >= each component.
+#[test]
+fn prop_latency_is_positive_and_dominates_components() {
+    let mut rng = Pcg32::seed_from(101);
+    let opts = EvalOptions { enforce_capacity: false, ..Default::default() };
+    for _ in 0..CASES {
+        let app = Llama3::new(random_spec(&mut rng));
+        let sys = SystemConfig::new(random_chip(&mut rng), 1 << rng.range(0, 8), 1 + rng.below(8) as u64);
+        let pt = random_point(&mut rng);
+        let p = evaluate(&app, &sys, &pt, &opts).unwrap();
+        assert!(p.lat.t_batch.is_finite() && p.lat.t_batch > 0.0);
+        assert!(p.lat.t_batch >= p.lat.t_mem || p.lat.t_batch >= p.lat.t_compute);
+        assert!(p.lat.t_batch >= p.lat.t_exposed);
+        assert!(p.utps > 0.0 && p.stps >= p.utps * 0.999);
+    }
+}
+
+/// UTPS is non-increasing in context (more KV bytes per step).
+#[test]
+fn prop_utps_monotone_in_context() {
+    let mut rng = Pcg32::seed_from(202);
+    let opts = EvalOptions { enforce_capacity: false, ..Default::default() };
+    for _ in 0..CASES {
+        let app = Llama3::new(random_spec(&mut rng));
+        let sys = SystemConfig::new(random_chip(&mut rng), 8, 1);
+        let b = 1 + rng.below(32) as u64;
+        let t1 = 128 + rng.below(1 << 16) as u64;
+        let t2 = t1 + 1 + rng.below(1 << 16) as u64;
+        let u1 = evaluate(&app, &sys, &DecodePoint { batch: b, context: t1 }, &opts)
+            .unwrap()
+            .utps;
+        let u2 = evaluate(&app, &sys, &DecodePoint { batch: b, context: t2 }, &opts)
+            .unwrap()
+            .utps;
+        assert!(u2 <= u1 * (1.0 + 1e-12), "T {t1}->{t2}: {u1} -> {u2}");
+    }
+}
+
+/// More TP never hurts memory/compute time; and with flat sync, UTPS is
+/// non-decreasing in TP.
+#[test]
+fn prop_tp_scaling_helps_under_flat_sync() {
+    let mut rng = Pcg32::seed_from(303);
+    let opts = EvalOptions { enforce_capacity: false, ..Default::default() };
+    for _ in 0..CASES {
+        let app = Llama3::new(random_spec(&mut rng));
+        let mut chip = random_chip(&mut rng);
+        chip.sync = SyncModel::Flat(rng.f64() * 2e-6);
+        // tp >= 2 on both sides: TP1 pays no collectives at all, so the
+        // 1 -> 2 step can legitimately lose to sync exposure.
+        let tp1 = 2u64 << rng.range(0, 6);
+        let tp2 = (tp1 * 2).min(128);
+        let pt = random_point(&mut rng);
+        let p1 = evaluate(&app, &SystemConfig::new(chip.clone(), tp1, 1), &pt, &opts).unwrap();
+        let p2 = evaluate(&app, &SystemConfig::new(chip, tp2, 1), &pt, &opts).unwrap();
+        assert!(p2.lat.t_mem <= p1.lat.t_mem * (1.0 + 1e-12));
+        assert!(p2.utps >= p1.utps * (1.0 - 1e-12), "tp {tp1}->{tp2}");
+    }
+}
+
+/// Capacity accounting: max_batch is maximal (B fits, B+1 does not).
+#[test]
+fn prop_max_batch_is_maximal() {
+    let mut rng = Pcg32::seed_from(404);
+    for _ in 0..CASES {
+        let app = Llama3::new(random_spec(&mut rng));
+        let sys = SystemConfig::new(random_chip(&mut rng), 1 << rng.range(0, 8), 1);
+        let ctx = 256 + rng.below(1 << 16) as u64;
+        match max_batch_for_system(&app, &sys, ctx) {
+            Some(b) => {
+                assert!(
+                    app.capacity_bytes(&DecodePoint { batch: b, context: ctx })
+                        <= sys.total_capacity()
+                );
+                assert!(
+                    app.capacity_bytes(&DecodePoint { batch: b + 1, context: ctx })
+                        > sys.total_capacity()
+                );
+            }
+            None => {
+                assert!(
+                    app.capacity_bytes(&DecodePoint { batch: 1, context: ctx })
+                        > sys.total_capacity()
+                );
+            }
+        }
+    }
+}
+
+/// fit_system always returns a system that actually fits, with minimal PP.
+#[test]
+fn prop_fit_system_is_sufficient_and_minimal() {
+    let mut rng = Pcg32::seed_from(505);
+    for _ in 0..CASES {
+        let app = Llama3::new(random_spec(&mut rng));
+        let chip = random_chip(&mut rng);
+        let pt = random_point(&mut rng);
+        let tp = 1u64 << rng.range(0, 8);
+        if let Ok(sys) = fit_system(&app, &FitRequest { tp: Some(tp), ..FitRequest::new(chip, pt) }) {
+            assert!(app.capacity_bytes(&pt) <= sys.total_capacity());
+            if sys.pp > 1 {
+                let smaller = SystemConfig::new(sys.chip.clone(), sys.tp, sys.pp - 1);
+                assert!(app.capacity_bytes(&pt) > smaller.total_capacity());
+            }
+        }
+    }
+}
+
+/// MoE imbalance factor is always in [1, B] and deterministic.
+#[test]
+fn prop_imbalance_bounds() {
+    let mut rng = Pcg32::seed_from(606);
+    for _ in 0..40 {
+        let b = 1 + rng.below(512) as u64;
+        let mi = imbalance_factor(256, 8, b);
+        assert!(mi >= 1.0 - 1e-12, "B={b} MI={mi}");
+        assert!(mi <= b as f64 + 1e-9, "B={b} MI={mi}");
+        assert_eq!(mi, imbalance_factor(256, 8, b));
+    }
+}
+
+/// DeepSeek capacity is always >= the same-shape dense accounting of its
+/// latent cache (sanity: MLA can only shrink KV, never grow it).
+#[test]
+fn prop_mla_cache_is_smaller_than_gqa() {
+    let ds = DeepSeekV3::v3();
+    let registry = Registry::builtin();
+    let l405 = registry.app("llama3-405b").unwrap();
+    // Per token per layer: MLA 576 B vs GQA 2048 B.
+    assert!(ds.kv_bytes_per_token_layer() < l405.kv_bytes_per_token_layer() / 3.0);
+}
+
+/// JSON writer/parser round-trip on random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg32, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 2e6).round() / 64.0 - 1e4),
+            3 => Json::Str(format!("s{}-\"quoted\"\n{}", rng.next_u32(), rng.next_u32())),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Pcg32::seed_from(707);
+    for _ in 0..CASES {
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(doc, back, "{text}");
+    }
+}
