@@ -1,7 +1,9 @@
 //! Serving simulation: dynamic continuous batching on a paper-scale
-//! system, showing how queueing + batching turn the paper's steady-state
-//! numbers into user-visible behavior — and, if AOT artifacts exist, the
-//! same scheduler driving the real PJRT decode engine.
+//! system, now covering the full request lifecycle — prompts are
+//! ingested in prefill chunks before decode, and the report carries the
+//! TTFT / TPOT / E2E SLO percentiles that steady-state tables cannot
+//! express. If AOT artifacts exist, the same scheduler also drives the
+//! real PJRT decode engine.
 //!
 //! Run with: cargo run --release --example serve_sim
 
@@ -9,7 +11,8 @@ use liminal::coordinator::{default_job, serve, Backend};
 use liminal::hw::{presets, SystemConfig};
 
 fn main() -> anyhow::Result<()> {
-    // Analytic backend: Llama3-70B on HBM3-TP128 under rising load.
+    // Analytic backend: Llama3-70B on HBM3-TP128 under rising load,
+    // prefill-aware (1024-token chunks by default).
     for rate in [50.0, 200.0, 800.0] {
         let sys = SystemConfig::new(presets::hbm3(), 128, 1);
         let mut job = default_job("llama3-70b", sys);
@@ -18,7 +21,22 @@ fn main() -> anyhow::Result<()> {
         job.max_batch = 64;
         let rep = serve(&job)?;
         println!("rate {rate:>5.0} req/s -> {}", rep.summary());
+        for line in rep.slo_summary().lines() {
+            println!("    {line}");
+        }
     }
+
+    // The same load with prefill disabled shows what the decode-only
+    // idealization hides: TTFT collapses to a single queue+step delay.
+    let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+    let mut job = default_job("llama3-70b", sys);
+    job.workload.arrival_rate = 200.0;
+    job.workload.n_requests = 300;
+    job.max_batch = 64;
+    job.prefill_chunk = 0;
+    let rep = serve(&job)?;
+    println!("decode-only baseline  -> {}", rep.summary());
+    println!("    TTFT p50 {:.4}s (no prefill modeled)", rep.ttft.p50);
 
     // PJRT backend: the real AOT decode step, if artifacts are built.
     if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -37,6 +37,28 @@ fn main() {
         ServingSim::new(batcher, &mut engine, SimConfig::default()).run(workload)
     });
 
+    // Prefill-aware run: same workload, prompts ingested in 1K chunks.
+    // Measures the DES + chunk-planner + mixed-step-pricing overhead.
+    suite.bench_val("serving/analytic_200req_prefill_sim", || {
+        let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+        let kv = KvBudget::new(
+            sys.total_capacity(),
+            app.weight_bytes(),
+            app.kv_bytes_per_token(),
+        );
+        let batcher = Batcher::with_prefill(64, kv, 1024);
+        let mut engine = AnalyticEngine::new(Arc::clone(&app), sys);
+        let workload = WorkloadGen::new(WorkloadSpec {
+            arrival_rate: 500.0,
+            n_requests: 200,
+            context: (1024, 8192),
+            gen: (16, 64),
+            seed: 3,
+        })
+        .generate();
+        ServingSim::new(batcher, &mut engine, SimConfig::default()).run(workload)
+    });
+
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let mut rt = Runtime::new(std::path::Path::new("artifacts")).unwrap();
         for batch in [1u64, 8] {

@@ -13,8 +13,8 @@
 //!   via the Monte-Carlo imbalance factor `MI` (see [`crate::moe`]).
 
 use super::{
-    Application, DecodePoint, MoeLatencyInputs, ModelSpec, OpCounts, Traffic, Workload,
-    NORM_FLOPS_PER_ELEM, SOFTMAX_OPS_PER_ELEM,
+    causal_attended, Application, DecodePoint, MoeLatencyInputs, ModelSpec, OpCounts,
+    PrefillPoint, Traffic, Workload, NORM_FLOPS_PER_ELEM, SOFTMAX_OPS_PER_ELEM,
 };
 
 /// The DeepSeekV3-671B MLA + MoE model.
@@ -179,6 +179,75 @@ impl Application for DeepSeekV3 {
         }
     }
 
+    /// Prefill: A.2's per-token projection/FFN/MoE math applied to `P`
+    /// new tokens per sequence, with absorbed-latent attention over the
+    /// causally attended prefix + chunk.
+    fn prefill_op_counts(&self, pt: &PrefillPoint) -> OpCounts {
+        let s = &self.spec;
+        let mla = s.mla.unwrap();
+        let moe = s.moe.unwrap();
+        let b = pt.batch as f64;
+        let p = pt.new_tokens as f64;
+        let attended = causal_attended(pt.past_tokens, pt.new_tokens);
+        let (d, h, v) = (
+            s.embed_dim as f64,
+            s.heads as f64,
+            s.intermediate_dim as f64,
+        );
+        let (f, g, r) = (mla.q_latent as f64, mla.kv_latent as f64, mla.rope_dim as f64);
+        let (ms, mr, ma) = (
+            moe.shared_experts as f64,
+            moe.routed_experts as f64,
+            moe.activated_experts as f64,
+        );
+
+        // Latent projections, per new token (A.2 with S = P).
+        let proj_flops = b * p * (f * d + g * d + r * d + f * h * g + f * h * r) * 2.0;
+
+        // Absorbed attention over attended positions + output projection.
+        let qk_flops = b * h * attended * (g + r) * 2.0;
+        let av_flops = b * h * attended * (g + r) * 2.0;
+        let out_flops = b * p * (h * g) * d * 2.0;
+        let attn_flops = qk_flops + av_flops + out_flops;
+
+        let ffn_flops = 3.0 * (b * p * d * v * 2.0);
+
+        // MoE: in prefill tokens are plentiful, so routed-expert work is
+        // `tokens * MA` expert-passes, floored at one pass per routed
+        // expert (the same per-expert minimum as decode).
+        let moe_per_token_flops = self.moe_per_token_flops();
+        let moe_router = b * p * d * mr * 2.0;
+        let moe_shared = ms * b * p * moe_per_token_flops;
+        let moe_routed = f64::max(b * p * ma, mr) * moe_per_token_flops;
+        let moe_flops = moe_router + moe_shared + moe_routed;
+
+        let softmax_scalar = b * h * attended * SOFTMAX_OPS_PER_ELEM;
+        let norm_scalar = 2.0 * b * p * d * NORM_FLOPS_PER_ELEM;
+
+        let dense_layer = proj_flops + attn_flops + ffn_flops;
+        let moe_layer = proj_flops + attn_flops + moe_flops;
+        let nd = s.num_dense_layers as f64;
+        let nm = s.num_moe_layers() as f64;
+        OpCounts {
+            tensor: dense_layer * nd + moe_layer * nm,
+            scalar: (softmax_scalar + norm_scalar) * (nd + nm),
+        }
+    }
+
+    /// Prefill traffic: weights once per chunk, the cached latent prefix
+    /// re-read, and the chunk's `(G + R)`-dim latents written back.
+    fn prefill_traffic(&self, pt: &PrefillPoint) -> Traffic {
+        let s = &self.spec;
+        let b = pt.batch as f64;
+        let per_tok_layer = self.kv_bytes_per_token_layer();
+        let layers = s.num_layers as f64;
+        Traffic {
+            weight_rd_bytes: self.weight_bytes(),
+            kv_rd_bytes: b * pt.past_tokens as f64 * per_tok_layer * layers,
+            kv_wr_bytes: b * pt.new_tokens as f64 * per_tok_layer * layers,
+        }
+    }
+
     fn workload(&self, pt: &DecodePoint) -> Workload {
         let moe = self.spec.moe.unwrap();
         Workload {
@@ -193,6 +262,31 @@ impl Application for DeepSeekV3 {
                 activated_experts: moe.activated_experts,
                 per_token_flops: self.moe_per_token_flops(),
                 batch: pt.batch,
+            }),
+        }
+    }
+
+    fn prefill_workload(&self, pt: &PrefillPoint) -> Workload {
+        // Prefill routes `B * P` tokens at once, so the imbalance model
+        // sees the chunk's full token count as its "batch".
+        let moe = self.spec.moe.unwrap();
+        let tokens = pt.batch.saturating_mul(pt.new_tokens).max(1);
+        Workload {
+            ops: self.prefill_op_counts(pt),
+            traffic: self.prefill_traffic(pt),
+            sync_ops_per_layer: 3.0,
+            num_layers: self.spec.num_layers,
+            num_moe_layers: self.spec.num_moe_layers(),
+            moe: Some(MoeLatencyInputs {
+                avg_tok_per_routed_expert: f64::max(
+                    tokens as f64 * moe.activated_experts as f64
+                        / moe.routed_experts as f64,
+                    1.0,
+                ),
+                routed_experts: moe.routed_experts,
+                activated_experts: moe.activated_experts,
+                per_token_flops: self.moe_per_token_flops(),
+                batch: tokens,
             }),
         }
     }
@@ -251,6 +345,49 @@ mod tests {
         assert_eq!(m.moe_avg_tok_per_routed_expert(32), 1.0);
         assert_eq!(m.moe_avg_tok_per_routed_expert(64), 2.0);
         assert_eq!(m.moe_avg_tok_per_routed_expert(1024), 32.0);
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_attention_flops() {
+        // Projection/FFN terms are linear in the chunk size and the
+        // causal-attention term telescopes, so splitting a prompt into
+        // chunks conserves everything except the routed-expert floor
+        // (small chunks can under-fill the 256 experts).
+        let m = DeepSeekV3::v3();
+        let whole = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 2048,
+            past_tokens: 0,
+        });
+        let c1 = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 1024,
+            past_tokens: 0,
+        });
+        let c2 = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 1024,
+            past_tokens: 1024,
+        });
+        let split = c1.add(c2);
+        // 1024 tokens * 8 activations >> 256 experts, so the floor never
+        // binds here and the counts match exactly.
+        assert!((whole.tensor - split.tensor).abs() / whole.tensor < 1e-12);
+        assert!((whole.scalar - split.scalar).abs() / whole.scalar < 1e-12);
+    }
+
+    #[test]
+    fn prefill_workload_routes_chunk_tokens_through_moe() {
+        let m = DeepSeekV3::v3();
+        let wl = m.prefill_workload(&PrefillPoint {
+            batch: 1,
+            new_tokens: 1024,
+            past_tokens: 0,
+        });
+        let moe = wl.moe.unwrap();
+        assert_eq!(moe.batch, 1024);
+        // 1024 tokens * 8 active / 256 experts = 32 tokens per expert.
+        assert!((moe.avg_tok_per_routed_expert - 32.0).abs() < 1e-12);
     }
 
     #[test]

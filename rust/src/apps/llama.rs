@@ -5,8 +5,8 @@
 //! projection, and a SwiGLU FFN (gate/up/down). At decode, `S = 1`.
 
 use super::{
-    Application, DecodePoint, ModelSpec, OpCounts, Traffic, NORM_FLOPS_PER_ELEM,
-    SOFTMAX_OPS_PER_ELEM,
+    causal_attended, Application, DecodePoint, ModelSpec, OpCounts, PrefillPoint,
+    Traffic, NORM_FLOPS_PER_ELEM, SOFTMAX_OPS_PER_ELEM,
 };
 
 /// A Llama-3-family dense model (70B or 405B in the paper).
@@ -129,6 +129,57 @@ impl Application for Llama3 {
             kv_wr_bytes: b * 1.0 * per_tok_layer * layers,
         }
     }
+
+    /// Prefill: the same per-layer operators as decode but with `P` new
+    /// tokens per sequence, and causally-masked attention over the
+    /// already-cached prefix plus the chunk itself.
+    fn prefill_op_counts(&self, pt: &PrefillPoint) -> OpCounts {
+        let s = &self.spec;
+        let b = pt.batch as f64;
+        let p = pt.new_tokens as f64;
+        let attended = causal_attended(pt.past_tokens, pt.new_tokens);
+        let (d, h, k, e, v) = (
+            s.embed_dim as f64,
+            s.heads as f64,
+            s.kv_heads as f64,
+            s.head_dim as f64,
+            s.intermediate_dim as f64,
+        );
+
+        // Projections and FFN scale with the new tokens (A.1 with S = P).
+        let qkv_flops = b * p * (h + 2.0 * k) * d * e * 2.0;
+        let out_flops = b * p * (h * e) * d * 2.0;
+        let ffn_flops = 3.0 * b * p * d * v * 2.0;
+
+        // QK^T and AV scale with attended key positions per head.
+        let qk_flops = b * h * attended * e * 2.0;
+        let av_flops = b * h * attended * e * 2.0;
+
+        let softmax_scalar = b * h * attended * SOFTMAX_OPS_PER_ELEM;
+        let norm_scalar = 2.0 * b * p * d * NORM_FLOPS_PER_ELEM;
+
+        let layers = s.num_layers as f64;
+        OpCounts {
+            tensor: (qkv_flops + qk_flops + av_flops + out_flops + ffn_flops) * layers,
+            scalar: (softmax_scalar + norm_scalar) * layers,
+        }
+    }
+
+    /// Prefill traffic: one pass over the weights for the chunk, the
+    /// cached prefix re-read for attention, and the chunk's KV written.
+    /// The chunk's own K/V is consumed out of on-chip storage by the
+    /// fused attention kernel (limit-study idealization).
+    fn prefill_traffic(&self, pt: &PrefillPoint) -> Traffic {
+        let s = &self.spec;
+        let b = pt.batch as f64;
+        let per_tok_layer = self.kv_bytes_per_token_layer();
+        let layers = s.num_layers as f64;
+        Traffic {
+            weight_rd_bytes: self.weight_bytes(),
+            kv_rd_bytes: b * pt.past_tokens as f64 * per_tok_layer * layers,
+            kv_wr_bytes: b * pt.new_tokens as f64 * per_tok_layer * layers,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -205,5 +256,61 @@ mod tests {
         let o4 = m.op_counts(&DecodePoint { batch: 4, context: 8192 });
         assert!((o4.tensor / o1.tensor - 4.0).abs() < 1e-9);
         assert!((o4.scalar / o1.scalar - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_flops() {
+        // Splitting a 4K prompt into two 2K chunks must cost exactly the
+        // same tensor FLOPs as the one-shot prefill (causal attention
+        // over the prefix is what the second chunk re-pays in reads, not
+        // in math).
+        let m = Llama3::llama3_70b();
+        let whole = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 4096,
+            past_tokens: 0,
+        });
+        let c1 = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 2048,
+            past_tokens: 0,
+        });
+        let c2 = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 2048,
+            past_tokens: 2048,
+        });
+        let split = c1.add(c2);
+        assert!((whole.tensor - split.tensor).abs() / whole.tensor < 1e-12);
+        assert!((whole.scalar - split.scalar).abs() / whole.scalar < 1e-12);
+    }
+
+    #[test]
+    fn prefill_flops_dwarf_decode_flops_per_step() {
+        // A 1K-token prefill chunk performs ~1000x the matmul work of a
+        // single decode token — the reason prefill steps go compute
+        // bound while decode stays memory bound.
+        let m = Llama3::llama3_70b();
+        let pre = m.prefill_op_counts(&PrefillPoint {
+            batch: 1,
+            new_tokens: 1024,
+            past_tokens: 0,
+        });
+        let dec = m.op_counts(&DecodePoint { batch: 1, context: 1024 });
+        assert!(pre.tensor > 900.0 * dec.tensor, "{} vs {}", pre.tensor, dec.tensor);
+    }
+
+    #[test]
+    fn prefill_traffic_writes_chunk_and_rereads_prefix() {
+        let m = Llama3::llama3_70b();
+        let t = m.prefill_traffic(&PrefillPoint {
+            batch: 2,
+            new_tokens: 512,
+            past_tokens: 1024,
+        });
+        let per_tok = m.kv_bytes_per_token();
+        assert_eq!(t.kv_wr_bytes, 2.0 * 512.0 * per_tok);
+        assert_eq!(t.kv_rd_bytes, 2.0 * 1024.0 * per_tok);
+        assert_eq!(t.weight_rd_bytes, m.weight_bytes());
     }
 }

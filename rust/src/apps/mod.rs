@@ -41,6 +41,32 @@ pub struct DecodePoint {
     pub context: u64,
 }
 
+/// A prefill-phase working point: `B` sequences each ingesting
+/// `new_tokens` prompt tokens on top of `past_tokens` already resident
+/// in the KV cache (`past_tokens > 0` models a later chunk of a chunked
+/// prefill; `0` is the first chunk of a fresh prompt).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillPoint {
+    /// Sequences prefilling together.
+    pub batch: u64,
+    /// New prompt tokens ingested per sequence this step.
+    pub new_tokens: u64,
+    /// Tokens already in the KV cache per sequence (earlier chunks).
+    pub past_tokens: u64,
+}
+
+/// Total attended key positions for `new` causally-masked query tokens
+/// appended after `past` cached tokens:
+/// `sum_{i=1..new} (past + i) = new*past + new*(new+1)/2`.
+///
+/// This is the exact quantity that makes chunked prefill conserve
+/// attention FLOPs: splitting a prompt into chunks leaves the sum over
+/// chunks identical to the one-shot value.
+pub fn causal_attended(past: u64, new: u64) -> f64 {
+    let (p, n) = (past as f64, new as f64);
+    n * p + n * (n + 1.0) / 2.0
+}
+
 /// An LLM architecture the model can analyze.
 ///
 /// Implementations translate the architecture hyper-parameters (paper
@@ -71,6 +97,29 @@ pub trait Application: Send + Sync {
 
     /// Memory traffic for one decode step at `pt`.
     fn traffic(&self, pt: &DecodePoint) -> Traffic;
+
+    /// Tensor + scalar op counts for one prefill chunk at `pt`: the
+    /// full projection/FFN matmuls for every new prompt token plus
+    /// causally-masked attention over `past + new` positions.
+    fn prefill_op_counts(&self, pt: &PrefillPoint) -> OpCounts;
+
+    /// Memory traffic for one prefill chunk at `pt`. Weights stream
+    /// once per chunk (which is exactly the cost chunked prefill trades
+    /// against step-latency isolation); the chunk's KV is written back
+    /// and earlier chunks' KV is re-read for attention.
+    fn prefill_traffic(&self, pt: &PrefillPoint) -> Traffic;
+
+    /// Complete workload description for one prefill chunk.
+    fn prefill_workload(&self, pt: &PrefillPoint) -> Workload {
+        Workload {
+            ops: self.prefill_op_counts(pt),
+            traffic: self.prefill_traffic(pt),
+            sync_ops_per_layer: 3.0,
+            num_layers: self.spec().num_layers,
+            num_moe_layers: self.spec().num_moe_layers(),
+            moe: None,
+        }
+    }
 
     /// Complete workload description for one decode step.
     fn workload(&self, pt: &DecodePoint) -> Workload {

@@ -49,6 +49,18 @@ impl Traffic {
     pub fn total_rd_bytes(&self) -> f64 {
         self.weight_rd_bytes + self.kv_rd_bytes + self.kv_wr_bytes
     }
+
+    /// Combine the traffic of two workloads fused into a single engine
+    /// step (e.g. chunked prefill riding along with decode): KV streams
+    /// add, but the weights stream only once — every lane of the fused
+    /// step shares the same pass over the parameters.
+    pub fn fuse(self, other: Traffic) -> Traffic {
+        Traffic {
+            weight_rd_bytes: self.weight_rd_bytes.max(other.weight_rd_bytes),
+            kv_rd_bytes: self.kv_rd_bytes + other.kv_rd_bytes,
+            kv_wr_bytes: self.kv_wr_bytes + other.kv_wr_bytes,
+        }
+    }
 }
 
 /// Inputs the latency model needs to expose MoE routing + imbalance

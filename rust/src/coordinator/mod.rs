@@ -38,6 +38,9 @@ pub struct ServeJob {
     pub workload: WorkloadSpec,
     /// Max concurrent sequences.
     pub max_batch: usize,
+    /// Prefill chunk size in tokens; 0 reverts to the decode-only
+    /// assumption (prompts prefilled elsewhere).
+    pub prefill_chunk: u64,
     /// Backend choice.
     pub backend: Backend,
     /// Artifact directory (PJRT backend).
@@ -52,6 +55,9 @@ pub fn serve(job: &ServeJob) -> Result<ServingReport> {
         .with_context(|| format!("unknown model {}", job.model))?;
 
     let workload = WorkloadGen::new(job.workload.clone()).generate();
+    // prefill_chunk = 0 degrades to the decode-only batcher.
+    let make_batcher =
+        |max_batch: usize, kv: KvBudget| Batcher::with_prefill(max_batch, kv, job.prefill_chunk);
     match job.backend {
         Backend::Analytic => {
             let kv = KvBudget::new(
@@ -59,7 +65,7 @@ pub fn serve(job: &ServeJob) -> Result<ServingReport> {
                 app.weight_bytes(),
                 app.kv_bytes_per_token(),
             );
-            let batcher = Batcher::new(job.max_batch, kv);
+            let batcher = make_batcher(job.max_batch, kv);
             let mut engine = AnalyticEngine::new(app, job.sys.clone());
             Ok(ServingSim::new(batcher, &mut engine, SimConfig::default())
                 .run(workload))
@@ -81,7 +87,7 @@ pub fn serve(job: &ServeJob) -> Result<ServingReport> {
                 0.0,
                 1.0,
             );
-            let batcher = Batcher::new(engine.batch as usize, kv);
+            let batcher = make_batcher(engine.batch as usize, kv);
             let dyn_engine: &mut dyn StepEngine = &mut engine;
             Ok(ServingSim::new(batcher, dyn_engine, SimConfig::default())
                 .run(wl))
@@ -89,13 +95,15 @@ pub fn serve(job: &ServeJob) -> Result<ServingReport> {
     }
 }
 
-/// Convenience builder used by the CLI and examples.
+/// Convenience builder used by the CLI and examples. Prefill-aware by
+/// default; set `prefill_chunk = 0` for the decode-only legacy mode.
 pub fn default_job(model: &str, sys: SystemConfig) -> ServeJob {
     ServeJob {
         model: model.to_string(),
         sys,
         workload: WorkloadSpec::default(),
         max_batch: 32,
+        prefill_chunk: crate::model::DEFAULT_PREFILL_CHUNK,
         backend: Backend::Analytic,
         artifact_dir: std::path::PathBuf::from("artifacts"),
     }
@@ -120,6 +128,22 @@ mod tests {
         // Each user's decode rate is bounded by the single-user UTPS.
         assert!(rep.utps_mean <= 2100.0);
         assert!(rep.stps > rep.utps_mean * 0.9);
+        // Prefill-aware by default: prompts were actually ingested and
+        // every request saw a strictly positive TTFT.
+        assert!(rep.prefill_tokens > 0);
+        assert!(rep.ttft.p50 > 0.0);
+        assert!(rep.e2e.p99 >= rep.ttft.p99);
+    }
+
+    #[test]
+    fn decode_only_mode_still_supported() {
+        let sys = SystemConfig::new(presets::hbm3(), 128, 1);
+        let mut job = default_job("llama3-70b", sys);
+        job.prefill_chunk = 0;
+        job.workload.n_requests = 10;
+        let rep = serve(&job).unwrap();
+        assert_eq!(rep.completed, 10);
+        assert_eq!(rep.prefill_tokens, 0);
     }
 
     #[test]

@@ -32,10 +32,13 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse: BinaryHeap is a max-heap, we want earliest-first.
+        // `total_cmp` keeps the order total even for exotic floats; a
+        // `partial_cmp().unwrap_or(Equal)` fallback would silently
+        // corrupt the heap invariant if a NaN ever reached it. NaN is
+        // additionally rejected at the `schedule_at` boundary.
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -65,7 +68,14 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `event` at absolute time `at` (must be >= now).
+    ///
+    /// Panics on NaN or negative times: both indicate a latency model
+    /// returning garbage, and admitting them would corrupt the calendar
+    /// order (`+inf` is allowed — it models "never", and the driver's
+    /// `max_time` guard handles it).
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        assert!(!at.is_nan(), "schedule_at: NaN event time");
+        assert!(at >= 0.0, "schedule_at: negative event time {at}");
         debug_assert!(at >= self.now, "scheduling into the past");
         self.heap.push(Scheduled { at: at.max(self.now), seq: self.seq, event });
         self.seq += 1;
@@ -135,6 +145,32 @@ mod tests {
         assert!(t1 <= t2);
         assert_eq!(q.now(), 5.0);
         assert_eq!(q.fired(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_times_are_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn negative_times_are_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(-1.0, ());
+    }
+
+    #[test]
+    fn infinite_times_sort_last() {
+        // +inf is a legal "never" sentinel; it must sort after every
+        // finite event instead of corrupting the heap.
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, "never");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "never"]);
     }
 
     #[test]

@@ -10,6 +10,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod findings;
+mod software_gap;
 mod table1;
 mod table2;
 mod table4;
@@ -18,6 +19,9 @@ mod validation;
 
 pub use cent::{cent_pp_record, cent_tp_record};
 pub use findings::run_findings;
+pub use software_gap::{
+    run as run_software_gap, PAPER_COMMERCIAL_GAP, PAPER_H100_GEMV_GAP,
+};
 pub use validation::{run_validation, ValidationOptions};
 
 use crate::report::Report;
@@ -27,7 +31,7 @@ use crate::Result;
 pub const ALL: &[&str] = &[
     "table1", "table2", "table4", "table5", "table6", "table7",
     "fig2", "fig3", "fig4", "fig5", "fig6", "findings", "moe-imbalance",
-    "compute-role",
+    "compute-role", "software-gap",
 ];
 
 /// Run one experiment by id. `artifact_dir` is used by experiments that
@@ -50,6 +54,7 @@ pub fn run(id: &str, artifact_dir: &std::path::Path) -> Result<Report> {
         "fig5" => fig5::run(),
         "fig6" => fig6::run(),
         "findings" => findings::run_findings(),
+        "software-gap" => software_gap::run(),
         "moe-imbalance" => moe_imbalance(),
         _ => anyhow::bail!(
             "unknown experiment '{id}' (known: {})",

@@ -1,0 +1,185 @@
+//! Appendix E analog, run through the serving simulator: how much
+//! per-step software overhead explains the gap between LIMINAL's limit
+//! numbers and executed systems.
+//!
+//! The paper validates LIMINAL against real executions and finds the
+//! limit study is an upper bound: ~2.3x optimistic against its
+//! commercial-chip simulator and ~5x on the H100 GEMV microbenchmark
+//! (Appendix E), with a 7.6% mean absolute error once software effects
+//! are modeled. This experiment closes the loop inside the repo: we
+//! sweep a per-step software overhead through the *dynamic* serving
+//! simulator and check the DES-measured throughput degradation against
+//! the closed-form prediction `(t_ideal + overhead) / t_ideal` — then
+//! report which overhead reproduces the paper's observed gaps, and what
+//! that overhead does to the TTFT/TPOT SLOs of a prefill-aware run.
+
+use std::sync::Arc;
+
+use crate::apps::{DecodePoint, Registry};
+use crate::hw::{presets, SystemConfig};
+use crate::model::{evaluate, EvalOptions, DEFAULT_PREFILL_CHUNK};
+use crate::report::{Report, Table};
+use crate::serving::{
+    AnalyticEngine, Batcher, KvBudget, ServingReport, ServingSim, SimConfig,
+    WorkloadGen, WorkloadSpec,
+};
+use crate::Result;
+
+/// Paper-reported gap of LIMINAL vs. the anonymized commercial-chip
+/// simulator (Appendix E).
+pub const PAPER_COMMERCIAL_GAP: f64 = 2.3;
+
+/// Paper-reported gap of LIMINAL vs. the measured H100 GEMV.
+pub const PAPER_H100_GEMV_GAP: f64 = 5.0;
+
+fn run_sim(overhead: f64, prefill_chunk: u64) -> ServingReport {
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-70b").unwrap();
+    let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+    let kv = KvBudget::new(
+        sys.total_capacity(),
+        app.weight_bytes(),
+        app.kv_bytes_per_token(),
+    );
+    // Single-lane service at a trickle arrival rate: residence time is
+    // then pure step latency, which is what the closed form predicts.
+    // (prefill_chunk = 0 degrades to the decode-only batcher.)
+    let batcher = Batcher::with_prefill(1, kv, prefill_chunk);
+    let mut engine = AnalyticEngine::new(Arc::clone(&app), sys);
+    engine.opts.software_overhead = overhead;
+    let workload = WorkloadGen::new(WorkloadSpec {
+        arrival_rate: 0.5,
+        n_requests: 20,
+        context: (4096, 4097),
+        gen: (64, 65),
+        seed: 11,
+    })
+    .generate();
+    ServingSim::new(batcher, &mut engine, SimConfig::default()).run(workload)
+}
+
+/// Ideal (zero-overhead) per-token decode latency for the study system.
+fn ideal_step_latency() -> f64 {
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-70b").unwrap();
+    let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+    evaluate(
+        app.as_ref(),
+        &sys,
+        &DecodePoint { batch: 1, context: 4096 },
+        &EvalOptions::default(),
+    )
+    .unwrap()
+    .lat
+    .t_batch
+}
+
+/// Run the software-gap study; returns the Appendix E analog report.
+pub fn run() -> Result<Report> {
+    let mut report = Report::new(
+        "software-gap",
+        "Software overhead vs. the paper's Appendix E validation gaps",
+    );
+    let t_ideal = ideal_step_latency();
+    report.notes.push(format!(
+        "Study system: Llama3-70B on xPU-HBM3 TP8; ideal decode step \
+         {:.3} ms (paper Table 2: ~486 UTPS).",
+        t_ideal * 1e3
+    ));
+    report.notes.push(format!(
+        "Paper Appendix E: LIMINAL is ~{PAPER_COMMERCIAL_GAP}x optimistic vs. a \
+         commercial-chip simulator and ~{PAPER_H100_GEMV_GAP}x vs. the measured \
+         H100 GEMV; overheads of {:.2} ms and {:.2} ms per step reproduce \
+         those gaps on this system.",
+        (PAPER_COMMERCIAL_GAP - 1.0) * t_ideal * 1e3,
+        (PAPER_H100_GEMV_GAP - 1.0) * t_ideal * 1e3,
+    ));
+
+    let mut t = Table::new(
+        "Decode throughput degradation vs. per-step software overhead",
+        &[
+            "overhead/step",
+            "predicted slowdown",
+            "DES slowdown",
+            "DES UTPS mean",
+        ],
+    );
+    let ideal_utps = run_sim(0.0, 0).utps_mean;
+    for gap in [1.0, 1.5, PAPER_COMMERCIAL_GAP, PAPER_H100_GEMV_GAP] {
+        let overhead = (gap - 1.0) * t_ideal;
+        let rep = run_sim(overhead, 0);
+        let des_gap = ideal_utps / rep.utps_mean;
+        t.push_row(vec![
+            format!("{:.3} ms", overhead * 1e3),
+            format!("{gap:.2}x"),
+            format!("{des_gap:.2}x"),
+            format!("{:.1}", rep.utps_mean),
+        ]);
+    }
+    report.tables.push(t);
+
+    let mut slo = Table::new(
+        "SLO impact (prefill-aware run, chunk 1024)",
+        &["overhead/step", "TTFT p50", "TTFT p99", "TPOT p50", "E2E p50"],
+    );
+    for gap in [1.0, PAPER_COMMERCIAL_GAP] {
+        let overhead = (gap - 1.0) * t_ideal;
+        let rep = run_sim(overhead, DEFAULT_PREFILL_CHUNK);
+        slo.push_row(vec![
+            format!("{:.3} ms", overhead * 1e3),
+            format!("{:.1} ms", rep.ttft.p50 * 1e3),
+            format!("{:.1} ms", rep.ttft.p99 * 1e3),
+            format!("{:.2} ms", rep.tpot.p50 * 1e3),
+            format!("{:.3} s", rep.e2e.p50),
+        ]);
+    }
+    report.tables.push(slo);
+    report.notes.push(
+        "The DES slowdown tracks the closed form because under trickle \
+         load the simulator degenerates to steady-state stepping — the \
+         dynamic machinery adds queueing and batching effects only when \
+         load does."
+            .into(),
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn des_degradation_matches_closed_form() {
+        // The dynamic simulator must reproduce the analytical slowdown
+        // under single-lane trickle load: this validates the DES
+        // against the model it wraps (and would catch free-token /
+        // mispriced-step fidelity bugs immediately).
+        let t_ideal = ideal_step_latency();
+        let ideal = run_sim(0.0, 0).utps_mean;
+        for gap in [1.5, PAPER_COMMERCIAL_GAP] {
+            let rep = run_sim((gap - 1.0) * t_ideal, 0);
+            let des_gap = ideal / rep.utps_mean;
+            assert!(
+                (des_gap - gap).abs() / gap < 0.05,
+                "gap {gap}: DES says {des_gap}"
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_inflates_ttft_and_tpot() {
+        let t_ideal = ideal_step_latency();
+        let clean = run_sim(0.0, DEFAULT_PREFILL_CHUNK);
+        let slow = run_sim((PAPER_COMMERCIAL_GAP - 1.0) * t_ideal, DEFAULT_PREFILL_CHUNK);
+        assert!(slow.ttft.p50 > clean.ttft.p50);
+        assert!(slow.tpot.p50 > clean.tpot.p50 * 1.5);
+        assert!(clean.ttft.p50 > 0.0);
+    }
+
+    #[test]
+    fn report_renders_with_both_tables() {
+        let r = run().unwrap();
+        assert_eq!(r.tables.len(), 2);
+        assert!(r.to_markdown().contains("Appendix E") || !r.notes.is_empty());
+    }
+}

@@ -10,6 +10,7 @@
 //! liminal findings                     # Key Findings 1-10 pass/fail
 //! liminal serve <model> [--chip hbm3] [--tp 128] [--backend analytic|pjrt]
 //!               [--requests 100] [--rate 10] [--max-batch 32]
+//!               [--prefill-chunk 1024]
 //! liminal validate [--artifacts artifacts]
 //! ```
 
@@ -59,6 +60,7 @@ USAGE:
   liminal findings
   liminal serve <model> [--chip hbm3] [--tp N] [--backend analytic|pjrt]
                [--requests N] [--rate R] [--max-batch B] [--artifacts DIR]
+               [--prefill-chunk N  (0 = decode-only)]
   liminal validate [--artifacts DIR]
 ";
 
@@ -321,6 +323,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let sys = SystemConfig::new(chip, tp, args.get_parsed("pp", 1u64));
     let mut job = coordinator::default_job(model, sys);
     job.max_batch = args.get_parsed("max-batch", 32usize);
+    job.prefill_chunk = args.get_parsed("prefill-chunk", job.prefill_chunk);
     job.workload.n_requests = args.get_parsed("requests", 100u64);
     job.workload.arrival_rate = args.get_parsed("rate", 10.0f64);
     job.artifact_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
@@ -331,6 +334,7 @@ fn cmd_serve(args: &Args) -> i32 {
     match coordinator::serve(&job) {
         Ok(report) => {
             println!("{}", report.summary());
+            println!("{}", report.slo_summary());
             0
         }
         Err(e) => {

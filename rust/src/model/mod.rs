@@ -12,12 +12,26 @@
 //! T_batch   = max(T_compute, T_mem) + T_exposed
 //! UTPS      = 1 / T_batch          STPS = N_PP * B / T_batch
 //! ```
+//!
+//! The same roofline prices prefill ([`evaluate_prefill`],
+//! [`chunked_prefill`]): a prompt chunk re-uses each streamed weight
+//! once per new token, so prefill is compute-bound where decode is
+//! memory-bound — the asymmetry the serving simulator's TTFT/TPOT
+//! split measures.
 
 mod capacity;
 mod latency;
+mod prefill;
 
 pub use capacity::{max_batch_for_system, CapacityError};
 pub use latency::{evaluate, evaluate_workload, Boundedness, EvalOptions, LatencyBreakdown, Perf};
+pub use prefill::{
+    chunked_prefill, evaluate_prefill, PrefillEstimate, PrefillPerf,
+    DEFAULT_PREFILL_CHUNK,
+};
 
 /// A decode working point; alias of [`crate::apps::DecodePoint`].
 pub type EvalPoint = crate::apps::DecodePoint;
+
+/// A prefill working point; alias of [`crate::apps::PrefillPoint`].
+pub type PrefillEvalPoint = crate::apps::PrefillPoint;

@@ -1,0 +1,229 @@
+//! Prefill latency model: the compute-bound counterpart of the decode
+//! limit study.
+//!
+//! Decode moves the whole model past a handful of tokens, so it lives
+//! on the memory roofline; prefill pushes hundreds of prompt tokens
+//! through every matmul at once, re-using each streamed weight `P`
+//! times, so it lives on the tensor roofline. Both phases share the
+//! same machinery: an [`Application`] renders a
+//! [`Workload`](crate::apps::Workload) (ops + traffic + sync needs) and
+//! [`evaluate_workload`] prices it as
+//! `max(T_compute, T_mem) + T_exposed`.
+//!
+//! Chunked prefill ([`chunked_prefill`]) splits a prompt into fixed-size
+//! chunks, the standard serving-engine trick (vLLM/Sarathi) that bounds
+//! how long a prefill can stall co-scheduled decode lanes. Chunking
+//! conserves attention FLOPs exactly (see
+//! [`causal_attended`](crate::apps::causal_attended)) but re-streams the
+//! weights once per chunk — the model makes that trade measurable.
+
+use crate::apps::{Application, DecodePoint, PrefillPoint};
+use crate::hw::SystemConfig;
+
+use super::{evaluate_workload, Boundedness, EvalOptions, LatencyBreakdown};
+
+/// Default prefill chunk size in tokens, in the range production
+/// serving engines use (512–2048): large enough that chunks are
+/// compute-bound on every DRAM preset, small enough to bound the step
+/// latency seen by co-scheduled decode lanes.
+pub const DEFAULT_PREFILL_CHUNK: u64 = 1024;
+
+/// Evaluation of a single prefill chunk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillPerf {
+    /// Itemized chunk latency (same roofline decomposition as decode).
+    pub lat: LatencyBreakdown,
+    /// The working point evaluated.
+    pub point: PrefillPoint,
+    /// Prompt tokens ingested per second during this chunk.
+    pub tokens_per_s: f64,
+}
+
+/// Evaluate one prefill chunk of `app` on `sys`.
+pub fn evaluate_prefill(
+    app: &dyn Application,
+    sys: &SystemConfig,
+    pt: &PrefillPoint,
+    opts: &EvalOptions,
+) -> PrefillPerf {
+    let wl = app.prefill_workload(pt);
+    let dp = DecodePoint {
+        batch: pt.batch.max(1),
+        context: pt.past_tokens + pt.new_tokens,
+    };
+    let perf = evaluate_workload(&wl, sys, &dp, opts, 0.0);
+    let tokens = (pt.batch.max(1) * pt.new_tokens) as f64;
+    PrefillPerf {
+        lat: perf.lat,
+        point: *pt,
+        tokens_per_s: tokens / perf.lat.t_batch,
+    }
+}
+
+/// Aggregate cost of prefilling a full prompt in fixed-size chunks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillEstimate {
+    /// Total prompt tokens ingested per sequence.
+    pub prompt_tokens: u64,
+    /// Chunk size used.
+    pub chunk_tokens: u64,
+    /// Number of chunks executed.
+    pub chunks: u64,
+    /// Chunks whose roofline was the tensor engine (vs memory).
+    pub compute_bound_chunks: u64,
+    /// End-to-end prefill seconds (lower-bounds TTFT under no load).
+    pub total_s: f64,
+    /// Aggregate prompt tokens per second.
+    pub tokens_per_s: f64,
+}
+
+/// Price a chunked prefill of `prompt_tokens` tokens per sequence
+/// (`batch` sequences prefilling together) in chunks of `chunk_tokens`.
+pub fn chunked_prefill(
+    app: &dyn Application,
+    sys: &SystemConfig,
+    batch: u64,
+    prompt_tokens: u64,
+    chunk_tokens: u64,
+    opts: &EvalOptions,
+) -> PrefillEstimate {
+    assert!(chunk_tokens >= 1, "prefill chunk must be >= 1 token");
+    let mut past = 0u64;
+    let mut total_s = 0.0;
+    let mut chunks = 0u64;
+    let mut compute_bound = 0u64;
+    while past < prompt_tokens {
+        let take = chunk_tokens.min(prompt_tokens - past);
+        let perf = evaluate_prefill(
+            app,
+            sys,
+            &PrefillPoint { batch, new_tokens: take, past_tokens: past },
+            opts,
+        );
+        total_s += perf.lat.t_batch;
+        chunks += 1;
+        if perf.lat.bound == Boundedness::Compute {
+            compute_bound += 1;
+        }
+        past += take;
+    }
+    let tokens = (batch.max(1) * prompt_tokens) as f64;
+    PrefillEstimate {
+        prompt_tokens,
+        chunk_tokens,
+        chunks,
+        compute_bound_chunks: compute_bound,
+        total_s,
+        tokens_per_s: if total_s > 0.0 { tokens / total_s } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Registry;
+    use crate::hw::presets;
+    use crate::model::evaluate;
+
+    fn hbm3_tp8() -> SystemConfig {
+        SystemConfig::new(presets::hbm3(), 8, 1)
+    }
+
+    /// Acceptance: prefill chunks are compute-bound (tensor-dominated)
+    /// while decode steps stay memory-bound on the HBM3 preset.
+    #[test]
+    fn prefill_compute_bound_decode_memory_bound_on_hbm3() {
+        let reg = Registry::builtin();
+        let sys = hbm3_tp8();
+        let opts = EvalOptions::default();
+        for name in ["llama3-70b", "llama3-405b"] {
+            let app = reg.app(name).unwrap();
+            let pre = evaluate_prefill(
+                app.as_ref(),
+                &sys,
+                &PrefillPoint {
+                    batch: 1,
+                    new_tokens: DEFAULT_PREFILL_CHUNK,
+                    past_tokens: 0,
+                },
+                &opts,
+            );
+            assert_eq!(pre.lat.bound, Boundedness::Compute, "{name} prefill");
+            // Tensor engine dominates the chunk.
+            assert!(
+                pre.lat.t_tensor / pre.lat.t_batch > 0.5,
+                "{name}: tensor fraction {}",
+                pre.lat.t_tensor / pre.lat.t_batch
+            );
+
+            for batch in [1u64, 8, 64] {
+                let dec = evaluate(
+                    app.as_ref(),
+                    &sys,
+                    &DecodePoint { batch, context: 4096 },
+                    &crate::model::EvalOptions {
+                        enforce_capacity: false,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                assert_eq!(dec.lat.bound, Boundedness::Memory, "{name} decode B{batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_chunks_pay_weight_restreaming() {
+        // 32 chunks of 128 tokens re-stream the weights 32x; on HBM3
+        // that pushes each chunk memory-bound and costs well over the
+        // one-shot prefill.
+        let reg = Registry::builtin();
+        let app = reg.app("llama3-70b").unwrap();
+        let sys = hbm3_tp8();
+        let opts = EvalOptions::default();
+        let tiny = chunked_prefill(app.as_ref(), &sys, 1, 4096, 128, &opts);
+        let whole = chunked_prefill(app.as_ref(), &sys, 1, 4096, 4096, &opts);
+        assert_eq!(tiny.chunks, 32);
+        assert_eq!(whole.chunks, 1);
+        assert!(
+            tiny.total_s > 1.5 * whole.total_s,
+            "tiny {} vs whole {}",
+            tiny.total_s,
+            whole.total_s
+        );
+        assert_eq!(whole.compute_bound_chunks, 1);
+    }
+
+    #[test]
+    fn prefill_rate_is_far_above_decode_rate() {
+        // A single HBM3-TP8 instance prefills Llama3-70B prompts at
+        // hundreds of thousands of tokens/s, vs ~486 decode tokens/s.
+        let reg = Registry::builtin();
+        let app = reg.app("llama3-70b").unwrap();
+        let est = chunked_prefill(
+            app.as_ref(),
+            &hbm3_tp8(),
+            1,
+            8192,
+            DEFAULT_PREFILL_CHUNK,
+            &EvalOptions::default(),
+        );
+        assert!(est.tokens_per_s > 50_000.0, "{}", est.tokens_per_s);
+        assert!(est.total_s > 0.0);
+    }
+
+    #[test]
+    fn deepseek_prefill_evaluates_with_moe_exposure() {
+        let reg = Registry::builtin();
+        let app = reg.app("deepseek-v3").unwrap();
+        let pre = evaluate_prefill(
+            app.as_ref(),
+            &hbm3_tp8(),
+            &PrefillPoint { batch: 1, new_tokens: 1024, past_tokens: 0 },
+            &EvalOptions::default(),
+        );
+        // 58 MoE layers at 800 ns routing each are charged.
+        assert!(pre.lat.t_moe_routing > 0.0);
+        assert!(pre.tokens_per_s > 0.0);
+    }
+}

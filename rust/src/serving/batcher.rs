@@ -1,13 +1,24 @@
-//! Continuous batcher: admission queue + KV-capacity gate.
+//! Continuous batcher: admission queue, KV-capacity gate, and the
+//! prefill-chunk planner.
 //!
 //! The admission policy mirrors the paper's capacity story: a request is
 //! admitted only if its KV cache (context + full generation budget) fits
 //! in the remaining memory after weights, and the active batch stays
 //! under the configured cap. FIFO order; no preemption (requests run to
 //! completion, as in the paper's steady-state analysis).
+//!
+//! With a prefill chunk configured ([`Batcher::with_prefill`]), an
+//! admitted request first has its prompt ingested in chunks of at most
+//! `prefill_chunk` tokens per engine step ([`Batcher::plan_step`]),
+//! sharing steps with decode-ready lanes; the final chunk's forward
+//! pass emits the first output token. With the chunk set to 0 (legacy
+//! mode) prompts are assumed prefilled elsewhere — the paper's
+//! disaggregated decode-only focus — and requests enter decode
+//! directly.
 
 use std::collections::VecDeque;
 
+use super::engine::StepBatch;
 use super::request::Request;
 
 /// KV-capacity accounting for one model instance on one system.
@@ -74,13 +85,37 @@ pub struct Batcher {
     queue: VecDeque<Request>,
     active: Vec<Request>,
     kv: KvBudget,
+    /// Max prefill tokens ingested per engine step (0 = prefill served
+    /// elsewhere; requests enter decode directly).
+    prefill_chunk: u64,
+    /// Total prompt tokens this batcher has prefilled.
+    prefill_processed: u64,
 }
 
 impl Batcher {
-    /// New batcher over a KV budget.
+    /// New decode-only batcher over a KV budget (prompts are assumed
+    /// prefilled elsewhere, the paper's disaggregated assumption).
     pub fn new(max_batch: usize, kv: KvBudget) -> Self {
         assert!(max_batch >= 1);
-        Batcher { max_batch, queue: VecDeque::new(), active: Vec::new(), kv }
+        Batcher {
+            max_batch,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            kv,
+            prefill_chunk: 0,
+            prefill_processed: 0,
+        }
+    }
+
+    /// New prefill-aware batcher: admitted prompts are ingested in
+    /// chunks of at most `chunk_tokens` per step before decoding.
+    /// `chunk_tokens = 0` degrades to the decode-only mode of
+    /// [`Batcher::new`], so callers can thread a single configuration
+    /// value through.
+    pub fn with_prefill(max_batch: usize, kv: KvBudget, chunk_tokens: u64) -> Self {
+        let mut b = Batcher::new(max_batch, kv);
+        b.prefill_chunk = chunk_tokens;
+        b
     }
 
     /// Enqueue an arriving request.
@@ -88,7 +123,10 @@ impl Batcher {
         self.queue.push_back(r);
     }
 
-    /// Admit as many queued requests as fit (called at step boundaries).
+    /// Admit as many queued requests as fit. The simulator calls this
+    /// only at step boundaries: a request arriving mid-step must wait
+    /// for the in-flight step to finish before it can join (it never
+    /// rides a step it was not priced into).
     /// Returns how many were admitted; sets their `admitted_at`.
     pub fn admit(&mut self, now: f64) -> usize {
         let mut n = 0;
@@ -99,22 +137,79 @@ impl Batcher {
             }
             let mut r = self.queue.pop_front().unwrap();
             r.admitted_at = Some(now);
+            if self.prefill_chunk == 0 {
+                // Legacy decode-only mode: the prompt is already in the
+                // KV cache when the request reaches us.
+                r.prefilled = r.context_len;
+            }
             self.active.push(r);
             n += 1;
         }
         n
     }
 
-    /// One generation step for the whole active batch: every active
-    /// request yields a token; completed ones are retired. Returns the
-    /// retired requests (stamped with `completed_at`).
+    /// Plan the next engine step: every decode-ready lane emits one
+    /// token, and the *oldest* prefilling request (admission FIFO)
+    /// receives one chunk of up to `prefill_chunk` prompt tokens —
+    /// Sarathi-style, at most one prefill chunk per step. Restricting a
+    /// step to a single prompt's chunk keeps the engine's
+    /// `(prefill_tokens, prefill_past)` description of the chunk exact
+    /// (mixing two prompts' chunks would conflate their attention
+    /// depths).
+    pub fn plan_step(&mut self) -> StepBatch {
+        let mut step = StepBatch::default();
+        let mut budget = self.prefill_chunk;
+        for r in &mut self.active {
+            if r.in_prefill() {
+                let take = r.prefill_remaining().min(budget);
+                r.scheduled_prefill = take;
+                if take > 0 {
+                    budget = 0; // one prefill chunk per step
+                    step.prefill_seqs += 1;
+                    step.prefill_tokens += take;
+                    step.prefill_past = r.prefilled;
+                }
+            } else {
+                r.scheduled_prefill = 0;
+                step.decode_batch += 1;
+                step.max_context = step.max_context.max(r.seq_len());
+            }
+        }
+        step
+    }
+
+    /// Complete the step planned by [`Batcher::plan_step`]: prefilling
+    /// lanes advance by their scheduled chunk (the final chunk emits the
+    /// first output token); decode lanes each gain one token; finished
+    /// requests are retired. Returns the retired requests (stamped with
+    /// `completed_at`).
     pub fn step_complete(&mut self, now: f64) -> Vec<Request> {
         let mut done = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
-            self.active[i].generated += 1;
+            let r = &mut self.active[i];
+            if r.scheduled_prefill > 0 {
+                self.prefill_processed += r.scheduled_prefill;
+                r.prefilled += r.scheduled_prefill;
+                r.scheduled_prefill = 0;
+                if !r.in_prefill() {
+                    // The last prefill chunk's forward pass produces the
+                    // first generated token.
+                    r.generated += 1;
+                    r.first_token_at = Some(now);
+                }
+            } else if !r.in_prefill() {
+                r.generated += 1;
+                if r.first_token_at.is_none() {
+                    r.first_token_at = Some(now);
+                }
+            }
+            // else: prefilling but received no budget this step — waits.
             if self.active[i].done() {
-                let mut r = self.active.swap_remove(i);
+                // `remove`, not `swap_remove`: the active list's order is
+                // the admission FIFO that plan_step's prefill scheduling
+                // relies on.
+                let mut r = self.active.remove(i);
                 r.completed_at = Some(now);
                 self.kv.release(&r);
                 done.push(r);
@@ -125,7 +220,7 @@ impl Batcher {
         done
     }
 
-    /// Active batch size.
+    /// Active batch size (decode + prefilling lanes).
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
@@ -155,6 +250,16 @@ impl Batcher {
         self.kv.utilization()
     }
 
+    /// Configured prefill chunk (0 = decode-only mode).
+    pub fn prefill_chunk(&self) -> u64 {
+        self.prefill_chunk
+    }
+
+    /// Total prompt tokens prefilled so far.
+    pub fn prefill_tokens_processed(&self) -> u64 {
+        self.prefill_processed
+    }
+
     /// Whether everything is drained.
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty()
@@ -172,7 +277,10 @@ mod tests {
             context_len: ctx,
             gen_len: gen,
             generated: 0,
+            prefilled: 0,
+            scheduled_prefill: 0,
             admitted_at: None,
+            first_token_at: None,
             completed_at: None,
         }
     }
@@ -237,5 +345,107 @@ mod tests {
     #[should_panic(expected = "exceed capacity")]
     fn weights_larger_than_capacity_panic() {
         KvBudget::new(10.0, 20.0, 1.0);
+    }
+
+    #[test]
+    fn decode_only_mode_skips_prefill() {
+        let mut b = Batcher::new(4, budget(1000));
+        b.enqueue(req(0, 100, 2));
+        b.admit(0.0);
+        let plan = b.plan_step();
+        assert_eq!(plan.decode_batch, 1);
+        assert_eq!(plan.prefill_tokens, 0);
+        let done = b.step_complete(0.1);
+        assert!(done.is_empty());
+        assert_eq!(b.step_complete(0.2).len(), 1);
+        assert_eq!(b.prefill_tokens_processed(), 0);
+    }
+
+    #[test]
+    fn prefill_chunks_run_before_decode() {
+        let mut b = Batcher::with_prefill(4, budget(1000), 30);
+        b.enqueue(req(0, 100, 2));
+        b.admit(0.0);
+
+        // 100-token prompt at 30 tokens/step: 3 full chunks + 10.
+        for (i, expect) in [30u64, 30, 30, 10].iter().enumerate() {
+            let plan = b.plan_step();
+            assert_eq!(plan.decode_batch, 0, "step {i}");
+            assert_eq!(plan.prefill_tokens, *expect, "step {i}");
+            assert_eq!(plan.prefill_past, 30 * i as u64, "step {i}");
+            let t = 0.1 * (i as f64 + 1.0);
+            assert!(b.step_complete(t).is_empty());
+        }
+
+        // The final chunk emitted the first token; one decode step left.
+        let plan = b.plan_step();
+        assert_eq!(plan.decode_batch, 1);
+        assert_eq!(plan.max_context, 101);
+        let done = b.step_complete(0.5);
+        assert_eq!(done.len(), 1);
+        let r = &done[0];
+        assert_eq!(r.prefilled, 100);
+        assert_eq!(r.generated, 2);
+        assert!((r.first_token_at.unwrap() - 0.4).abs() < 1e-12);
+        assert!((r.completed_at.unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(b.prefill_tokens_processed(), 100);
+    }
+
+    #[test]
+    fn one_prefill_chunk_per_step_fifo() {
+        let mut b = Batcher::with_prefill(4, budget(1000), 8);
+        b.enqueue(req(0, 6, 1));
+        b.enqueue(req(1, 6, 1));
+        b.admit(0.0);
+        // First step: only the oldest prompt gets a chunk, even though
+        // 2 tokens of budget are nominally left over.
+        let plan = b.plan_step();
+        assert_eq!(plan.prefill_seqs, 1);
+        assert_eq!(plan.prefill_tokens, 6);
+        assert_eq!(plan.prefill_past, 0);
+        b.step_complete(0.1);
+        // Request 0 is decode-done (gen 1 emitted by its final chunk,
+        // gen_len 1 -> retired); request 1's whole prompt goes next.
+        let plan = b.plan_step();
+        assert_eq!(plan.decode_batch, 0); // r0 retired at 0.1 (gen_len 1)
+        assert_eq!(plan.prefill_seqs, 1);
+        assert_eq!(plan.prefill_tokens, 6);
+        let done = b.step_complete(0.2);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+    }
+
+    #[test]
+    fn retirement_preserves_admission_order_for_prefill() {
+        // r0 (short) retires first; the prefill budget must then go to
+        // r1, not to a later-admitted request (a swap_remove-based
+        // retirement used to reorder the active list).
+        let mut b = Batcher::with_prefill(4, budget(1000), 10);
+        b.enqueue(req(0, 5, 1));
+        b.enqueue(req(1, 20, 1));
+        b.enqueue(req(2, 20, 1));
+        b.admit(0.0);
+        b.plan_step(); // r0's 5-token prompt
+        b.step_complete(0.1); // r0 retires (gen_len 1)
+        // The next two chunks must go to r1 (admitted before r2).
+        let plan = b.plan_step();
+        assert_eq!(plan.prefill_tokens, 10);
+        assert!(b.step_complete(0.2).is_empty());
+        let plan = b.plan_step();
+        assert_eq!(plan.prefill_past, 10);
+        let done = b.step_complete(0.3);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1, "r1 must finish before r2");
+    }
+
+    #[test]
+    fn zero_length_prompts_enter_decode_directly() {
+        let mut b = Batcher::with_prefill(4, budget(1000), 16);
+        b.enqueue(req(0, 0, 1));
+        b.admit(0.0);
+        let plan = b.plan_step();
+        assert_eq!(plan.decode_batch, 1);
+        assert_eq!(plan.prefill_tokens, 0);
+        assert_eq!(b.step_complete(0.1).len(), 1);
     }
 }

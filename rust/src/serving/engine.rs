@@ -2,15 +2,71 @@
 
 use std::sync::Arc;
 
-use crate::apps::{Application, DecodePoint};
+use crate::apps::{Application, DecodePoint, PrefillPoint};
 use crate::hw::SystemConfig;
-use crate::model::{evaluate, EvalOptions};
+use crate::model::{evaluate, evaluate_workload, EvalOptions};
 
-/// Something that can price one decode step of a whole batch.
+/// Composition of one engine step: decode lanes each emitting one
+/// token, plus (optionally) a chunk of prompt tokens being prefilled in
+/// the same fused step — the chunked-prefill mixing production engines
+/// do to keep decode latency bounded while prompts are ingested.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StepBatch {
+    /// Sequences in decode this step (one token each).
+    pub decode_batch: u64,
+    /// Longest decode sequence's KV length (drives attention cost).
+    pub max_context: u64,
+    /// Sequences receiving prefill work this step (the planner
+    /// schedules at most one prefill chunk per step, so 0 or 1).
+    pub prefill_seqs: u64,
+    /// New prompt tokens prefilled this step.
+    pub prefill_tokens: u64,
+    /// Already-cached prefix of the prefilling sequence (earlier chunks
+    /// the attention must re-read).
+    pub prefill_past: u64,
+}
+
+impl StepBatch {
+    /// A pure decode step (the legacy path).
+    pub fn decode_only(batch: u64, max_context: u64) -> StepBatch {
+        StepBatch { decode_batch: batch, max_context, ..Default::default() }
+    }
+
+    /// Active lanes this step (decode + prefilling sequences), the
+    /// occupancy the batch-size statistics track.
+    pub fn lanes(&self) -> u64 {
+        self.decode_batch + self.prefill_seqs
+    }
+
+    /// Whether the step has no work at all.
+    pub fn is_empty(&self) -> bool {
+        self.decode_batch == 0 && self.prefill_tokens == 0
+    }
+}
+
+/// Something that can price one step of a whole batch.
 pub trait StepEngine {
-    /// Seconds to execute one step with `batch` active sequences whose
-    /// longest context is `max_context` tokens.
+    /// Seconds to execute one pure-decode step with `batch` active
+    /// sequences whose longest context is `max_context` tokens.
     fn step_latency(&mut self, batch: u64, max_context: u64) -> f64;
+
+    /// Seconds to execute a mixed prefill + decode step.
+    ///
+    /// The default covers engines without a prefill model (fixed-cost
+    /// test engines, the PJRT executor): prefilling sequences are priced
+    /// as additional decode lanes at the deepest cache depth in the
+    /// step. Engines with a real prefill model (the analytic backend)
+    /// override this.
+    fn mixed_step_latency(&mut self, step: &StepBatch) -> f64 {
+        if step.prefill_tokens == 0 {
+            self.step_latency(step.decode_batch, step.max_context)
+        } else {
+            self.step_latency(
+                step.decode_batch + step.prefill_seqs,
+                step.max_context.max(step.prefill_past + 1),
+            )
+        }
+    }
 
     /// Human-readable backend name (for reports).
     fn name(&self) -> String;
@@ -49,6 +105,41 @@ impl StepEngine for AnalyticEngine {
             .unwrap_or(f64::INFINITY)
     }
 
+    /// Fused pricing: the prefill chunk's ops and traffic are added to
+    /// the decode batch's, weights stream once for the whole fused step,
+    /// and the roofline + exposure is taken over the combined workload.
+    /// The chunk is one prompt's token stream (`batch = 1`, total
+    /// tokens at `prefill_past` depth) — exact, because the planner
+    /// schedules at most one prefill chunk per step.
+    fn mixed_step_latency(&mut self, step: &StepBatch) -> f64 {
+        if step.is_empty() {
+            return 0.0;
+        }
+        if step.prefill_tokens == 0 {
+            return self.step_latency(step.decode_batch, step.max_context);
+        }
+        let ppt = PrefillPoint {
+            batch: 1,
+            new_tokens: step.prefill_tokens,
+            past_tokens: step.prefill_past,
+        };
+        let mut wl = self.app.prefill_workload(&ppt);
+        if step.decode_batch > 0 {
+            let dp = DecodePoint {
+                batch: step.decode_batch,
+                context: step.max_context.max(1),
+            };
+            let dwl = self.app.workload(&dp);
+            wl.ops = wl.ops.add(dwl.ops);
+            wl.traffic = wl.traffic.fuse(dwl.traffic);
+        }
+        let dp = DecodePoint {
+            batch: step.lanes().max(1),
+            context: step.max_context.max(step.prefill_past + step.prefill_tokens),
+        };
+        evaluate_workload(&wl, &self.sys, &dp, &self.opts, 0.0).lat.t_batch
+    }
+
     fn name(&self) -> String {
         format!("analytic({} on {})", self.app.name(), self.sys.label())
     }
@@ -72,5 +163,70 @@ mod tests {
         assert!(eng.step_latency(32, 4096) > lat);
         // Idle batch costs nothing.
         assert_eq!(eng.step_latency(0, 4096), 0.0);
+    }
+
+    #[test]
+    fn mixed_step_prices_prefill_on_top_of_decode() {
+        let app = Registry::builtin().app("llama3-70b").unwrap();
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut eng = AnalyticEngine::new(app, sys);
+
+        let decode_only = eng.mixed_step_latency(&StepBatch::decode_only(4, 4096));
+        assert_eq!(decode_only, eng.step_latency(4, 4096));
+
+        let mixed = eng.mixed_step_latency(&StepBatch {
+            decode_batch: 4,
+            max_context: 4096,
+            prefill_seqs: 1,
+            prefill_tokens: 1024,
+            prefill_past: 0,
+        });
+        // A 1K-token chunk is heavy compute: the fused step costs
+        // clearly more than decode alone, but less than pricing the
+        // chunk as 1024 separate decode steps would.
+        assert!(mixed > decode_only * 1.5, "{mixed} vs {decode_only}");
+        assert!(mixed < decode_only * 100.0);
+
+        // Pure prefill step works too.
+        let pure = eng.mixed_step_latency(&StepBatch {
+            decode_batch: 0,
+            max_context: 0,
+            prefill_seqs: 1,
+            prefill_tokens: 1024,
+            prefill_past: 0,
+        });
+        assert!(pure > 0.0 && pure.is_finite());
+
+        // Empty step is free.
+        assert_eq!(eng.mixed_step_latency(&StepBatch::default()), 0.0);
+    }
+
+    /// A constant-latency engine exercising the default mixed pricing.
+    struct Fixed(f64);
+    impl StepEngine for Fixed {
+        fn step_latency(&mut self, batch: u64, _ctx: u64) -> f64 {
+            if batch == 0 {
+                0.0
+            } else {
+                self.0
+            }
+        }
+        fn name(&self) -> String {
+            "fixed".into()
+        }
+    }
+
+    #[test]
+    fn default_mixed_latency_treats_prefill_as_extra_lanes() {
+        let mut eng = Fixed(0.25);
+        let dt = eng.mixed_step_latency(&StepBatch {
+            decode_batch: 0,
+            max_context: 0,
+            prefill_seqs: 2,
+            prefill_tokens: 64,
+            prefill_past: 0,
+        });
+        assert_eq!(dt, 0.25);
+        assert_eq!(eng.mixed_step_latency(&StepBatch::decode_only(3, 100)), 0.25);
     }
 }

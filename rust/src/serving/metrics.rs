@@ -1,4 +1,16 @@
-//! Serving metrics: per-request latency statistics and system totals.
+//! Serving metrics: per-request SLO statistics and system totals.
+//!
+//! SLO metric definitions (the quantities per-token pricing cannot see
+//! and the serving simulator exists to measure):
+//!
+//! * **TTFT** — time to first token, `first_token_at - arrival`. The
+//!   final prefill chunk's forward pass emits the first token, so TTFT
+//!   includes queueing, prefill chunking, and any decode lanes sharing
+//!   those steps.
+//! * **TPOT** — time per output token after the first,
+//!   `(completed - first_token) / (generated - 1)`; the steady-state
+//!   decode cadence a user experiences.
+//! * **E2E** — end-to-end request latency, `completed - arrival`.
 
 use super::request::Request;
 
@@ -7,9 +19,58 @@ pub fn percentile(samples: &mut Vec<f64>, p: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (samples.len() as f64 - 1.0)).round() as usize;
     samples[rank.min(samples.len() - 1)]
+}
+
+/// Mean + tail percentiles of one latency distribution, seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median.
+    pub p50: f64,
+    /// 90th percentile.
+    pub p90: f64,
+    /// 99th percentile (tail SLO).
+    pub p99: f64,
+}
+
+impl LatencyStats {
+    /// All-zero stats (no samples).
+    pub fn zero() -> LatencyStats {
+        LatencyStats { mean: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 }
+    }
+
+    /// Compute from samples (sorts in place; zeros when empty).
+    pub fn from_samples(samples: &mut Vec<f64>) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::zero();
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        LatencyStats {
+            mean,
+            p50: percentile(samples, 50.0),
+            p90: percentile(samples, 90.0),
+            p99: percentile(samples, 99.0),
+        }
+    }
+}
+
+/// Per-step accounting the simulator hands to the report.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StepStats {
+    /// Steps executed (priced by the engine).
+    pub steps: u64,
+    /// Integral of active lanes over step duration (lane-seconds).
+    pub batch_time_integral: f64,
+    /// Total time with a step in flight, seconds.
+    pub busy_time: f64,
+    /// Total prompt tokens prefilled.
+    pub prefill_tokens: u64,
+    /// Simulated clock at the end of the run.
+    pub end_time: f64,
 }
 
 /// Aggregated results of one serving-simulation run.
@@ -21,6 +82,8 @@ pub struct ServingReport {
     pub completed: u64,
     /// Total tokens generated.
     pub tokens: u64,
+    /// Total prompt tokens prefilled (0 in decode-only mode).
+    pub prefill_tokens: u64,
     /// Wall/simulated span from first arrival to last completion, s.
     pub span: f64,
     /// System tokens/second over the span.
@@ -33,9 +96,17 @@ pub struct ServingReport {
     pub utps_p99_low: f64,
     /// Mean queueing delay (arrival -> admission), s.
     pub queue_delay_mean: f64,
+    /// Time-to-first-token SLO distribution.
+    pub ttft: LatencyStats,
+    /// Time-per-output-token SLO distribution.
+    pub tpot: LatencyStats,
+    /// End-to-end latency SLO distribution.
+    pub e2e: LatencyStats,
     /// Steps executed.
     pub steps: u64,
-    /// Mean batch occupancy across steps.
+    /// Mean batch occupancy, weighted by step duration (lane-seconds
+    /// over busy seconds — a per-step average would bias the mean when
+    /// step latencies vary with batch size).
     pub mean_batch: f64,
 }
 
@@ -44,15 +115,13 @@ impl ServingReport {
     pub fn from_requests(
         engine: String,
         reqs: &[Request],
-        steps: u64,
-        batch_integral: f64,
-        end_time: f64,
+        stats: &StepStats,
     ) -> ServingReport {
         let completed: Vec<&Request> =
             reqs.iter().filter(|r| r.completed_at.is_some()).collect();
         let tokens: u64 = completed.iter().map(|r| r.generated).sum();
         let first = reqs.iter().map(|r| r.arrival).fold(f64::MAX, f64::min);
-        let span = (end_time - first).max(1e-12);
+        let span = (stats.end_time - first).max(1e-12);
 
         let mut utps: Vec<f64> = completed
             .iter()
@@ -66,7 +135,7 @@ impl ServingReport {
         } else {
             utps.iter().sum::<f64>() / utps.len() as f64
         };
-        let mut delays: Vec<f64> = completed
+        let delays: Vec<f64> = completed
             .iter()
             .filter_map(|r| Some(r.admitted_at? - r.arrival))
             .collect();
@@ -75,37 +144,68 @@ impl ServingReport {
         } else {
             delays.iter().sum::<f64>() / delays.len() as f64
         };
-        delays.clear();
+
+        let mut ttft: Vec<f64> = completed.iter().filter_map(|r| r.ttft()).collect();
+        let mut tpot: Vec<f64> = completed.iter().filter_map(|r| r.tpot()).collect();
+        let mut e2e: Vec<f64> = completed.iter().filter_map(|r| r.e2e()).collect();
 
         ServingReport {
             engine,
             completed: completed.len() as u64,
             tokens,
+            prefill_tokens: stats.prefill_tokens,
             span,
             stps: tokens as f64 / span,
             utps_mean,
             utps_p50: percentile(&mut utps, 50.0),
             utps_p99_low: percentile(&mut utps, 1.0),
             queue_delay_mean,
-            steps,
-            mean_batch: if steps == 0 { 0.0 } else { batch_integral / steps as f64 },
+            ttft: LatencyStats::from_samples(&mut ttft),
+            tpot: LatencyStats::from_samples(&mut tpot),
+            e2e: LatencyStats::from_samples(&mut e2e),
+            steps: stats.steps,
+            mean_batch: if stats.busy_time > 0.0 {
+                stats.batch_time_integral / stats.busy_time
+            } else {
+                0.0
+            },
         }
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{}: {} reqs, {} tokens in {:.2}s -> STPS {:.1}, UTPS mean {:.1} / p50 {:.1}, \
-             queue delay {:.3}s, mean batch {:.1}",
+            "{}: {} reqs, {} tokens (+{} prefill) in {:.2}s -> STPS {:.1}, \
+             UTPS mean {:.1} / p50 {:.1}, queue delay {:.3}s, mean batch {:.1}",
             self.engine,
             self.completed,
             self.tokens,
+            self.prefill_tokens,
             self.span,
             self.stps,
             self.utps_mean,
             self.utps_p50,
             self.queue_delay_mean,
             self.mean_batch
+        )
+    }
+
+    /// Multi-line SLO summary: TTFT / TPOT / E2E percentiles.
+    pub fn slo_summary(&self) -> String {
+        fn row(name: &str, s: &LatencyStats, scale: f64, unit: &str) -> String {
+            format!(
+                "{name:<5} mean {:.3}{unit}  p50 {:.3}{unit}  p90 {:.3}{unit}  p99 {:.3}{unit}",
+                s.mean * scale,
+                s.p50 * scale,
+                s.p90 * scale,
+                s.p99 * scale
+            )
+        }
+        format!(
+            "{}\n{}\n{}",
+            row("TTFT", &self.ttft, 1.0, "s"),
+            row("TPOT", &self.tpot, 1e3, "ms"),
+            row("E2E", &self.e2e, 1.0, "s")
         )
     }
 }
@@ -124,22 +224,70 @@ mod tests {
         assert!(percentile(&mut empty, 50.0).is_nan());
     }
 
-    #[test]
-    fn report_computes_throughputs() {
-        let reqs = vec![Request {
+    fn one_request() -> Request {
+        Request {
             id: 0,
             arrival: 0.0,
             context_len: 10,
             gen_len: 10,
             generated: 10,
+            prefilled: 10,
+            scheduled_prefill: 0,
             admitted_at: Some(0.0),
+            first_token_at: Some(0.2),
             completed_at: Some(2.0),
-        }];
-        let rep = ServingReport::from_requests("t".into(), &reqs, 10, 10.0, 2.0);
+        }
+    }
+
+    #[test]
+    fn report_computes_throughputs_and_slos() {
+        let reqs = vec![one_request()];
+        let stats = StepStats {
+            steps: 10,
+            batch_time_integral: 2.0,
+            busy_time: 2.0,
+            prefill_tokens: 10,
+            end_time: 2.0,
+        };
+        let rep = ServingReport::from_requests("t".into(), &reqs, &stats);
         assert_eq!(rep.completed, 1);
         assert_eq!(rep.tokens, 10);
+        assert_eq!(rep.prefill_tokens, 10);
         assert!((rep.stps - 5.0).abs() < 1e-9);
         assert!((rep.utps_mean - 5.0).abs() < 1e-9);
         assert_eq!(rep.mean_batch, 1.0);
+        assert!((rep.ttft.p50 - 0.2).abs() < 1e-12);
+        assert!((rep.tpot.p50 - 0.2).abs() < 1e-12); // (2.0 - 0.2) / 9
+        assert!((rep.e2e.p99 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_batch_uses_busy_time_not_step_count() {
+        let stats = StepStats {
+            steps: 2,
+            batch_time_integral: 1.0 * 0.1 + 2.0 * 0.2,
+            busy_time: 0.3,
+            prefill_tokens: 0,
+            end_time: 0.3,
+        };
+        let rep = ServingReport::from_requests("t".into(), &[one_request()], &stats);
+        assert!((rep.mean_batch - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_stats_handle_empty_and_render() {
+        assert_eq!(LatencyStats::from_samples(&mut vec![]), LatencyStats::zero());
+        let s = LatencyStats::from_samples(&mut vec![0.1, 0.2, 0.3]);
+        assert!((s.mean - 0.2).abs() < 1e-12);
+        assert_eq!(s.p50, 0.2);
+        let rep = ServingReport::from_requests(
+            "t".into(),
+            &[one_request()],
+            &StepStats::default(),
+        );
+        let slo = rep.slo_summary();
+        assert!(slo.contains("TTFT"));
+        assert!(slo.contains("TPOT"));
+        assert!(slo.contains("E2E"));
     }
 }

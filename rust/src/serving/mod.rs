@@ -1,19 +1,42 @@
-//! Decode serving simulator: a vLLM-router-style continuous-batching
-//! engine over the LIMINAL substrate.
+//! Serving simulator: a vLLM-router-style continuous-batching engine
+//! over the LIMINAL substrate, covering the full request lifecycle —
+//! queueing, chunked prefill, and decode.
 //!
 //! Two latency backends plug into the same scheduler:
 //!
 //! * [`AnalyticEngine`] — per-step latency from the LIMINAL model, used
 //!   to explore paper-scale systems (TP128 clusters serving Llama3-405B)
-//!   under dynamic load instead of the steady-state closed forms.
+//!   under dynamic load instead of the steady-state closed forms. It
+//!   prices mixed prefill + decode steps by fusing both workloads onto
+//!   one roofline (weights stream once per step).
 //! * [`PjrtEngine`] — the real thing at small scale: executes the
 //!   AOT-compiled JAX/Pallas decode step through PJRT, measuring true
 //!   wall-clock including every software overhead the paper's limit
 //!   study idealizes away (Appendix E's "simulated tokens/sec" analog).
 //!
-//! The scheduler is a discrete-event simulation ([`crate::des`]): Poisson
-//! arrivals, a FIFO admission queue, KV-capacity-gated continuous
-//! batching, and per-request completion tracking.
+//! # Step semantics
+//!
+//! The scheduler is a discrete-event simulation ([`crate::des`]) with
+//! Poisson arrivals and a FIFO admission queue gated by KV capacity.
+//! The fidelity rules, each pinned by a regression test:
+//!
+//! * **Admission points.** Requests are admitted only at step
+//!   boundaries (or while the engine is idle). A request arriving
+//!   mid-step waits for the in-flight step to complete: it can never be
+//!   credited a token from a step it was not priced into.
+//! * **Prefill chunking.** An admitted request's prompt is ingested in
+//!   chunks of at most `prefill_chunk` tokens per step
+//!   ([`Batcher::with_prefill`]). At most one prompt's chunk runs per
+//!   step (Sarathi-style), chosen FIFO by admission, sharing the step
+//!   with decode-ready lanes (mixed steps). The final chunk's forward
+//!   pass emits the first output token; only then does the request
+//!   enter decode. With the chunk set to 0 the simulator reverts to the
+//!   paper's decode-only assumption (prompts prefilled elsewhere, as in
+//!   disaggregated serving).
+//! * **SLO metrics.** [`ServingReport`] aggregates TTFT (arrival to
+//!   first token), TPOT (steady-state inter-token time), and E2E
+//!   latency as mean/p50/p90/p99 ([`LatencyStats`]), plus
+//!   duration-weighted batch occupancy and system tokens/sec.
 
 mod batcher;
 mod engine;
@@ -23,8 +46,8 @@ mod request;
 mod sim;
 
 pub use batcher::{Batcher, KvBudget};
-pub use engine::{AnalyticEngine, StepEngine};
-pub use metrics::{percentile, ServingReport};
+pub use engine::{AnalyticEngine, StepBatch, StepEngine};
+pub use metrics::{percentile, LatencyStats, ServingReport, StepStats};
 pub use pjrt_engine::PjrtEngine;
 pub use request::{Request, WorkloadGen, WorkloadSpec};
 pub use sim::{ServingSim, SimConfig};

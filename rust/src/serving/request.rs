@@ -2,30 +2,41 @@
 
 use crate::util::rng::Pcg32;
 
-/// One decode request: arrives with a prefilled context of
-/// `context_len` tokens and wants `gen_len` new tokens (prefill is
-/// served elsewhere, as in disaggregated deployments — the paper's
-/// decode-only focus, §2.1).
+/// One request's full lifecycle: it arrives with a `context_len`-token
+/// prompt that must be prefilled into the KV cache, then decodes
+/// `gen_len` new tokens. In the legacy decode-only mode (prefill chunk
+/// = 0, the paper's §2.1 disaggregated assumption) the batcher admits
+/// requests with the prefill already marked complete.
 #[derive(Debug, Clone)]
 pub struct Request {
     /// Unique id (assigned by the generator).
     pub id: u64,
     /// Arrival time, seconds.
     pub arrival: f64,
-    /// Context length already in the KV cache at admission.
+    /// Prompt (context) length in tokens.
     pub context_len: u64,
     /// Tokens to generate.
     pub gen_len: u64,
     /// Tokens generated so far (mutated by the simulator).
     pub generated: u64,
+    /// Prompt tokens prefilled into the KV cache so far. Equals
+    /// `context_len` once the request is decode-ready.
+    pub prefilled: u64,
+    /// Prefill tokens assigned to the engine step currently in flight
+    /// (simulator-internal; consumed by `Batcher::step_complete`).
+    pub scheduled_prefill: u64,
     /// Admission time (None while queued).
     pub admitted_at: Option<f64>,
+    /// Time the first output token was emitted (the final prefill
+    /// chunk's forward pass produces it).
+    pub first_token_at: Option<f64>,
     /// Completion time.
     pub completed_at: Option<f64>,
 }
 
 impl Request {
-    /// Current total sequence length (context + generated).
+    /// Current total sequence length (context + generated) — the KV
+    /// footprint the request will reach, which drives attention cost.
     pub fn seq_len(&self) -> u64 {
         self.context_len + self.generated
     }
@@ -33,6 +44,35 @@ impl Request {
     /// Whether generation is finished.
     pub fn done(&self) -> bool {
         self.generated >= self.gen_len
+    }
+
+    /// Whether prompt ingestion is still in progress.
+    pub fn in_prefill(&self) -> bool {
+        self.prefilled < self.context_len
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> u64 {
+        self.context_len.saturating_sub(self.prefilled)
+    }
+
+    /// Time to first token: arrival -> first emitted token.
+    pub fn ttft(&self) -> Option<f64> {
+        Some(self.first_token_at? - self.arrival)
+    }
+
+    /// Steady-state time per output token after the first (None for
+    /// single-token generations).
+    pub fn tpot(&self) -> Option<f64> {
+        if self.generated < 2 {
+            return None;
+        }
+        Some((self.completed_at? - self.first_token_at?) / (self.generated - 1) as f64)
+    }
+
+    /// End-to-end latency: arrival -> completion.
+    pub fn e2e(&self) -> Option<f64> {
+        Some(self.completed_at? - self.arrival)
     }
 }
 
@@ -100,7 +140,10 @@ impl WorkloadGen {
                     glo.max(1)
                 },
                 generated: 0,
+                prefilled: 0,
+                scheduled_prefill: 0,
                 admitted_at: None,
+                first_token_at: None,
                 completed_at: None,
             });
             self.next_id += 1;
@@ -135,6 +178,33 @@ mod tests {
         let span = reqs.last().unwrap().arrival;
         let rate = 2000.0 / span;
         assert!((rate - 50.0).abs() / 50.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn slo_helpers_compute_ttft_tpot_e2e() {
+        let r = Request {
+            id: 0,
+            arrival: 1.0,
+            context_len: 100,
+            gen_len: 5,
+            generated: 5,
+            prefilled: 100,
+            scheduled_prefill: 0,
+            admitted_at: Some(1.1),
+            first_token_at: Some(1.5),
+            completed_at: Some(2.3),
+        };
+        assert!(!r.in_prefill());
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        assert!((r.tpot().unwrap() - 0.2).abs() < 1e-12);
+        assert!((r.e2e().unwrap() - 1.3).abs() < 1e-12);
+
+        let single = Request { gen_len: 1, generated: 1, ..r.clone() };
+        assert!(single.tpot().is_none());
+        let mid = Request { prefilled: 40, first_token_at: None, ..r };
+        assert!(mid.in_prefill());
+        assert_eq!(mid.prefill_remaining(), 60);
+        assert!(mid.ttft().is_none());
     }
 
     #[test]

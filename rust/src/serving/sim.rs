@@ -1,10 +1,26 @@
-//! The serving simulation driver: DES loop over arrivals + decode steps.
+//! The serving simulation driver: DES loop over arrivals and engine
+//! steps (mixed prefill + decode).
+//!
+//! Step semantics (fidelity rules the regression tests pin down):
+//!
+//! * **Admission only at step boundaries.** A request arriving while a
+//!   step is in flight is enqueued and waits for the next `StepDone`;
+//!   it can never join a step it was not priced into (which would mint
+//!   free tokens and under-count its latency).
+//! * **Steps are planned, then priced, then completed.** At each
+//!   boundary the batcher plans a [`StepBatch`](super::StepBatch)
+//!   (decode lanes + a prefill chunk), the engine prices it, and the
+//!   completion event applies exactly that plan.
+//! * **Occupancy statistics are duration-weighted.** `mean_batch`
+//!   integrates lanes over busy time, so engines with batch-dependent
+//!   step latency (the analytic backend) don't bias the mean.
+//! * **Limits are exact.** `max_steps = N` prices exactly N steps.
 
 use crate::des::EventQueue;
 
 use super::batcher::Batcher;
 use super::engine::StepEngine;
-use super::metrics::ServingReport;
+use super::metrics::{ServingReport, StepStats};
 use super::request::Request;
 
 /// Simulation parameters.
@@ -13,7 +29,7 @@ pub struct SimConfig {
     /// Hard stop on simulated seconds (safety valve; `f64::INFINITY` to
     /// run to drain).
     pub max_time: f64,
-    /// Hard stop on steps.
+    /// Hard stop on steps (enforced exactly).
     pub max_steps: u64,
 }
 
@@ -43,7 +59,7 @@ impl<'a> ServingSim<'a> {
 
     /// Run the given workload to completion (or a configured limit) and
     /// report. The engine is stepped whenever requests are active; a new
-    /// step is scheduled at `now + step_latency(batch, max_ctx)`.
+    /// step is scheduled at `now + mixed_step_latency(plan)`.
     pub fn run(mut self, workload: Vec<Request>) -> ServingReport {
         let mut q: EventQueue<Event> = EventQueue::new();
         for r in workload {
@@ -52,7 +68,8 @@ impl<'a> ServingSim<'a> {
 
         let mut finished: Vec<Request> = Vec::new();
         let mut steps: u64 = 0;
-        let mut batch_integral: f64 = 0.0;
+        let mut batch_time_integral: f64 = 0.0;
+        let mut busy_time: f64 = 0.0;
         let mut step_in_flight = false;
 
         while let Some((now, ev)) = q.next() {
@@ -66,29 +83,32 @@ impl<'a> ServingSim<'a> {
                     steps += 1;
                 }
             }
-            if now > self.cfg.max_time || steps > self.cfg.max_steps {
+            if now > self.cfg.max_time || steps >= self.cfg.max_steps {
                 break;
             }
-            // At every event boundary: admit, then (re)start the engine.
-            self.batcher.admit(now);
-            if !step_in_flight && self.batcher.active_len() > 0 {
-                let b = self.batcher.active_len() as u64;
-                let ctx = self.batcher.max_seq_len();
-                let dt = self.engine.step_latency(b, ctx);
-                batch_integral += b as f64;
-                q.schedule_in(dt, Event::StepDone);
-                step_in_flight = true;
+            // Step boundary (or idle): admit, plan, and price one step.
+            // While a step is in flight, arrivals above only enqueue.
+            if !step_in_flight {
+                self.batcher.admit(now);
+                let plan = self.batcher.plan_step();
+                if !plan.is_empty() {
+                    let dt = self.engine.mixed_step_latency(&plan);
+                    batch_time_integral += plan.lanes() as f64 * dt;
+                    busy_time += dt;
+                    q.schedule_in(dt, Event::StepDone);
+                    step_in_flight = true;
+                }
             }
         }
 
-        let end = q.now();
-        ServingReport::from_requests(
-            self.engine.name(),
-            &finished,
+        let stats = StepStats {
             steps,
-            batch_integral,
-            end,
-        )
+            batch_time_integral,
+            busy_time,
+            prefill_tokens: self.batcher.prefill_tokens_processed(),
+            end_time: q.now(),
+        };
+        ServingReport::from_requests(self.engine.name(), &finished, &stats)
     }
 }
 
@@ -113,6 +133,19 @@ mod tests {
         }
     }
 
+    /// Step latency proportional to the lane count — the shape that
+    /// exposes per-step-averaged (instead of duration-weighted) batch
+    /// statistics.
+    struct BatchProportionalEngine(f64);
+    impl StepEngine for BatchProportionalEngine {
+        fn step_latency(&mut self, batch: u64, _ctx: u64) -> f64 {
+            self.0 * batch as f64
+        }
+        fn name(&self) -> String {
+            "batch-proportional".into()
+        }
+    }
+
     fn small_workload(n: u64) -> Vec<Request> {
         WorkloadGen::new(WorkloadSpec {
             arrival_rate: 1000.0,
@@ -124,10 +157,28 @@ mod tests {
         .generate()
     }
 
+    fn mk_req(id: u64, arrival: f64, ctx: u64, gen: u64) -> Request {
+        Request {
+            id,
+            arrival,
+            context_len: ctx,
+            gen_len: gen,
+            generated: 0,
+            prefilled: 0,
+            scheduled_prefill: 0,
+            admitted_at: None,
+            first_token_at: None,
+            completed_at: None,
+        }
+    }
+
+    fn open_budget() -> KvBudget {
+        KvBudget::new(1e9, 0.0, 1.0)
+    }
+
     #[test]
     fn completes_all_requests() {
-        let kv = KvBudget::new(1e9, 0.0, 1.0);
-        let batcher = Batcher::new(8, kv);
+        let batcher = Batcher::new(8, open_budget());
         let mut eng = FixedEngine(0.01);
         let rep = ServingSim::new(batcher, &mut eng, SimConfig::default())
             .run(small_workload(50));
@@ -139,8 +190,7 @@ mod tests {
     #[test]
     fn batching_raises_system_throughput() {
         let run = |max_batch| {
-            let kv = KvBudget::new(1e9, 0.0, 1.0);
-            let batcher = Batcher::new(max_batch, kv);
+            let batcher = Batcher::new(max_batch, open_budget());
             let mut eng = FixedEngine(0.01);
             ServingSim::new(batcher, &mut eng, SimConfig::default())
                 .run(small_workload(100))
@@ -158,8 +208,7 @@ mod tests {
 
     #[test]
     fn queue_delay_appears_under_load() {
-        let kv = KvBudget::new(1e9, 0.0, 1.0);
-        let batcher = Batcher::new(1, kv); // serialize everything
+        let batcher = Batcher::new(1, open_budget()); // serialize everything
         let mut eng = FixedEngine(0.05);
         let rep = ServingSim::new(batcher, &mut eng, SimConfig::default())
             .run(small_workload(20));
@@ -167,9 +216,8 @@ mod tests {
     }
 
     #[test]
-    fn respects_step_limit() {
-        let kv = KvBudget::new(1e9, 0.0, 1.0);
-        let batcher = Batcher::new(8, kv);
+    fn respects_step_limit_exactly() {
+        let batcher = Batcher::new(8, open_budget());
         let mut eng = FixedEngine(0.01);
         let rep = ServingSim::new(
             batcher,
@@ -177,6 +225,81 @@ mod tests {
             SimConfig { max_steps: 5, ..Default::default() },
         )
         .run(small_workload(1000));
-        assert!(rep.steps <= 6);
+        // Regression: the limit used to be enforced off-by-one, letting
+        // a 6th step run (the old test even asserted `<= 6`).
+        assert_eq!(rep.steps, 5);
+    }
+
+    #[test]
+    fn arrivals_mid_step_wait_for_the_boundary() {
+        // r0 arrives at 0 and runs a 0.1 s step alone. r1 and r2 arrive
+        // at 0.05, while that step is in flight: they must be admitted
+        // at 0.1 and complete at 0.2 — never credited a token from the
+        // step that was priced for r0 alone (the seed behavior, which
+        // finished everything by 0.1).
+        let batcher = Batcher::new(8, open_budget());
+        let mut eng = FixedEngine(0.1);
+        let rep = ServingSim::new(batcher, &mut eng, SimConfig::default()).run(vec![
+            mk_req(0, 0.0, 8, 1),
+            mk_req(1, 0.05, 8, 1),
+            mk_req(2, 0.05, 8, 1),
+        ]);
+        assert_eq!(rep.completed, 3);
+        assert_eq!(rep.steps, 2);
+        assert!((rep.span - 0.2).abs() < 1e-9, "span {}", rep.span);
+        // r1/r2 queued for 0.05 s each.
+        assert!((rep.queue_delay_mean - 0.1 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_batch_is_duration_weighted() {
+        // Step 1: one lane for 0.1 s. Step 2: two lanes for 0.2 s.
+        // Duration-weighted occupancy = (1*0.1 + 2*0.2) / 0.3 = 5/3;
+        // the seed's per-step average said 1.5.
+        let batcher = Batcher::new(8, open_budget());
+        let mut eng = BatchProportionalEngine(0.1);
+        let rep = ServingSim::new(batcher, &mut eng, SimConfig::default()).run(vec![
+            mk_req(0, 0.0, 8, 1),
+            mk_req(1, 0.05, 8, 1),
+            mk_req(2, 0.05, 8, 1),
+        ]);
+        assert_eq!(rep.steps, 2);
+        assert!(
+            (rep.mean_batch - 5.0 / 3.0).abs() < 1e-9,
+            "mean_batch {}",
+            rep.mean_batch
+        );
+    }
+
+    #[test]
+    fn ttft_positive_and_prefill_accounted() {
+        // 100-token prompts at 30 tokens/chunk: 4 prefill steps before
+        // the first token, then decode. TTFT must be strictly positive
+        // and larger than a decode-only TPOT.
+        let batcher = Batcher::with_prefill(8, open_budget(), 30);
+        let mut eng = FixedEngine(0.01);
+        let rep = ServingSim::new(batcher, &mut eng, SimConfig::default()).run(vec![
+            mk_req(0, 0.0, 100, 5),
+            mk_req(1, 0.0, 100, 5),
+        ]);
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.prefill_tokens, 200);
+        assert!(rep.ttft.p50 > 0.0);
+        // r0's prompt drains one chunk per step over steps 1-4 (TTFT
+        // 0.04); r1's chunks then run during r0's decode steps 5-8
+        // (TTFT 0.08).
+        assert!((rep.ttft.mean - 0.06).abs() < 1e-9, "ttft {}", rep.ttft.mean);
+        assert!((rep.tpot.p50 - 0.01).abs() < 1e-9, "tpot {}", rep.tpot.p50);
+        assert!(rep.e2e.p99 > rep.ttft.p99);
+    }
+
+    #[test]
+    fn decode_only_mode_reports_zero_prefill() {
+        let batcher = Batcher::new(8, open_budget());
+        let mut eng = FixedEngine(0.01);
+        let rep = ServingSim::new(batcher, &mut eng, SimConfig::default())
+            .run(small_workload(10));
+        assert_eq!(rep.prefill_tokens, 0);
+        assert!(rep.ttft.p50 > 0.0); // first decode step still takes time
     }
 }

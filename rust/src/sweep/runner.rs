@@ -67,7 +67,10 @@ impl SweepRunner {
         context: u64,
     ) -> Vec<Record> {
         let Some(app) = self.registry.app(model) else {
-            return vec![Record::unservable(model, &format!("{}-TP{tp}", chip.name), tp, 1, context)];
+            // pp = 0 is the "no system was sized" sentinel, matching the
+            // fit-failure path below (this used to pass 1 here and 0
+            // there, so unservable rows disagreed about their shape).
+            return vec![Record::unservable(model, &format!("{}-TP{tp}", chip.name), tp, 0, context)];
         };
         let app: &dyn Application = app.as_ref();
 
@@ -176,6 +179,24 @@ mod tests {
             assert_eq!(x.system, y.system);
             assert_eq!(x.utps, y.utps);
         }
+    }
+
+    #[test]
+    fn unservable_cells_use_the_same_pp_sentinel() {
+        let runner = SweepRunner::default();
+        let grid = Grid {
+            models: vec!["not-a-model".into()],
+            chips: vec![presets::hbm3()],
+            tps: vec![8],
+            contexts: vec![4096],
+            batch: BatchSpec::Fixed(vec![1]),
+            fit_pp: false,
+        };
+        let recs = runner.run(&grid);
+        assert_eq!(recs.len(), 1);
+        assert!(!recs[0].servable());
+        // pp = 0 marks "no system sized", consistent with fit failures.
+        assert_eq!(recs[0].pp, 0);
     }
 
     #[test]

@@ -139,14 +139,21 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
     /// Byte offset of the error.
     pub pos: usize,
     /// What went wrong.
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

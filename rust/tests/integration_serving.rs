@@ -9,11 +9,12 @@ use liminal::serving::{
     AnalyticEngine, Batcher, KvBudget, ServingSim, SimConfig, WorkloadGen, WorkloadSpec,
 };
 
-fn run_70b(
+fn run_70b_chunked(
     tp: u64,
     max_batch: usize,
     rate: f64,
     n: u64,
+    prefill_chunk: u64,
 ) -> liminal::serving::ServingReport {
     let registry = Registry::builtin();
     let app = registry.app("llama3-70b").unwrap();
@@ -23,7 +24,7 @@ fn run_70b(
         app.weight_bytes(),
         app.kv_bytes_per_token(),
     );
-    let batcher = Batcher::new(max_batch, kv);
+    let batcher = Batcher::with_prefill(max_batch, kv, prefill_chunk);
     let mut engine = AnalyticEngine::new(Arc::clone(&app), sys);
     let workload = WorkloadGen::new(WorkloadSpec {
         arrival_rate: rate,
@@ -34,6 +35,10 @@ fn run_70b(
     })
     .generate();
     ServingSim::new(batcher, &mut engine, SimConfig::default()).run(workload)
+}
+
+fn run_70b(tp: u64, max_batch: usize, rate: f64, n: u64) -> liminal::serving::ServingReport {
+    run_70b_chunked(tp, max_batch, rate, n, 0)
 }
 
 #[test]
@@ -79,4 +84,48 @@ fn all_tokens_accounted() {
     // 30 requests x gen in [32, 128) -> tokens in a sane envelope.
     assert!(rep.tokens >= 30 * 32 && rep.tokens < 30 * 128);
     assert!(rep.steps as f64 >= rep.tokens as f64 / 16.0);
+}
+
+#[test]
+fn prefill_aware_run_reports_slos() {
+    // Acceptance: a prefill-aware paper-scale run yields nonzero TTFT
+    // for every request (prompts are 2K-8K tokens) and a TPOT near the
+    // steady-state decode cadence.
+    let rep = run_70b_chunked(8, 32, 20.0, 40, 1024);
+    assert_eq!(rep.completed, 40);
+    // Every prompt token was actually prefilled.
+    assert!(rep.prefill_tokens >= 40 * 2048, "{}", rep.prefill_tokens);
+    // TTFT: at least one ~8 ms chunk step, well below the e2e latency.
+    assert!(rep.ttft.p50 > 0.005, "ttft p50 {}", rep.ttft.p50);
+    assert!(rep.ttft.p99 >= rep.ttft.p50);
+    assert!(rep.e2e.p50 > rep.ttft.p50);
+    // TPOT brackets the single-user decode cadence (486 UTPS -> ~2 ms)
+    // allowing for batching-induced stretch.
+    assert!(rep.tpot.p50 > 0.0015 && rep.tpot.p50 < 0.05, "tpot {}", rep.tpot.p50);
+}
+
+#[test]
+fn prefill_lengthens_the_run_but_completes_everything() {
+    let decode_only = run_70b(8, 32, 100.0, 40);
+    let chunked = run_70b_chunked(8, 32, 100.0, 40, 1024);
+    assert_eq!(decode_only.completed, 40);
+    assert_eq!(chunked.completed, 40);
+    // Prefill is real work: the span cannot shrink, and TTFT grows.
+    assert!(chunked.span >= decode_only.span * 0.99);
+    assert!(chunked.ttft.p50 > decode_only.ttft.p50);
+    assert_eq!(decode_only.prefill_tokens, 0);
+}
+
+#[test]
+fn smaller_chunks_bound_decode_stalls_but_stretch_ttft() {
+    // Chunked prefill's core trade: smaller chunks mean more steps to
+    // ingest a prompt (worse TTFT under light load) but shorter
+    // individual mixed steps (tighter TPOT tail for decode lanes).
+    let coarse = run_70b_chunked(8, 32, 20.0, 40, 4096);
+    let fine = run_70b_chunked(8, 32, 20.0, 40, 512);
+    assert_eq!(coarse.completed, 40);
+    assert_eq!(fine.completed, 40);
+    assert!(fine.ttft.p50 > coarse.ttft.p50 * 0.9, "fine {} coarse {}", fine.ttft.p50, coarse.ttft.p50);
+    // Decode lanes see shorter worst-case steps with finer chunks.
+    assert!(fine.tpot.p99 <= coarse.tpot.p99 * 1.5);
 }

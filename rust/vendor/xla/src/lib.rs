@@ -1,0 +1,204 @@
+//! Offline stub of the `xla-rs` API surface that `liminal`'s PJRT
+//! runtime layer compiles against.
+//!
+//! The real backend (LaurentMazare/xla-rs over `libxla_extension.so`)
+//! is not vendorable, so this stub keeps the crate buildable and
+//! testable everywhere: every entry point that would touch a real PJRT
+//! client returns a descriptive [`Error`] instead. Since artifact-gated
+//! code paths first check for `artifacts/manifest.json` and then create
+//! a client, the stub degrades gracefully — analytic code never notices.
+//!
+//! To run real artifacts, replace this path dependency with the real
+//! `xla` crate in `rust/Cargo.toml`; the types and signatures here
+//! mirror the subset of its API that liminal uses.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?`/`context`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: xla stub backend (swap rust/vendor/xla for real xla-rs to execute artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element type of a literal/buffer (subset used by liminal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    /// 32-bit float.
+    F32,
+    /// 64-bit float.
+    F64,
+    /// 32-bit signed integer.
+    S32,
+    /// 64-bit signed integer.
+    S64,
+}
+
+/// A host-side tensor value. The stub tracks shape/dtype metadata only;
+/// element storage is not needed because nothing can execute.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: PrimitiveType,
+    dims: Vec<usize>,
+}
+
+impl Literal {
+    /// Zero-initialized literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        Literal { ty, dims: dims.to_vec() }
+    }
+
+    /// Rank-1 literal from a host slice (dtype is nominally f32 in the
+    /// stub; only the element count is observable).
+    pub fn vec1<T: Copy>(data: &[T]) -> Literal {
+        Literal { ty: PrimitiveType::F32, dims: vec![data.len()] }
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// The literal's element type.
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+
+    /// Overwrite contents from a host slice. The stub accepts (and
+    /// drops) the data so setup paths like zeroing/randomizing inputs
+    /// succeed; only execution is unsupported.
+    pub fn copy_raw_from<T: Copy>(&mut self, data: &[T]) -> Result<()> {
+        if data.len() != self.element_count() {
+            return Err(Error(format!(
+                "copy_raw_from: {} elements into literal of {}",
+                data.len(),
+                self.element_count()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read contents back to the host (stub: zeros).
+    pub fn to_vec<T: Default + Clone>(&self) -> Result<Vec<T>> {
+        Ok(vec![T::default(); self.element_count()])
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub fails: real parsing needs XLA.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A PJRT client handle.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. The stub always fails — this is the
+    /// single gate that keeps all execution paths unreachable.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    /// Platform name for logs.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_track_shape() {
+        let mut l = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        assert_eq!(l.element_count(), 6);
+        assert!(l.copy_raw_from(&[0f32; 6]).is_ok());
+        assert!(l.copy_raw_from(&[0f32; 5]).is_err());
+        let v: Vec<f32> = l.to_vec().unwrap();
+        assert_eq!(v.len(), 6);
+        assert_eq!(Literal::vec1(&[1f32, 2.0]).element_count(), 2);
+    }
+
+    #[test]
+    fn execution_paths_error_descriptively() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
