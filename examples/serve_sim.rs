@@ -1,13 +1,19 @@
 //! Serving simulation: dynamic continuous batching on a paper-scale
-//! system, now covering the full request lifecycle — prompts are
-//! ingested in prefill chunks before decode, and the report carries the
+//! system, covering the full request lifecycle — prompts are ingested
+//! in prefill chunks before decode, and the report carries the
 //! TTFT / TPOT / E2E SLO percentiles that steady-state tables cannot
-//! express. If AOT artifacts exist, the same scheduler also drives the
-//! real PJRT decode engine.
+//! express. The same instance state machine then scales out: N
+//! instances behind a router on one event calendar, colocated or
+//! disaggregated into prefill/decode pools with modeled KV shipment.
+//! If AOT artifacts exist, the scheduler also drives the real PJRT
+//! decode engine.
 //!
 //! Run with: cargo run --release --example serve_sim
 
-use liminal::coordinator::{default_job, serve, Backend};
+use liminal::coordinator::{
+    default_cluster_job, default_job, serve, serve_cluster, Backend,
+    RouterPolicy,
+};
 use liminal::hw::{presets, SystemConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -37,6 +43,69 @@ fn main() -> anyhow::Result<()> {
     let rep = serve(&job)?;
     println!("decode-only baseline  -> {}", rep.summary());
     println!("    TTFT p50 {:.4}s (no prefill modeled)", rep.ttft.p50);
+
+    // Scale-out: the same workload shape on 1/2/4/8 TP8 instances
+    // behind a round-robin router, load proportional to the cluster.
+    println!("\n== scale-out (colocated, round-robin, TP8 instances) ==");
+    for n in [1usize, 2, 4, 8] {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = n;
+        job.max_batch = 16;
+        job.prefill_chunk = 512;
+        job.workload.arrival_rate = 10.0 * n as f64;
+        job.workload.n_requests = 50 * n as u64;
+        job.workload.context = (512, 2048);
+        job.workload.gen = (64, 128);
+        let rep = serve_cluster(&job)?;
+        println!("{}", rep.summary());
+    }
+
+    // Routers under skewed overload: least-tokens balances work,
+    // SLO-aware admission sheds to hold the TTFT tail.
+    println!("\n== routers at skewed overload (8 colocated instances) ==");
+    for policy in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastTokens,
+        RouterPolicy::SloAware,
+    ] {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 8;
+        job.max_batch = 16;
+        job.prefill_chunk = 512;
+        job.router = policy;
+        job.ttft_target = 0.2;
+        job.workload.arrival_rate = 300.0;
+        job.workload.n_requests = 200;
+        job.workload.context = (256, 8192);
+        job.workload.gen = (16, 512);
+        let rep = serve_cluster(&job)?;
+        println!("{}", rep.summary());
+    }
+
+    // Disaggregated prefill/decode pools: KV ships over the modeled
+    // interconnect before decode admission, so TTFT sees the stall and
+    // decode steps never carry prefill chunks.
+    println!("\n== colocated x8 vs disaggregated 4P+4D at 300 req/s ==");
+    for prefill_instances in [0usize, 4] {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 8;
+        job.prefill_instances = prefill_instances;
+        job.max_batch = 16;
+        job.prefill_chunk = 512;
+        job.workload.arrival_rate = 300.0;
+        job.workload.n_requests = 200;
+        job.workload.context = (512, 2048);
+        job.workload.gen = (128, 256);
+        let rep = serve_cluster(&job)?;
+        println!("{}", rep.summary());
+        print!("{}", rep.pool_summary());
+        for line in rep.slo_summary().lines() {
+            println!("    {line}");
+        }
+    }
 
     // PJRT backend: the real AOT decode step, if artifacts are built.
     if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -1,0 +1,62 @@
+//! Cluster-scale serving: N model instances behind a router, colocated
+//! or disaggregated into prefill/decode pools.
+//!
+//! # Why a cluster layer, per the paper
+//!
+//! LIMINAL's limit study ends where scale-up ends: past ~10k tokens/s
+//! per user the binding constraints are **collective communication**
+//! (the tiered all-reduce latency that flattens decode scaling beyond
+//! 16-chip TP domains) and **capacity** (KV cache competing with
+//! weights). Neither constraint yields to a bigger box — the paper caps
+//! TP at 128 chips outright — so production systems attack them by
+//! scaling *out*: many model instances behind a router, each instance
+//! staying inside the sync-latency sweet spot, with cluster throughput
+//! multiplying in instances instead of dividing into collectives.
+//! Disaggregating prefill from decode is the same argument applied to
+//! the roofline: prefill is compute-bound, decode is bandwidth-bound,
+//! and a fused step must run both at whichever roofline is slower. A
+//! dedicated prefill pool feeds a decode pool over the scale-out
+//! interconnect — KV bytes at [`ClusterSpec::kv_link_bw`], paid before
+//! decode admission — trading a per-request shipment stall for keeping
+//! every pool at its own roofline, with the decode pool reverting to
+//! the paper's decode-only pricing. The `cluster-scaling` experiment
+//! measures both sides of that trade.
+//!
+//! # Structure
+//!
+//! * [`ClusterSim`] — N [`Instance`](crate::serving::Instance)s (each a
+//!   batcher + engine + KV budget, the exact state machine
+//!   [`ServingSim`](crate::serving::ServingSim) drives alone)
+//!   multiplexed on one [`EventQueue`](crate::des::EventQueue) of
+//!   [`InstanceEvent`](crate::serving::InstanceEvent)s keyed by
+//!   instance id, so cross-instance causality is totally ordered and
+//!   seeded runs replay exactly.
+//! * [`Router`] — pluggable front-door policy: [`RoundRobin`],
+//!   [`LeastOutstandingTokens`], or [`SloAdmission`] (sheds requests
+//!   whose predicted TTFT exceeds the target).
+//! * [`ClusterMode::Disaggregated`] — dedicated prefill instances
+//!   ingest prompts, then ship each request's KV
+//!   (`context_len * kv_bytes_per_token` bytes) to the least-committed
+//!   decode instance; every output token (including the first) comes
+//!   from the decode pool, so the transfer stall lands in TTFT.
+//! * [`ClusterReport`] — per-instance
+//!   [`ServingReport`](crate::serving::ServingReport)s plus a merged
+//!   cluster report whose percentiles are recomputed over the pooled
+//!   per-request samples, per-pool utilization, scale-out efficiency
+//!   (tokens/s/instance), and JSON export for experiment artifacts.
+//!
+//! A one-instance colocated cluster behind a pass-through router is
+//! step-for-step identical to [`ServingSim`](crate::serving::ServingSim)
+//! — the equivalence test in `tests/integration_cluster.rs` anchors the
+//! whole layer to the validated single-instance simulator.
+
+mod report;
+mod router;
+mod sim;
+
+pub use report::{ClusterReport, PoolStats};
+pub use router::{
+    InstanceLoad, LeastOutstandingTokens, Role, RoundRobin, Router,
+    SloAdmission,
+};
+pub use sim::{ClusterMode, ClusterSim, ClusterSpec};

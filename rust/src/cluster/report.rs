@@ -1,0 +1,213 @@
+//! Cluster-level aggregation of per-instance serving reports.
+
+use crate::serving::{LatencyStats, ServingReport};
+use crate::util::json::Json;
+
+/// Utilization summary of one pool (colocated / prefill / decode).
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    /// Pool label (`colo`, `prefill`, or `decode`).
+    pub label: String,
+    /// Instances in the pool.
+    pub instances: usize,
+    /// Steps executed across the pool.
+    pub steps: u64,
+    /// Mean fraction of the run each pool instance spent with a step in
+    /// flight (busy seconds over run seconds, averaged over instances).
+    pub busy_frac: f64,
+    /// Duration-weighted mean lanes per step across the pool.
+    pub mean_batch: f64,
+    /// Output tokens generated at the pool (0 for a prefill pool: its
+    /// instances ingest prompts, the decode pool emits every token).
+    pub tokens: u64,
+}
+
+/// Aggregated results of one cluster-simulation run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Routing policy name.
+    pub router: String,
+    /// Mode string, e.g. `colocated x8` or `disaggregated 3P+5D`.
+    pub mode: String,
+    /// Requests offered to the router.
+    pub offered: u64,
+    /// Requests shed by admission control (never served).
+    pub shed: u64,
+    /// Cluster-level aggregate over full request lifecycles: the
+    /// percentiles are recomputed from the pooled per-request samples
+    /// (never averaged across instances), and TTFT / TPOT / E2E are
+    /// measured arrival-to-completion even when a request hops from a
+    /// prefill to a decode instance — the KV-transfer stall lands in
+    /// TTFT, where a user would feel it.
+    pub cluster: ServingReport,
+    /// One report per instance, over the sub-requests it retired (a
+    /// prefill instance's report measures prompt ingestion).
+    pub per_instance: Vec<ServingReport>,
+    /// Per-pool utilization summaries.
+    pub pools: Vec<PoolStats>,
+    /// KV bytes shipped prefill -> decode (0 in colocated mode).
+    pub kv_shipped_bytes: f64,
+    /// Mean KV shipment latency, seconds (0 when nothing shipped).
+    pub kv_transfer_mean: f64,
+}
+
+impl ClusterReport {
+    /// Scale-out efficiency: cluster tokens/second per instance. Perfect
+    /// scaling keeps this flat as instances are added; router imbalance
+    /// and pool mis-sizing show up as decay.
+    pub fn stps_per_instance(&self) -> f64 {
+        self.cluster.stps / self.per_instance.len().max(1) as f64
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "[{} | {}] {}/{} reqs ({} shed), {} tok in {:.2}s -> STPS {:.1} \
+             ({:.1}/instance), TTFT p99 {:.3}s, TPOT p99 {:.1}ms",
+            self.router,
+            self.mode,
+            self.cluster.completed,
+            self.offered,
+            self.shed,
+            self.cluster.tokens,
+            self.cluster.span,
+            self.cluster.stps,
+            self.stps_per_instance(),
+            self.cluster.ttft.p99,
+            self.cluster.tpot.p99 * 1e3,
+        )
+    }
+
+    /// Multi-line per-pool utilization summary.
+    pub fn pool_summary(&self) -> String {
+        let mut out = String::new();
+        for p in &self.pools {
+            out.push_str(&format!(
+                "pool {:<8} x{}  busy {:>5.1}%  mean batch {:>5.1}  \
+                 steps {:>7}  tokens {}\n",
+                p.label,
+                p.instances,
+                p.busy_frac * 100.0,
+                p.mean_batch,
+                p.steps,
+                p.tokens,
+            ));
+        }
+        if self.kv_shipped_bytes > 0.0 {
+            out.push_str(&format!(
+                "kv shipped {:.2} GiB, mean transfer {:.3} ms\n",
+                self.kv_shipped_bytes / crate::GIB,
+                self.kv_transfer_mean * 1e3,
+            ));
+        }
+        out
+    }
+
+    /// Cluster-level SLO percentiles (delegates to the merged report).
+    pub fn slo_summary(&self) -> String {
+        self.cluster.slo_summary()
+    }
+
+    /// Machine-readable form (the `cluster-scaling` experiment writes
+    /// one of these per router policy as a JSON artifact).
+    pub fn to_json(&self) -> Json {
+        fn lat(s: &LatencyStats) -> Json {
+            Json::obj(vec![
+                ("mean", Json::Num(s.mean)),
+                ("p50", Json::Num(s.p50)),
+                ("p90", Json::Num(s.p90)),
+                ("p99", Json::Num(s.p99)),
+            ])
+        }
+        Json::obj(vec![
+            ("router", Json::Str(self.router.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("completed", Json::Num(self.cluster.completed as f64)),
+            ("tokens", Json::Num(self.cluster.tokens as f64)),
+            ("span_s", Json::Num(self.cluster.span)),
+            ("stps", Json::Num(self.cluster.stps)),
+            ("stps_per_instance", Json::Num(self.stps_per_instance())),
+            ("instances", Json::Num(self.per_instance.len() as f64)),
+            ("ttft_s", lat(&self.cluster.ttft)),
+            ("tpot_s", lat(&self.cluster.tpot)),
+            ("e2e_s", lat(&self.cluster.e2e)),
+            ("kv_shipped_bytes", Json::Num(self.kv_shipped_bytes)),
+            ("kv_transfer_mean_s", Json::Num(self.kv_transfer_mean)),
+            (
+                "pools",
+                Json::Arr(
+                    self.pools
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("label", Json::Str(p.label.clone())),
+                                ("instances", Json::Num(p.instances as f64)),
+                                ("steps", Json::Num(p.steps as f64)),
+                                ("busy_frac", Json::Num(p.busy_frac)),
+                                ("mean_batch", Json::Num(p.mean_batch)),
+                                ("tokens", Json::Num(p.tokens as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{ServingReport, StepStats};
+
+    fn empty_rep(name: &str) -> ServingReport {
+        ServingReport::from_requests(name.into(), &[], &StepStats::default())
+    }
+
+    fn sample() -> ClusterReport {
+        ClusterReport {
+            router: "round-robin".into(),
+            mode: "disaggregated 1P+1D".into(),
+            offered: 10,
+            shed: 2,
+            cluster: empty_rep("cluster"),
+            per_instance: vec![empty_rep("i0"), empty_rep("i1")],
+            pools: vec![PoolStats {
+                label: "prefill".into(),
+                instances: 1,
+                steps: 5,
+                busy_frac: 0.5,
+                mean_batch: 2.0,
+                tokens: 0,
+            }],
+            kv_shipped_bytes: 2.0 * crate::GIB,
+            kv_transfer_mean: 0.001,
+        }
+    }
+
+    #[test]
+    fn summaries_render() {
+        let rep = sample();
+        assert!(rep.summary().contains("round-robin"));
+        assert!(rep.summary().contains("2 shed"));
+        assert!(rep.pool_summary().contains("prefill"));
+        assert!(rep.pool_summary().contains("kv shipped"));
+        assert!(rep.slo_summary().contains("TTFT"));
+        assert_eq!(rep.stps_per_instance(), 0.0);
+    }
+
+    #[test]
+    fn json_round_trips_the_headline_numbers() {
+        let rep = sample();
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("router").unwrap().as_str(), Some("round-robin"));
+        assert_eq!(j.get("shed").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("instances").unwrap().as_u64(), Some(2));
+        let pools = j.get("pools").unwrap().as_arr().unwrap();
+        assert_eq!(pools.len(), 1);
+        assert_eq!(pools[0].get("label").unwrap().as_str(), Some("prefill"));
+        assert!(j.get("ttft_s").unwrap().get("p99").is_some());
+    }
+}

@@ -1,0 +1,719 @@
+//! The cluster simulator: N [`Instance`]s multiplexed on one event
+//! calendar, behind a pluggable router, in colocated or disaggregated
+//! prefill/decode mode.
+//!
+//! Every instance is the same state machine the single-instance
+//! simulator drives ([`crate::serving::Instance`]): its own batcher
+//! (admission queue + KV budget + chunk planner) and step engine. All
+//! instances share a single [`EventQueue`](crate::des::EventQueue) of
+//! [`InstanceEvent`]s keyed by instance id, so cross-instance causality
+//! (arrival routing, KV shipment) is ordered by one total-order clock
+//! and seeded runs replay exactly.
+//!
+//! # Disaggregated semantics
+//!
+//! In [`ClusterMode::Disaggregated`] the prefill pool runs chunked
+//! prefill *only*: a routed request is truncated to a pure-ingestion
+//! sub-request; when its last chunk lands, the prompt's KV cache —
+//! `context_len * kv_bytes_per_token` bytes — ships to the
+//! least-loaded decode instance over the configured link
+//! ([`ClusterSpec::kv_link_bw`]), and the transfer latency
+//! (`bytes / link_bw`) is paid **before decode admission**. The first
+//! output token is then produced by the decode pool's first step, so
+//! TTFT honestly includes queueing, prefill chunking, the shipment
+//! stall, and decode admission. Decode instances run the paper's
+//! decode-only pricing (prefill chunk 0 — their steps never carry
+//! prefill tokens); the prefill pool's per-instance reports measure
+//! ingestion, not token generation.
+
+use std::collections::HashMap;
+
+use crate::des::EventQueue;
+use crate::serving::{
+    Batcher, Instance, InstanceEvent, KvBudget, Request, ServingReport,
+    SimConfig, StepEngine, StepStats,
+};
+
+use super::report::{ClusterReport, PoolStats};
+use super::router::{argmin, InstanceLoad, Role, Router};
+
+/// How the cluster's instances divide the request lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// Every instance serves the full lifecycle (chunked prefill +
+    /// decode), like N independent copies of the serving simulator.
+    Colocated,
+    /// The first `prefill` instances only ingest prompts; the remaining
+    /// instances only decode, fed by KV shipped over the interconnect.
+    Disaggregated {
+        /// Number of dedicated prefill instances (at least 1, and at
+        /// least one instance must remain for the decode pool).
+        prefill: usize,
+    },
+}
+
+/// Cluster-wide configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Lifecycle split across instances.
+    pub mode: ClusterMode,
+    /// Max concurrent sequences per instance.
+    pub max_batch: usize,
+    /// Prefill chunk tokens per step on prefill-capable instances.
+    pub prefill_chunk: u64,
+    /// Interconnect bandwidth for shipping KV prefill -> decode,
+    /// bytes/s. `f64::INFINITY` models an ideal (free) link — the
+    /// paper's decode-only idealization. Production entry points
+    /// ([`crate::coordinator::serve_cluster`]) default this to
+    /// [`crate::hw::SystemConfig::interconnect_bw`], which aggregates
+    /// [`crate::hw::DEFAULT_XFER_BW_PER_CHIP`] over the instance's TP
+    /// domain.
+    pub kv_link_bw: f64,
+    /// Global step/time limits (steps count across all instances).
+    pub sim: SimConfig,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            mode: ClusterMode::Colocated,
+            max_batch: 32,
+            prefill_chunk: crate::model::DEFAULT_PREFILL_CHUNK,
+            kv_link_bw: crate::hw::DEFAULT_XFER_BW_PER_CHIP,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+/// The cluster simulator. Build with [`ClusterSim::new`], then
+/// [`ClusterSim::run`] a workload to get a [`ClusterReport`].
+pub struct ClusterSim {
+    instances: Vec<Instance<'static>>,
+    roles: Vec<Role>,
+    /// Front-door candidate indices (roles are fixed at construction).
+    front_door: Vec<usize>,
+    /// Decode-side KV footprint committed to in-flight shipments, per
+    /// instance (so placement sees transfers that have not landed yet).
+    in_transit_kv: Vec<f64>,
+    router: Box<dyn Router>,
+    spec: ClusterSpec,
+    kv_bytes_per_token: f64,
+    /// Disaggregated bookkeeping: request id -> full generation length,
+    /// parked while the truncated ingestion sub-request runs at the
+    /// prefill pool.
+    decode_gen: HashMap<u64, u64>,
+    /// KV bytes shipped prefill -> decode so far.
+    kv_shipped_bytes: f64,
+    /// Sum of shipment latencies, seconds.
+    kv_transfer_total: f64,
+    /// Number of shipments.
+    kv_transfers: u64,
+}
+
+impl ClusterSim {
+    /// Build a cluster of `engines.len()` instances. Every instance gets
+    /// a clone of `kv` as its KV budget; in disaggregated mode the first
+    /// `prefill` engines form the prefill pool and the rest the decode
+    /// pool (decode instances run with prefill chunk 0: prompts arrive
+    /// already in KV, the paper's disaggregated assumption).
+    ///
+    /// Panics on an empty engine list, a non-positive `kv_link_bw`, or a
+    /// disaggregated split that leaves either pool empty.
+    pub fn new(
+        engines: Vec<Box<dyn StepEngine>>,
+        kv: KvBudget,
+        router: Box<dyn Router>,
+        spec: ClusterSpec,
+    ) -> Self {
+        assert!(!engines.is_empty(), "cluster needs at least one instance");
+        assert!(spec.kv_link_bw > 0.0, "kv_link_bw must be positive");
+        if let ClusterMode::Disaggregated { prefill } = spec.mode {
+            assert!(
+                prefill >= 1 && prefill < engines.len(),
+                "disaggregated split {prefill}P needs 1..{} prefill instances",
+                engines.len()
+            );
+            assert!(
+                spec.prefill_chunk > 0,
+                "disaggregated mode needs a nonzero prefill chunk"
+            );
+        }
+        let kv_bytes_per_token = kv.bytes_per_token;
+        let n = engines.len();
+        let mut roles = Vec::with_capacity(n);
+        let instances: Vec<Instance<'static>> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let role = match spec.mode {
+                    ClusterMode::Colocated => Role::Colocated,
+                    ClusterMode::Disaggregated { prefill } => {
+                        if i < prefill {
+                            Role::Prefill
+                        } else {
+                            Role::Decode
+                        }
+                    }
+                };
+                roles.push(role);
+                let batcher = match role {
+                    Role::Decode => Batcher::new(spec.max_batch, kv.clone()),
+                    _ => Batcher::with_prefill(
+                        spec.max_batch,
+                        kv.clone(),
+                        spec.prefill_chunk,
+                    ),
+                };
+                Instance::new(batcher, engine)
+            })
+            .collect();
+        let front_door = roles
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| matches!(r, Role::Colocated | Role::Prefill))
+            .map(|(i, _)| i)
+            .collect();
+        ClusterSim {
+            instances,
+            roles,
+            front_door,
+            in_transit_kv: vec![0.0; n],
+            router,
+            spec,
+            kv_bytes_per_token,
+            decode_gen: HashMap::new(),
+            kv_shipped_bytes: 0.0,
+            kv_transfer_total: 0.0,
+            kv_transfers: 0,
+        }
+    }
+
+    /// Human-readable mode string, e.g. `colocated x8` or
+    /// `disaggregated 3P+5D`.
+    fn mode_label(&self) -> String {
+        match self.spec.mode {
+            ClusterMode::Colocated => format!("colocated x{}", self.instances.len()),
+            ClusterMode::Disaggregated { prefill } => format!(
+                "disaggregated {}P+{}D",
+                prefill,
+                self.instances.len() - prefill
+            ),
+        }
+    }
+
+    /// Load snapshot of every instance, for the router.
+    fn loads(&self) -> Vec<InstanceLoad> {
+        self.instances
+            .iter()
+            .zip(&self.roles)
+            .map(|(inst, &role)| InstanceLoad {
+                role,
+                queued: inst.queued_len(),
+                active: inst.active_len(),
+                max_batch: inst.max_batch(),
+                outstanding_kv_bytes: inst.outstanding_kv_bytes(),
+                outstanding_gen_tokens: inst.outstanding_gen_tokens(),
+                pending_prefill_tokens: inst.pending_prefill_tokens(),
+                pending_prefill_prompts: inst.pending_prefill_prompts(),
+                ewma_step_latency: inst.ewma_step(),
+                prefill_chunk: inst.prefill_chunk(),
+            })
+            .collect()
+    }
+
+    /// Hand a routed request to instance `i`. On a prefill instance the
+    /// request is truncated to a pure-ingestion sub-request (`gen_len`
+    /// 1: the batcher retires it the moment its last chunk lands); the
+    /// full generation length is parked in `decode_gen` until the KV
+    /// ships to the decode pool.
+    fn assign(&mut self, i: usize, r: Request) {
+        if self.roles[i] == Role::Prefill {
+            self.decode_gen.insert(r.id, r.gen_len);
+            self.instances[i].enqueue(Request { gen_len: 1, ..r });
+        } else {
+            self.instances[i].enqueue(r);
+        }
+    }
+
+    /// Decode-pool placement for a prefilled request: least committed
+    /// KV bytes (landed + in transit), lowest index on ties
+    /// (deterministic). The front-door router chooses who prefills; KV
+    /// shipment always balances on capacity, the binding constraint of
+    /// the decode pool.
+    fn pick_decode(&self) -> usize {
+        argmin(
+            self.instances
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| self.roles[*i] == Role::Decode)
+                .map(|(i, inst)| {
+                    (i, inst.outstanding_kv_bytes() + self.in_transit_kv[i])
+                }),
+        )
+        .map(|(i, _)| i)
+        .expect("disaggregated cluster has a decode pool")
+    }
+
+    /// Run the workload to completion (or a configured limit).
+    pub fn run(mut self, workload: Vec<Request>) -> ClusterReport {
+        let mut q: EventQueue<InstanceEvent> = EventQueue::new();
+        let offered = workload.len() as u64;
+        for r in workload {
+            q.schedule_at(r.arrival, InstanceEvent::Arrival(r));
+        }
+
+        // Full request lifecycles (prefill + decode merged) for the
+        // cluster-level SLO report.
+        let mut finished: Vec<Request> = Vec::new();
+        let mut shed: u64 = 0;
+        let mut steps_total: u64 = 0;
+
+        while let Some((now, ev)) = q.next() {
+            if now > self.spec.sim.max_time {
+                break; // clamp at the boundary, like the single sim
+            }
+            match ev {
+                InstanceEvent::Arrival(r) => {
+                    let loads = self.loads();
+                    match self.router.route(&r, &self.front_door, &loads) {
+                        Some(i) => self.assign(i, r),
+                        None => shed += 1,
+                    }
+                }
+                InstanceEvent::StepDone(i) => {
+                    let retired = self.instances[i].step_done(now);
+                    steps_total += 1;
+                    for r in retired {
+                        if self.roles[i] == Role::Prefill {
+                            self.ship(r, &mut q);
+                        } else {
+                            finished.push(r);
+                        }
+                    }
+                }
+                InstanceEvent::KvArrive(i, r) => {
+                    let bytes =
+                        (r.context_len + r.gen_len) as f64 * self.kv_bytes_per_token;
+                    self.in_transit_kv[i] = (self.in_transit_kv[i] - bytes).max(0.0);
+                    self.instances[i].enqueue(r);
+                }
+            }
+            if steps_total >= self.spec.sim.max_steps {
+                break;
+            }
+            for (i, inst) in self.instances.iter_mut().enumerate() {
+                if let Some(dt) = inst.kick(now) {
+                    q.schedule_in(dt, InstanceEvent::StepDone(i));
+                }
+            }
+        }
+
+        let end_time = q.now().min(self.spec.sim.max_time);
+        self.into_report(finished, offered, shed, end_time)
+    }
+
+    /// A prompt finished ingesting on a prefill instance: ship its KV
+    /// cache (`context_len * kv_bytes_per_token` bytes) to the least-
+    /// loaded decode instance; the transfer latency lands *before*
+    /// decode admission. The handoff clears the ingestion sub-request's
+    /// token state, so the decode pool produces every output token
+    /// (including the first) and the lifecycle metrics see the stall.
+    fn ship(&mut self, r: Request, q: &mut EventQueue<InstanceEvent>) {
+        let full_gen = self.decode_gen.remove(&r.id).unwrap_or(r.gen_len);
+        // `admitted_at` survives the hop (the decode batcher keeps an
+        // existing stamp), so queue delay and residence stay lifecycle
+        // quantities.
+        let handoff = Request {
+            gen_len: full_gen,
+            generated: 0,
+            first_token_at: None,
+            completed_at: None,
+            ..r
+        };
+        let ship_bytes = handoff.context_len as f64 * self.kv_bytes_per_token;
+        let dest = self.pick_decode();
+        self.in_transit_kv[dest] +=
+            (handoff.context_len + handoff.gen_len) as f64 * self.kv_bytes_per_token;
+        let dt = ship_bytes / self.spec.kv_link_bw;
+        self.kv_shipped_bytes += ship_bytes;
+        self.kv_transfer_total += dt;
+        self.kv_transfers += 1;
+        q.schedule_in(dt, InstanceEvent::KvArrive(dest, handoff));
+    }
+
+    /// Assemble the cluster report: per-instance reports, the merged
+    /// lifecycle report (percentiles over the pooled raw samples), and
+    /// per-pool utilization.
+    fn into_report(
+        self,
+        finished: Vec<Request>,
+        offered: u64,
+        shed: u64,
+        end_time: f64,
+    ) -> ClusterReport {
+        let router_name = self.router.name();
+        let mode = self.mode_label();
+        let mut agg = StepStats { end_time, ..Default::default() };
+        let mut per_instance: Vec<ServingReport> = Vec::new();
+        for (i, inst) in self.instances.iter().enumerate() {
+            let st = inst.stats(end_time);
+            agg.steps += st.steps;
+            agg.batch_time_integral += st.batch_time_integral;
+            agg.busy_time += st.busy_time;
+            agg.prefill_tokens += st.prefill_tokens;
+            let name =
+                format!("i{i}:{}:{}", self.roles[i].tag(), inst.engine_name());
+            per_instance.push(inst.report(name, end_time));
+        }
+        let cluster = ServingReport::from_requests(
+            format!("{router_name} / {mode}"),
+            &finished,
+            &agg,
+        );
+        let pools = self.pool_stats(end_time);
+
+        ClusterReport {
+            router: router_name,
+            mode,
+            offered,
+            shed,
+            cluster,
+            per_instance,
+            pools,
+            kv_shipped_bytes: self.kv_shipped_bytes,
+            kv_transfer_mean: if self.kv_transfers > 0 {
+                self.kv_transfer_total / self.kv_transfers as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Per-pool utilization, grouped by role. Pool token counts are
+    /// output tokens generated *at* the pool: the decode pool produces
+    /// every output token of a disaggregated request, and the prefill
+    /// pool none (its sub-requests are pure ingestion), so on a drained
+    /// run the pool sums equal cluster tokens in both modes.
+    fn pool_stats(&self, end_time: f64) -> Vec<PoolStats> {
+        let mut pools: Vec<PoolStats> = Vec::new();
+        for role in [Role::Colocated, Role::Prefill, Role::Decode] {
+            let mut n = 0usize;
+            let mut steps = 0u64;
+            let mut busy = 0.0f64;
+            let mut lane_seconds = 0.0f64;
+            let mut tokens = 0u64;
+            for (inst, _) in self
+                .instances
+                .iter()
+                .zip(&self.roles)
+                .filter(|(_, &r)| r == role)
+            {
+                n += 1;
+                let st = inst.stats(end_time);
+                steps += st.steps;
+                busy += st.busy_time;
+                lane_seconds += st.batch_time_integral;
+                if role != Role::Prefill {
+                    tokens += inst
+                        .finished()
+                        .iter()
+                        .map(|r| r.generated)
+                        .sum::<u64>();
+                }
+            }
+            if n == 0 {
+                continue;
+            }
+            pools.push(PoolStats {
+                label: role.tag().to_string(),
+                instances: n,
+                steps,
+                busy_frac: busy / (n as f64 * end_time.max(1e-12)),
+                mean_batch: if busy > 0.0 { lane_seconds / busy } else { 0.0 },
+                tokens,
+            });
+        }
+        pools
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::{LeastOutstandingTokens, RoundRobin};
+    use crate::serving::testutil::{mk_req, open_budget, FixedEngine};
+
+    fn engines(n: usize, dt: f64) -> Vec<Box<dyn StepEngine>> {
+        (0..n)
+            .map(|_| Box::new(FixedEngine(dt)) as Box<dyn StepEngine>)
+            .collect()
+    }
+
+    fn colo_spec(max_batch: usize, chunk: u64) -> ClusterSpec {
+        ClusterSpec {
+            mode: ClusterMode::Colocated,
+            max_batch,
+            prefill_chunk: chunk,
+            ..Default::default()
+        }
+    }
+
+    fn disagg_spec(prefill: usize, chunk: u64, link_bw: f64) -> ClusterSpec {
+        ClusterSpec {
+            mode: ClusterMode::Disaggregated { prefill },
+            max_batch: 4,
+            prefill_chunk: chunk,
+            kv_link_bw: link_bw,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn colocated_round_robin_spreads_and_completes() {
+        let sim = ClusterSim::new(
+            engines(2, 0.01),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            colo_spec(4, 0),
+        );
+        let wl: Vec<Request> =
+            (0..10).map(|i| mk_req(i, 0.001 * i as f64, 8, 4)).collect();
+        let rep = sim.run(wl);
+        assert_eq!(rep.offered, 10);
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.cluster.completed, 10);
+        assert_eq!(rep.cluster.tokens, 40);
+        // Round-robin: both instances served requests.
+        assert_eq!(rep.per_instance.len(), 2);
+        assert!(rep.per_instance.iter().all(|r| r.completed == 5));
+        assert_eq!(rep.pools.len(), 1);
+        assert_eq!(rep.pools[0].label, "colo");
+        assert_eq!(rep.pools[0].tokens, 40);
+        assert_eq!(rep.kv_shipped_bytes, 0.0);
+    }
+
+    #[test]
+    fn four_instances_reach_4x_aggregate_throughput() {
+        // The scaling acceptance pin, deterministic under a
+        // fixed-latency engine: 256 identical decode-only requests
+        // (gen 32) saturate the cluster from t=0. Round-robin splits
+        // them 64/64/64/64; the only scale-out losses are each
+        // instance's cold-start step and its drain tail, giving a
+        // 3.99x aggregate-throughput ratio — over the >= 3.5x
+        // acceptance bar with margin. Spans are exact step counts
+        // times 0.01 s (10.25 s vs 2.57 s), pinned below.
+        let run = |n: usize| {
+            let sim = ClusterSim::new(
+                engines(n, 0.01),
+                open_budget(),
+                Box::new(RoundRobin::new()),
+                colo_spec(8, 0),
+            );
+            let wl: Vec<Request> =
+                (0..256).map(|i| mk_req(i, 0.0, 8, 32)).collect();
+            sim.run(wl)
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.cluster.completed, 256);
+        assert_eq!(four.cluster.completed, 256);
+        assert_eq!(one.cluster.tokens, 256 * 32);
+        assert_eq!(four.cluster.tokens, 256 * 32);
+        assert!((one.cluster.span - 10.25).abs() < 1e-6, "{}", one.cluster.span);
+        assert!((four.cluster.span - 2.57).abs() < 1e-6, "{}", four.cluster.span);
+        assert!(
+            four.cluster.stps >= one.cluster.stps * 3.5,
+            "4 instances: {} vs 1: {}",
+            four.cluster.stps,
+            one.cluster.stps
+        );
+    }
+
+    #[test]
+    fn disaggregated_lifecycle_ships_kv_and_prices_the_transfer() {
+        // 1 prefill + 1 decode instance, 0.1 s steps, ctx 8 / gen 3,
+        // chunk 8, transfer of 8 bytes at 80 B/s = 0.1 s.
+        let sim = ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            disagg_spec(1, 8, 80.0),
+        );
+        let rep = sim.run(vec![mk_req(0, 0.0, 8, 3)]);
+        assert_eq!(rep.cluster.completed, 1);
+        assert_eq!(rep.cluster.tokens, 3);
+        // Prefill chunk lands at 0.1; KV ships until 0.2; decode steps
+        // at 0.3 / 0.4 / 0.5. The first token comes from the decode
+        // pool, so TTFT includes the shipment stall.
+        assert!((rep.cluster.ttft.p50 - 0.3).abs() < 1e-9, "{}", rep.cluster.ttft.p50);
+        assert!((rep.cluster.e2e.p50 - 0.5).abs() < 1e-9, "{}", rep.cluster.e2e.p50);
+        // TPOT is pure decode cadence: (0.5 - 0.3) / 2.
+        assert!((rep.cluster.tpot.p50 - 0.1).abs() < 1e-9);
+        // Admission happened at t=0 on the prefill instance and the
+        // stamp survives the hop: queue delay stays zero, residence
+        // spans the whole lifecycle (3 tokens / 0.5 s).
+        assert!(rep.cluster.queue_delay_mean.abs() < 1e-9);
+        assert!((rep.cluster.utps_mean - 3.0 / 0.5).abs() < 1e-9);
+        assert!((rep.kv_shipped_bytes - 8.0).abs() < 1e-12);
+        assert!((rep.kv_transfer_mean - 0.1).abs() < 1e-12);
+        // Pool accounting: ingestion at the prefill pool (no output
+        // tokens), all three tokens at the decode pool.
+        let prefill = rep.pools.iter().find(|p| p.label == "prefill").unwrap();
+        let decode = rep.pools.iter().find(|p| p.label == "decode").unwrap();
+        assert_eq!(prefill.tokens, 0);
+        assert_eq!(decode.tokens, 3);
+        assert_eq!(rep.cluster.prefill_tokens, 8);
+    }
+
+    #[test]
+    fn finite_link_strictly_inflates_ttft_over_ideal() {
+        // The disaggregation acceptance pin: with a finite KV link the
+        // transfer stall must push TTFT strictly past the
+        // infinite-bandwidth case, and decode-pool steps must carry no
+        // prefill chunks.
+        let run = |link_bw: f64| {
+            let sim = ClusterSim::new(
+                engines(2, 0.1),
+                open_budget(),
+                Box::new(RoundRobin::new()),
+                disagg_spec(1, 8, link_bw),
+            );
+            sim.run(vec![mk_req(0, 0.0, 8, 3), mk_req(1, 0.05, 8, 2)])
+        };
+        let ideal = run(f64::INFINITY);
+        let finite = run(80.0);
+        assert_eq!(ideal.cluster.completed, 2);
+        assert_eq!(finite.cluster.completed, 2);
+        assert!(
+            finite.cluster.ttft.mean > ideal.cluster.ttft.mean,
+            "finite-link TTFT {} must exceed ideal-link {}",
+            finite.cluster.ttft.mean,
+            ideal.cluster.ttft.mean
+        );
+        assert!(finite.cluster.e2e.p99 > ideal.cluster.e2e.p99);
+        assert_eq!(ideal.kv_transfer_mean, 0.0);
+        assert!(finite.kv_transfer_mean > 0.0);
+        // Decode instances run the paper's decode-only pricing: zero
+        // prefill tokens ever processed there.
+        for rep in [&ideal, &finite] {
+            for inst in &rep.per_instance {
+                if inst.engine.contains("decode") {
+                    assert_eq!(inst.prefill_tokens, 0);
+                }
+            }
+            let prefill_pool_tokens: u64 = rep
+                .per_instance
+                .iter()
+                .filter(|r| r.engine.contains(":prefill:"))
+                .map(|r| r.prefill_tokens)
+                .sum();
+            assert_eq!(prefill_pool_tokens, rep.cluster.prefill_tokens);
+        }
+    }
+
+    #[test]
+    fn decode_pool_balances_on_committed_kv() {
+        // 1 prefill + 2 decode instances; two long-decode requests must
+        // land on different decode instances even though the second KV
+        // shipment departs while the first is still in transit.
+        let sim = ClusterSim::new(
+            engines(3, 0.1),
+            open_budget(),
+            Box::new(LeastOutstandingTokens),
+            disagg_spec(1, 16, 160.0),
+        );
+        let rep = sim.run(vec![mk_req(0, 0.0, 16, 40), mk_req(1, 0.0, 16, 40)]);
+        assert_eq!(rep.cluster.completed, 2);
+        let decode_reps: Vec<_> = rep
+            .per_instance
+            .iter()
+            .filter(|r| r.engine.contains("decode"))
+            .collect();
+        assert_eq!(decode_reps.len(), 2);
+        assert!(
+            decode_reps.iter().all(|r| r.completed == 1),
+            "KV shipment must spread across the decode pool"
+        );
+    }
+
+    #[test]
+    fn global_step_limit_is_exact() {
+        let spec = ClusterSpec {
+            sim: SimConfig { max_steps: 7, ..Default::default() },
+            ..colo_spec(2, 0)
+        };
+        let sim = ClusterSim::new(
+            engines(2, 0.01),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            spec,
+        );
+        let wl: Vec<Request> = (0..50).map(|i| mk_req(i, 0.0, 8, 20)).collect();
+        let rep = sim.run(wl);
+        let steps: u64 = rep.pools.iter().map(|p| p.steps).sum();
+        assert_eq!(steps, 7);
+        assert_eq!(rep.cluster.steps, 7);
+    }
+
+    #[test]
+    fn max_time_clamps_the_cluster_at_the_boundary() {
+        let spec = ClusterSpec {
+            sim: SimConfig { max_time: 0.25, ..Default::default() },
+            ..colo_spec(4, 0)
+        };
+        let sim = ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            spec,
+        );
+        let rep = sim.run(vec![mk_req(0, 0.0, 0, 5), mk_req(1, 0.0, 0, 5)]);
+        // Each instance completes steps at 0.1 and 0.2; the 0.3 steps
+        // are past the deadline and never applied.
+        assert_eq!(rep.cluster.steps, 4);
+        assert_eq!(rep.cluster.completed, 0);
+        assert!((rep.cluster.span - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_requests_flow_through_the_decode_pool() {
+        // Even a gen_len=1 request decodes at the decode pool (the
+        // prefill pool never emits user tokens), paying its shipment.
+        let sim = ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            disagg_spec(1, 8, 80.0),
+        );
+        let rep = sim.run(vec![mk_req(0, 0.0, 8, 1)]);
+        assert_eq!(rep.cluster.completed, 1);
+        assert_eq!(rep.cluster.tokens, 1);
+        assert!((rep.kv_shipped_bytes - 8.0).abs() < 1e-12);
+        // prefill 0.1 + ship 0.1 + decode 0.1.
+        assert!((rep.cluster.e2e.p50 - 0.3).abs() < 1e-9);
+        let prefill = rep.pools.iter().find(|p| p.label == "prefill").unwrap();
+        assert_eq!(prefill.tokens, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill instances")]
+    fn disaggregation_needs_a_decode_pool() {
+        ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            disagg_spec(2, 8, 80.0),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "kv_link_bw")]
+    fn nonpositive_link_bandwidth_is_rejected() {
+        ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            disagg_spec(1, 8, 0.0),
+        );
+    }
+}

@@ -8,13 +8,20 @@
 //! analytic (paper-scale what-if serving) and PJRT (real execution of
 //! the AOT decode step).
 
+use std::path::PathBuf;
+use std::sync::Arc;
+
 use anyhow::Context;
 
 use crate::apps::Registry;
+use crate::cluster::{
+    ClusterMode, ClusterReport, ClusterSim, ClusterSpec, LeastOutstandingTokens,
+    RoundRobin, Router, SloAdmission,
+};
 use crate::hw::SystemConfig;
 use crate::serving::{
-    AnalyticEngine, Batcher, KvBudget, PjrtEngine, ServingReport, ServingSim,
-    SimConfig, StepEngine, WorkloadGen, WorkloadSpec,
+    AnalyticEngine, Batcher, KvBudget, PjrtEngine, Request, ServingReport,
+    ServingSim, SimConfig, StepEngine, WorkloadGen, WorkloadSpec, WorkloadTrace,
 };
 use crate::Result;
 
@@ -34,8 +41,11 @@ pub struct ServeJob {
     pub model: String,
     /// System to serve on — analytic backend only.
     pub sys: SystemConfig,
-    /// Synthetic workload.
+    /// Synthetic workload (ignored when `trace` is set).
     pub workload: WorkloadSpec,
+    /// Replay a recorded trace (JSONL/CSV: `arrival, context_len,
+    /// gen_len`) instead of generating the synthetic workload.
+    pub trace: Option<PathBuf>,
     /// Max concurrent sequences.
     pub max_batch: usize,
     /// Prefill chunk size in tokens; 0 reverts to the decode-only
@@ -47,6 +57,18 @@ pub struct ServeJob {
     pub artifact_dir: std::path::PathBuf,
 }
 
+/// Resolve a job's request stream: replay the trace if one is set, else
+/// generate the synthetic workload.
+fn resolve_workload(
+    spec: &WorkloadSpec,
+    trace: &Option<PathBuf>,
+) -> Result<Vec<Request>> {
+    match trace {
+        Some(path) => WorkloadTrace::load(path),
+        None => Ok(WorkloadGen::new(spec.clone()).generate()),
+    }
+}
+
 /// Run a serve job to completion and return its report.
 pub fn serve(job: &ServeJob) -> Result<ServingReport> {
     let registry = Registry::builtin();
@@ -54,7 +76,7 @@ pub fn serve(job: &ServeJob) -> Result<ServingReport> {
         .app(&job.model)
         .with_context(|| format!("unknown model {}", job.model))?;
 
-    let workload = WorkloadGen::new(job.workload.clone()).generate();
+    let workload = resolve_workload(&job.workload, &job.trace)?;
     // prefill_chunk = 0 degrades to the decode-only batcher.
     let make_batcher =
         |max_batch: usize, kv: KvBudget| Batcher::with_prefill(max_batch, kv, job.prefill_chunk);
@@ -102,11 +124,146 @@ pub fn default_job(model: &str, sys: SystemConfig) -> ServeJob {
         model: model.to_string(),
         sys,
         workload: WorkloadSpec::default(),
+        trace: None,
         max_batch: 32,
         prefill_chunk: crate::model::DEFAULT_PREFILL_CHUNK,
         backend: Backend::Analytic,
         artifact_dir: std::path::PathBuf::from("artifacts"),
     }
+}
+
+/// Routing policy selector for cluster jobs (CLI-friendly mirror of the
+/// [`Router`] implementations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle arrivals across the front-door pool.
+    RoundRobin,
+    /// Send each arrival to the instance with the fewest outstanding
+    /// tokens (pending prefill + generation backlog).
+    LeastTokens,
+    /// Admit to the lowest predicted TTFT; shed above the target.
+    SloAware,
+}
+
+impl RouterPolicy {
+    /// Parse a CLI spelling (`round-robin`, `least-tokens`, `slo`).
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "least-tokens" | "lt" => Some(RouterPolicy::LeastTokens),
+            "slo" | "slo-aware" => Some(RouterPolicy::SloAware),
+            _ => None,
+        }
+    }
+
+    /// Build the boxed router this policy names.
+    pub fn build(&self, ttft_target: f64) -> Box<dyn Router> {
+        match self {
+            RouterPolicy::RoundRobin => Box::new(RoundRobin::new()),
+            RouterPolicy::LeastTokens => Box::new(LeastOutstandingTokens),
+            RouterPolicy::SloAware => Box::new(SloAdmission::new(ttft_target)),
+        }
+    }
+}
+
+/// A cluster serve job: N identical analytic instances behind a router,
+/// optionally split into disaggregated prefill/decode pools.
+#[derive(Debug, Clone)]
+pub struct ClusterJob {
+    /// Model name (registry key).
+    pub model: String,
+    /// Per-instance system (each instance is an independent copy).
+    pub sys: SystemConfig,
+    /// Synthetic workload offered to the cluster front door (ignored
+    /// when `trace` is set).
+    pub workload: WorkloadSpec,
+    /// Replay a recorded trace instead of the synthetic workload.
+    pub trace: Option<PathBuf>,
+    /// Max concurrent sequences per instance.
+    pub max_batch: usize,
+    /// Prefill chunk tokens per step on prefill-capable instances.
+    pub prefill_chunk: u64,
+    /// Total instances.
+    pub instances: usize,
+    /// Dedicated prefill instances (0 = colocated mode).
+    pub prefill_instances: usize,
+    /// Front-door routing policy.
+    pub router: RouterPolicy,
+    /// TTFT admission target for [`RouterPolicy::SloAware`], seconds.
+    pub ttft_target: f64,
+    /// KV interconnect bandwidth override, bytes/s (`None` uses the
+    /// per-instance system's [`SystemConfig::interconnect_bw`];
+    /// `f64::INFINITY` models an ideal link).
+    pub kv_link_bw: Option<f64>,
+}
+
+/// Convenience builder for cluster jobs: 4 colocated instances,
+/// round-robin routing, prefill-aware, hardware-derived KV link.
+pub fn default_cluster_job(model: &str, sys: SystemConfig) -> ClusterJob {
+    ClusterJob {
+        model: model.to_string(),
+        sys,
+        workload: WorkloadSpec::default(),
+        trace: None,
+        max_batch: 32,
+        prefill_chunk: crate::model::DEFAULT_PREFILL_CHUNK,
+        instances: 4,
+        prefill_instances: 0,
+        router: RouterPolicy::RoundRobin,
+        ttft_target: 0.5,
+        kv_link_bw: None,
+    }
+}
+
+/// Run a cluster job to completion and return its merged report.
+pub fn serve_cluster(job: &ClusterJob) -> Result<ClusterReport> {
+    let registry = Registry::builtin();
+    let app = registry
+        .app(&job.model)
+        .with_context(|| format!("unknown model {}", job.model))?;
+    anyhow::ensure!(job.instances >= 1, "cluster needs at least one instance");
+    anyhow::ensure!(
+        job.prefill_instances < job.instances,
+        "prefill pool ({}) must leave at least one decode instance of {}",
+        job.prefill_instances,
+        job.instances
+    );
+    anyhow::ensure!(
+        job.prefill_instances == 0 || job.prefill_chunk > 0,
+        "disaggregated mode needs a nonzero prefill chunk"
+    );
+    let kv_link_bw = job.kv_link_bw.unwrap_or_else(|| job.sys.interconnect_bw());
+    anyhow::ensure!(
+        kv_link_bw > 0.0,
+        "kv link bandwidth must be positive (got {kv_link_bw})"
+    );
+
+    let engines: Vec<Box<dyn StepEngine>> = (0..job.instances)
+        .map(|_| {
+            Box::new(AnalyticEngine::new(Arc::clone(&app), job.sys.clone()))
+                as Box<dyn StepEngine>
+        })
+        .collect();
+    let kv = KvBudget::new(
+        job.sys.total_capacity(),
+        app.weight_bytes(),
+        app.kv_bytes_per_token(),
+    );
+    let mode = if job.prefill_instances == 0 {
+        ClusterMode::Colocated
+    } else {
+        ClusterMode::Disaggregated { prefill: job.prefill_instances }
+    };
+    let spec = ClusterSpec {
+        mode,
+        max_batch: job.max_batch,
+        prefill_chunk: job.prefill_chunk,
+        kv_link_bw,
+        sim: SimConfig::default(),
+    };
+    let router = job.router.build(job.ttft_target);
+    let workload = resolve_workload(&job.workload, &job.trace)?;
+    Ok(ClusterSim::new(engines, kv, router, spec).run(workload))
 }
 
 /// Re-exported so `main.rs` needn't reach into serving directly.
@@ -151,5 +308,79 @@ mod tests {
         let sys = SystemConfig::new(presets::hbm3(), 8, 1);
         let job = default_job("not-a-model", sys);
         assert!(serve(&job).is_err());
+    }
+
+    #[test]
+    fn trace_driven_serve_replays_the_sample_trace() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_job("llama3-70b", sys);
+        job.trace = Some(PathBuf::from(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/data/sample_trace.jsonl"
+        )));
+        // The synthetic spec is ignored when a trace is set.
+        job.workload.n_requests = 3;
+        let rep = serve(&job).unwrap();
+        assert_eq!(rep.completed, 20);
+        // The sample trace carries 32256 prompt tokens; all ingested.
+        assert_eq!(rep.prefill_tokens, 32256);
+        assert!(rep.ttft.p50 > 0.0);
+    }
+
+    #[test]
+    fn missing_trace_file_is_an_error() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_job("llama3-70b", sys);
+        job.trace = Some(PathBuf::from("/nonexistent/trace.jsonl"));
+        let err = serve(&job).unwrap_err().to_string();
+        assert!(err.contains("trace"), "{err}");
+    }
+
+    #[test]
+    fn cluster_serve_end_to_end() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 2;
+        job.workload.n_requests = 20;
+        job.workload.arrival_rate = 100.0;
+        let rep = serve_cluster(&job).unwrap();
+        assert_eq!(rep.offered, 20);
+        assert_eq!(rep.cluster.completed, 20);
+        assert_eq!(rep.shed, 0);
+        assert!(rep.cluster.ttft.p50 > 0.0);
+        assert_eq!(rep.per_instance.len(), 2);
+    }
+
+    #[test]
+    fn cluster_disaggregated_split_is_validated() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 2;
+        job.prefill_instances = 2; // no decode pool left
+        assert!(serve_cluster(&job).is_err());
+    }
+
+    #[test]
+    fn cluster_disaggregation_requires_prefill_chunk() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 2;
+        job.prefill_instances = 1;
+        job.prefill_chunk = 0; // CLI-reachable: --prefill-chunk 0
+        assert!(serve_cluster(&job).is_err());
+    }
+
+    #[test]
+    fn router_policy_parses_cli_spellings() {
+        assert_eq!(
+            RouterPolicy::parse("round-robin"),
+            Some(RouterPolicy::RoundRobin)
+        );
+        assert_eq!(
+            RouterPolicy::parse("least-tokens"),
+            Some(RouterPolicy::LeastTokens)
+        );
+        assert_eq!(RouterPolicy::parse("slo"), Some(RouterPolicy::SloAware));
+        assert_eq!(RouterPolicy::parse("hash"), None);
     }
 }

@@ -1,0 +1,273 @@
+//! Cluster-scaling study: scale-out efficiency, router policies under
+//! skewed load, and colocated vs. disaggregated prefill/decode pools.
+//!
+//! LIMINAL's limit study stops at one model instance because collective
+//! latency caps useful TP at 128 chips; everything past that point is
+//! scale-*out*. This experiment prices the scale-out layer with the
+//! cluster simulator:
+//!
+//! 1. **Efficiency** — aggregate tokens/s and tokens/s/instance as the
+//!    cluster grows 1 -> 2 -> 4 -> 8 under proportional load
+//!    (round-robin, colocated), via the [`ClusterGrid`] sweep. Ideal
+//!    scale-out keeps the per-instance curve flat: instances share
+//!    nothing, so the only losses are routing imbalance and
+//!    per-instance queueing noise.
+//! 2. **Routers under skewed load** — request sizes spanning 32x in
+//!    prompt and generation length at overload. Round-robin counts
+//!    requests and stacks giants on the same instance;
+//!    least-outstanding-tokens balances actual work; SLO-aware
+//!    admission sheds what no instance can serve in time, the only
+//!    policy that bounds the TTFT tail past saturation. One JSON
+//!    artifact per policy lands in `<artifacts>/cluster_scaling/`.
+//! 3. **Disaggregation** — dedicated prefill pool vs. colocated at
+//!    rising load, with KV shipped at the hardware interconnect rate.
+//!    Decode-pool steps never carry prefill chunks (pure decode
+//!    cadence), at the price of a per-request KV shipment stall that
+//!    lands in TTFT.
+
+use std::path::Path;
+
+use crate::coordinator::{default_cluster_job, serve_cluster, ClusterJob, RouterPolicy};
+use crate::hw::{presets, SystemConfig};
+use crate::report::{Report, Table};
+use crate::serving::WorkloadSpec;
+use crate::sweep::{run_cluster_grid, ClusterGrid};
+use crate::Result;
+
+/// Per-instance request rate used by the efficiency sweep (light enough
+/// that one instance is unsaturated, so the per-instance curve isolates
+/// routing effects).
+const EFFICIENCY_RATE_PER_INSTANCE: f64 = 8.0;
+
+/// Cluster-wide arrival rate for the overload studies (parts 2 and 3):
+/// well past the colocated capacity of the 8-instance study cluster.
+pub const OVERLOAD_RATE: f64 = 300.0;
+
+/// Admission TTFT target for the SLO-aware router rows: an interactive
+/// 200 ms first-token budget, tight enough that overload backlogs (and
+/// the largest prompts) trip the shedding path.
+const SLO_TTFT_TARGET: f64 = 0.2;
+
+/// The skewed study workload: prompts and generations each spanning a
+/// 32x range, so equal request *counts* are far from equal work.
+fn skewed_workload(rate: f64, n_requests: u64, seed: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        arrival_rate: rate,
+        n_requests,
+        context: (256, 8192),
+        gen: (16, 512),
+        seed,
+    }
+}
+
+/// Base job: llama3-70b instances on HBM3-TP8, 16 lanes, 512-token
+/// chunks, skewed workload.
+fn base_job(instances: usize, prefill_instances: usize, rate: f64) -> ClusterJob {
+    let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+    let mut job = default_cluster_job("llama3-70b", sys);
+    job.instances = instances;
+    job.prefill_instances = prefill_instances;
+    job.max_batch = 16;
+    job.prefill_chunk = 512;
+    job.workload = skewed_workload(rate, 240, 17);
+    job
+}
+
+/// Run the three-policy comparison at overload on 8 colocated
+/// instances; returns `(policy, report)` pairs. Public so the
+/// acceptance tests pin shedding/conservation without re-deriving the
+/// configuration.
+pub fn router_comparison() -> Result<Vec<(RouterPolicy, crate::cluster::ClusterReport)>> {
+    let mut out = Vec::new();
+    for policy in [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastTokens,
+        RouterPolicy::SloAware,
+    ] {
+        let mut job = base_job(8, 0, OVERLOAD_RATE);
+        job.router = policy;
+        job.ttft_target = SLO_TTFT_TARGET;
+        out.push((policy, serve_cluster(&job)?));
+    }
+    Ok(out)
+}
+
+/// A filesystem-safe artifact stem for a policy.
+fn policy_stem(policy: RouterPolicy) -> &'static str {
+    match policy {
+        RouterPolicy::RoundRobin => "round-robin",
+        RouterPolicy::LeastTokens => "least-tokens",
+        RouterPolicy::SloAware => "slo-aware",
+    }
+}
+
+/// Run the cluster-scaling experiment; per-policy JSON artifacts land
+/// in `<artifact_dir>/cluster_scaling/`.
+pub fn run(artifact_dir: &Path) -> Result<Report> {
+    let mut report = Report::new(
+        "cluster-scaling",
+        "Scale-out: instances x router x colocated-vs-disaggregated",
+    );
+    report.notes.push(
+        "Study cluster: llama3-70b instances on xPU-HBM3 TP8 (16 lanes, \
+         512-token prefill chunks); skewed workload with prompts 256-8192 \
+         tokens and 16-512 generated tokens."
+            .into(),
+    );
+
+    // --- 1. Scale-out efficiency (via the cluster sweep) --------------
+    let mut base = base_job(1, 0, EFFICIENCY_RATE_PER_INSTANCE);
+    base.workload.n_requests = 40;
+    let grid = ClusterGrid {
+        base,
+        instance_counts: vec![1, 2, 4, 8],
+        routers: vec![RouterPolicy::RoundRobin],
+        scale_load: true,
+    };
+    let mut eff = Table::new(
+        "Scale-out efficiency (round-robin, colocated, proportional load)",
+        &["instances", "rate req/s", "STPS", "STPS/instance", "TTFT p99"],
+    );
+    for rec in run_cluster_grid(&grid)? {
+        eff.push_row(vec![
+            rec.instances.to_string(),
+            format!("{:.0}", rec.rate),
+            format!("{:.0}", rec.stps),
+            format!("{:.0}", rec.stps_per_instance),
+            format!("{:.3} s", rec.ttft_p99),
+        ]);
+    }
+    report.tables.push(eff);
+
+    // --- 2. Router policies under skewed overload ---------------------
+    let out_dir = artifact_dir.join("cluster_scaling");
+    std::fs::create_dir_all(&out_dir)?;
+    let mut routers = Table::new(
+        "Router policies at skewed overload (8 colocated instances)",
+        &["router", "completed", "shed", "TTFT p99", "E2E p99", "STPS"],
+    );
+    for (policy, rep) in router_comparison()? {
+        routers.push_row(vec![
+            rep.router.clone(),
+            rep.cluster.completed.to_string(),
+            rep.shed.to_string(),
+            format!("{:.3} s", rep.cluster.ttft.p99),
+            format!("{:.3} s", rep.cluster.e2e.p99),
+            format!("{:.0}", rep.cluster.stps),
+        ]);
+        let path = out_dir.join(format!("{}.json", policy_stem(policy)));
+        std::fs::write(&path, rep.to_json().to_string())?;
+        report
+            .notes
+            .push(format!("wrote router artifact {}", path.display()));
+    }
+    report.tables.push(routers);
+
+    // --- 3. Colocated vs disaggregated -------------------------------
+    let mut disagg_t = Table::new(
+        "Colocated x8 vs disaggregated 4P+4D (round-robin)",
+        &[
+            "rate req/s",
+            "mode",
+            "TTFT p50",
+            "TTFT p99",
+            "TPOT p99",
+            "E2E p99",
+            "STPS",
+            "mean KV ship",
+        ],
+    );
+    for rate in [75.0, 150.0, OVERLOAD_RATE] {
+        let colo = serve_cluster(&base_job(8, 0, rate))?;
+        let disagg = serve_cluster(&base_job(8, 4, rate))?;
+        for rep in [&colo, &disagg] {
+            disagg_t.push_row(vec![
+                format!("{rate:.0}"),
+                rep.mode.clone(),
+                format!("{:.3} s", rep.cluster.ttft.p50),
+                format!("{:.3} s", rep.cluster.ttft.p99),
+                format!("{:.1} ms", rep.cluster.tpot.p99 * 1e3),
+                format!("{:.3} s", rep.cluster.e2e.p99),
+                format!("{:.0}", rep.cluster.stps),
+                format!("{:.3} ms", rep.kv_transfer_mean * 1e3),
+            ]);
+        }
+    }
+    report.tables.push(disagg_t);
+    report.notes.push(
+        "Disaggregation buys the decode pool a pure decode cadence (its \
+         steps never share a roofline with prefill chunks) and isolates \
+         prompt ingestion from decode-slot congestion, at the price of a \
+         per-request KV shipment stall that lands in TTFT; sizing the \
+         pools against the prefill:decode compute ratio is the \
+         operator's knob."
+            .into(),
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_router_sheds_at_overload_and_conserves_requests() {
+        let reps = router_comparison().unwrap();
+        let rr = &reps[0].1;
+        let slo = &reps[2].1;
+        assert_eq!(rr.shed, 0, "round-robin never sheds");
+        assert_eq!(rr.cluster.completed, 240);
+        assert!(slo.shed > 0, "skewed overload must trigger shedding");
+        assert_eq!(
+            slo.cluster.completed + slo.shed,
+            slo.offered,
+            "every offered request is either served or shed"
+        );
+        // Shedding bounds the tail relative to admit-everything.
+        assert!(slo.cluster.ttft.p99 <= rr.cluster.ttft.p99);
+    }
+
+    #[test]
+    fn disaggregated_overload_run_ships_kv_and_completes() {
+        let colo = serve_cluster(&base_job(8, 0, OVERLOAD_RATE)).unwrap();
+        let disagg = serve_cluster(&base_job(8, 4, OVERLOAD_RATE)).unwrap();
+        assert_eq!(colo.cluster.completed, 240);
+        assert_eq!(disagg.cluster.completed, 240);
+        assert!(disagg.kv_shipped_bytes > 0.0);
+        assert!(disagg.kv_transfer_mean > 0.0);
+        assert_eq!(colo.kv_shipped_bytes, 0.0);
+        // Decode-pool instances never run prefill chunks.
+        for inst in &disagg.per_instance {
+            if inst.engine.contains(":decode:") {
+                assert_eq!(inst.prefill_tokens, 0);
+            }
+        }
+        // All prefill happened at the prefill pool.
+        assert!(disagg.cluster.prefill_tokens > 0);
+        assert_eq!(
+            disagg.cluster.prefill_tokens,
+            colo.cluster.prefill_tokens,
+            "both modes ingest the same prompts"
+        );
+    }
+
+    #[test]
+    fn report_renders_and_emits_per_policy_artifacts() {
+        let dir = std::env::temp_dir().join(format!(
+            "liminal-cluster-scaling-{}",
+            std::process::id()
+        ));
+        let r = run(&dir).unwrap();
+        assert_eq!(r.tables.len(), 3);
+        assert!(r.to_markdown().contains("disaggregated"));
+        for stem in ["round-robin", "least-tokens", "slo-aware"] {
+            let path = dir.join("cluster_scaling").join(format!("{stem}.json"));
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("missing artifact {}: {e}", path.display()));
+            let j = crate::util::json::Json::parse(&text).unwrap();
+            assert!(j.get("router").is_some());
+            assert!(j.get("stps").unwrap().as_f64().unwrap() > 0.0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -3,6 +3,7 @@
 //! analytical core (see DESIGN.md "Per-experiment index").
 
 mod cent;
+mod cluster_scaling;
 mod compute_role;
 mod fig2;
 mod fig3;
@@ -18,6 +19,9 @@ mod tables56;
 mod validation;
 
 pub use cent::{cent_pp_record, cent_tp_record};
+pub use cluster_scaling::{
+    router_comparison, run as run_cluster_scaling, OVERLOAD_RATE,
+};
 pub use findings::run_findings;
 pub use software_gap::{
     run as run_software_gap, PAPER_COMMERCIAL_GAP, PAPER_H100_GEMV_GAP,
@@ -31,11 +35,13 @@ use crate::Result;
 pub const ALL: &[&str] = &[
     "table1", "table2", "table4", "table5", "table6", "table7",
     "fig2", "fig3", "fig4", "fig5", "fig6", "findings", "moe-imbalance",
-    "compute-role", "software-gap",
+    "compute-role", "software-gap", "cluster-scaling",
 ];
 
 /// Run one experiment by id. `artifact_dir` is used by experiments that
-/// execute AOT artifacts (table7); analytic experiments ignore it.
+/// execute AOT artifacts (table7) or emit their own artifacts
+/// (cluster-scaling writes per-policy JSON there); the purely analytic
+/// experiments ignore it.
 pub fn run(id: &str, artifact_dir: &std::path::Path) -> Result<Report> {
     match id {
         "table1" => table1::run(),
@@ -55,6 +61,7 @@ pub fn run(id: &str, artifact_dir: &std::path::Path) -> Result<Report> {
         "fig6" => fig6::run(),
         "findings" => findings::run_findings(),
         "software-gap" => software_gap::run(),
+        "cluster-scaling" => cluster_scaling::run(artifact_dir),
         "moe-imbalance" => moe_imbalance(),
         _ => anyhow::bail!(
             "unknown experiment '{id}' (known: {})",

@@ -13,7 +13,7 @@ mod system;
 
 pub use cent::CentMapping;
 pub use chip::{Chip, SyncModel};
-pub use system::SystemConfig;
+pub use system::{SystemConfig, DEFAULT_XFER_BW_PER_CHIP};
 
 /// The paper's hard constraint on strong scaling: tensor parallelism may
 /// span at most 128 chips ("performing reductions across a larger number

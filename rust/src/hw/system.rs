@@ -25,14 +25,25 @@ pub struct SystemConfig {
     /// (bytes/s) instead of the TP-aggregate — models mappings that pin
     /// attention to a subset of the machine, like CENT-TP (Appendix C).
     pub kv_bw_override: Option<f64>,
+    /// If set, the scale-out interconnect bandwidth (bytes/s) this
+    /// system can source or sink when shipping KV cache to another
+    /// instance (disaggregated prefill/decode pools); `None` falls back
+    /// to [`DEFAULT_XFER_BW_PER_CHIP`] aggregated over the TP domain.
+    pub xfer_bw_override: Option<f64>,
 }
+
+/// Default per-chip scale-out interconnect bandwidth, bytes/s. This is a
+/// CXL/NIC-class 100 GB/s lane per chip — the same fabric class whose
+/// collective latency the paper's tiered sync model charges above 16
+/// chips — aggregated across the TP domain for bulk KV shipment.
+pub const DEFAULT_XFER_BW_PER_CHIP: f64 = 100e9;
 
 impl SystemConfig {
     /// Build a `tp x pp` system. Panics on a zero degree or `tp > MAX_TP`.
     pub fn new(chip: Chip, tp: u64, pp: u64) -> Self {
         assert!(tp >= 1 && pp >= 1, "degenerate system {tp}x{pp}");
         assert!(tp <= MAX_TP, "TP {tp} exceeds the {MAX_TP}-chip limit");
-        SystemConfig { chip, tp, pp, kv_bw_override: None }
+        SystemConfig { chip, tp, pp, kv_bw_override: None, xfer_bw_override: None }
     }
 
     /// Total chips in the system.
@@ -77,6 +88,16 @@ impl SystemConfig {
         self.kv_bw_override.unwrap_or_else(|| self.stage_mem_bw())
     }
 
+    /// Scale-out interconnect bandwidth for shipping KV cache between
+    /// instances (bytes/s): the override if set, else
+    /// [`DEFAULT_XFER_BW_PER_CHIP`] per chip across the TP domain. A
+    /// disaggregated prefill instance hands a prompt's KV to the decode
+    /// pool at this rate.
+    pub fn interconnect_bw(&self) -> f64 {
+        self.xfer_bw_override
+            .unwrap_or(DEFAULT_XFER_BW_PER_CHIP * self.tp as f64)
+    }
+
     /// Short display label, e.g. `xPU-HBM3-TP8` or `xPU-SRAM-TP128-PP7`.
     pub fn label(&self) -> String {
         if self.pp == 1 {
@@ -119,6 +140,14 @@ mod tests {
             SystemConfig::new(presets::sram(), 128, 7).label(),
             "xPU-SRAM-TP128-PP7"
         );
+    }
+
+    #[test]
+    fn interconnect_bw_defaults_per_chip_and_respects_override() {
+        let mut sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        assert_eq!(sys.interconnect_bw(), DEFAULT_XFER_BW_PER_CHIP * 8.0);
+        sys.xfer_bw_override = Some(1e9);
+        assert_eq!(sys.interconnect_bw(), 1e9);
     }
 
     #[test]

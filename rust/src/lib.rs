@@ -16,10 +16,13 @@
 //!   regenerates every table and figure in the paper's evaluation section
 //!   from the analytical core.
 //! * **Executable substrate** ([`runtime`], [`serving`], [`des`],
-//!   [`coordinator`]) — a PJRT runtime that loads the AOT-compiled JAX/
-//!   Pallas decode step, and a discrete-event serving simulator used both
-//!   as a dynamic serving testbed and as the "measured silicon" analog for
-//!   the paper's Appendix E validation.
+//!   [`cluster`], [`coordinator`]) — a PJRT runtime that loads the
+//!   AOT-compiled JAX/Pallas decode step, a discrete-event serving
+//!   simulator used both as a dynamic serving testbed and as the
+//!   "measured silicon" analog for the paper's Appendix E validation,
+//!   and a cluster simulator (multi-instance routing + disaggregated
+//!   prefill/decode pools with KV shipping) for the scale-out scenarios
+//!   beyond the paper's single-box limit study.
 //!
 //! ## Quickstart
 //!
@@ -37,6 +40,7 @@
 #![deny(missing_docs)]
 
 pub mod apps;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod des;

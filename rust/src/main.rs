@@ -10,7 +10,9 @@
 //! liminal findings                     # Key Findings 1-10 pass/fail
 //! liminal serve <model> [--chip hbm3] [--tp 128] [--backend analytic|pjrt]
 //!               [--requests 100] [--rate 10] [--max-batch 32]
-//!               [--prefill-chunk 1024]
+//!               [--prefill-chunk 1024] [--trace requests.jsonl]
+//!               [--instances 4] [--router round-robin|least-tokens|slo]
+//!               [--disagg-prefill 2] [--kv-link-gbps 100]
 //! liminal validate [--artifacts artifacts]
 //! ```
 
@@ -61,6 +63,11 @@ USAGE:
   liminal serve <model> [--chip hbm3] [--tp N] [--backend analytic|pjrt]
                [--requests N] [--rate R] [--max-batch B] [--artifacts DIR]
                [--prefill-chunk N  (0 = decode-only)]
+               [--trace FILE  (JSONL/CSV: arrival,context_len,gen_len)]
+               [--instances N  (N > 1 serves a cluster)]
+               [--router round-robin|least-tokens|slo] [--ttft-target SECONDS]
+               [--disagg-prefill P  (dedicated prefill instances; 0 = colocated)]
+               [--kv-link-gbps G  (KV shipment bandwidth, gigabits/s; inf = ideal)]
   liminal validate [--artifacts DIR]
 ";
 
@@ -321,11 +328,77 @@ fn cmd_serve(args: &Args) -> i32 {
     let chip = resolve_chip(&cfg, args);
     let tp = args.get_parsed("tp", 128u64);
     let sys = SystemConfig::new(chip, tp, args.get_parsed("pp", 1u64));
+    let instances = args.get_parsed("instances", 1usize);
+    let disagg_prefill = args.get_parsed("disagg-prefill", 0usize);
+    let trace = args.get("trace").map(PathBuf::from);
+
+    // Any cluster-only flag routes through the cluster simulator — a
+    // one-instance cluster is behavior-identical to the plain
+    // simulator (pinned by the equivalence test), and silently
+    // ignoring `--router slo` on a single instance would fake
+    // admission control the user asked for. With no cluster flags, one
+    // instance keeps the plain simulator's leaner report.
+    let cluster_requested = instances > 1
+        || disagg_prefill > 0
+        || args.get("router").is_some()
+        || args.get("ttft-target").is_some()
+        || args.get("kv-link-gbps").is_some();
+    if cluster_requested {
+        let mut job = coordinator::default_cluster_job(model, sys);
+        job.instances = instances;
+        job.prefill_instances = disagg_prefill;
+        job.max_batch = args.get_parsed("max-batch", 32usize);
+        job.prefill_chunk = args.get_parsed("prefill-chunk", job.prefill_chunk);
+        job.ttft_target = args.get_parsed("ttft-target", job.ttft_target);
+        job.workload.n_requests = args.get_parsed("requests", 100u64);
+        job.workload.arrival_rate = args.get_parsed("rate", 10.0f64);
+        job.trace = trace;
+        if let Some(gbps) = args.get("kv-link-gbps") {
+            match gbps.parse::<f64>() {
+                // Gbps = gigaBITS/s, the conventional network unit:
+                // divide by 8 for bytes/s.
+                Ok(g) if g > 0.0 => job.kv_link_bw = Some(g * 1e9 / 8.0),
+                _ => {
+                    eprintln!("error: --kv-link-gbps expects a positive number or inf");
+                    return 2;
+                }
+            }
+        }
+        if let Some(name) = args.get("router") {
+            match coordinator::RouterPolicy::parse(name) {
+                Some(p) => job.router = p,
+                None => {
+                    eprintln!(
+                        "error: unknown router '{name}' (try round-robin, least-tokens, slo)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        if args.get("backend") == Some("pjrt") {
+            eprintln!("error: cluster serving supports the analytic backend only");
+            return 2;
+        }
+        return match coordinator::serve_cluster(&job) {
+            Ok(report) => {
+                println!("{}", report.summary());
+                print!("{}", report.pool_summary());
+                println!("{}", report.slo_summary());
+                0
+            }
+            Err(e) => {
+                eprintln!("serve failed: {e:#}");
+                1
+            }
+        };
+    }
+
     let mut job = coordinator::default_job(model, sys);
     job.max_batch = args.get_parsed("max-batch", 32usize);
     job.prefill_chunk = args.get_parsed("prefill-chunk", job.prefill_chunk);
     job.workload.n_requests = args.get_parsed("requests", 100u64);
     job.workload.arrival_rate = args.get_parsed("rate", 10.0f64);
+    job.trace = trace;
     job.artifact_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     job.backend = match args.get("backend").unwrap_or("analytic") {
         "pjrt" => Backend::Pjrt,

@@ -127,7 +127,10 @@ impl Batcher {
     /// only at step boundaries: a request arriving mid-step must wait
     /// for the in-flight step to finish before it can join (it never
     /// rides a step it was not priced into).
-    /// Returns how many were admitted; sets their `admitted_at`.
+    /// Returns how many were admitted; sets their `admitted_at` unless
+    /// an earlier admission already stamped it (a disaggregated request
+    /// re-admitted at the decode pool keeps its first admission, so
+    /// queue-delay and residence metrics span the whole lifecycle).
     pub fn admit(&mut self, now: f64) -> usize {
         let mut n = 0;
         while self.active.len() < self.max_batch {
@@ -136,7 +139,9 @@ impl Batcher {
                 break; // FIFO head-of-line: preserve arrival order
             }
             let mut r = self.queue.pop_front().unwrap();
-            r.admitted_at = Some(now);
+            if r.admitted_at.is_none() {
+                r.admitted_at = Some(now);
+            }
             if self.prefill_chunk == 0 {
                 // Legacy decode-only mode: the prompt is already in the
                 // KV cache when the request reaches us.
@@ -230,6 +235,14 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Requests whose prompts are not yet fully ingested: everything
+    /// still queued plus active lanes in prefill. Since the planner
+    /// issues at most one chunk to one prompt per step, this is a lower
+    /// bound on the steps needed to drain the prompt backlog.
+    pub fn prefill_backlog(&self) -> usize {
+        self.queue.len() + self.active.iter().filter(|r| r.in_prefill()).count()
+    }
+
     /// Longest active sequence length (drives attention cost).
     pub fn max_seq_len(&self) -> u64 {
         self.active.iter().map(|r| r.seq_len()).max().unwrap_or(0)
@@ -250,6 +263,12 @@ impl Batcher {
         self.kv.utilization()
     }
 
+    /// KV bytes per token of the underlying budget (drives the
+    /// routed-footprint accounting and KV-shipment sizing).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.kv.bytes_per_token
+    }
+
     /// Configured prefill chunk (0 = decode-only mode).
     pub fn prefill_chunk(&self) -> u64 {
         self.prefill_chunk
@@ -268,25 +287,11 @@ impl Batcher {
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::{budget, mk_req};
     use super::*;
 
     fn req(id: u64, ctx: u64, gen: u64) -> Request {
-        Request {
-            id,
-            arrival: 0.0,
-            context_len: ctx,
-            gen_len: gen,
-            generated: 0,
-            prefilled: 0,
-            scheduled_prefill: 0,
-            admitted_at: None,
-            first_token_at: None,
-            completed_at: None,
-        }
-    }
-
-    fn budget(tokens: u64) -> KvBudget {
-        KvBudget::new(tokens as f64, 0.0, 1.0)
+        mk_req(id, 0.0, ctx, gen)
     }
 
     #[test]
@@ -447,5 +452,43 @@ mod tests {
         assert_eq!(plan.decode_batch, 1);
         assert_eq!(plan.prefill_tokens, 0);
         assert_eq!(b.step_complete(0.1).len(), 1);
+    }
+
+    #[test]
+    fn admission_keeps_an_earlier_stamp() {
+        // A disaggregated request re-admitted at the decode pool must
+        // keep its prefill-side admission time: queue delay is a
+        // lifecycle quantity, not a per-pool one.
+        let mut b = Batcher::new(4, budget(1000));
+        let mut r = req(0, 10, 2);
+        r.admitted_at = Some(0.25);
+        b.enqueue(r);
+        b.enqueue(req(1, 10, 2));
+        b.admit(1.0);
+        for done in [b.step_complete(1.1), b.step_complete(1.2)] {
+            for d in done {
+                match d.id {
+                    0 => assert_eq!(d.admitted_at, Some(0.25)),
+                    _ => assert_eq!(d.admitted_at, Some(1.0)),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_backlog_counts_queued_and_prefilling() {
+        let mut b = Batcher::with_prefill(2, budget(1000), 8);
+        b.enqueue(req(0, 16, 1));
+        b.enqueue(req(1, 16, 1));
+        b.enqueue(req(2, 16, 1));
+        assert_eq!(b.prefill_backlog(), 3); // all queued
+        b.admit(0.0);
+        assert_eq!(b.prefill_backlog(), 3); // 2 prefilling + 1 queued
+        b.plan_step();
+        b.step_complete(0.1); // r0: 8 of 16 tokens in
+        assert_eq!(b.prefill_backlog(), 3);
+        b.plan_step();
+        b.step_complete(0.2); // r0 fully prefilled (emits first token)
+        assert_eq!(b.prefill_backlog(), 2);
     }
 }

@@ -72,6 +72,26 @@ pub trait StepEngine {
     fn name(&self) -> String;
 }
 
+/// Forwarding impl so a simulator can drive a *borrowed* engine through
+/// the same `Box<dyn StepEngine + '_>` storage an owned engine uses
+/// ([`ServingSim`](super::ServingSim) borrows its engine, the cluster
+/// owns one per instance). `mixed_step_latency` is forwarded explicitly:
+/// relying on the trait default here would silently bypass an engine's
+/// own override (the analytic backend's fused prefill+decode pricing).
+impl<E: StepEngine + ?Sized> StepEngine for &mut E {
+    fn step_latency(&mut self, batch: u64, max_context: u64) -> f64 {
+        (**self).step_latency(batch, max_context)
+    }
+
+    fn mixed_step_latency(&mut self, step: &StepBatch) -> f64 {
+        (**self).mixed_step_latency(step)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
 /// LIMINAL-priced engine: each step costs the analytical `T_batch` for
 /// the *current* batch size and context — the dynamic counterpart of the
 /// paper's steady-state tables.
@@ -214,6 +234,29 @@ mod tests {
         fn name(&self) -> String {
             "fixed".into()
         }
+    }
+
+    #[test]
+    fn borrowed_engines_forward_the_mixed_override() {
+        // `&mut AnalyticEngine` must price mixed steps through the
+        // analytic override, not the trait default (which would treat
+        // the chunk as extra decode lanes and grossly underprice it).
+        let app = Registry::builtin().app("llama3-70b").unwrap();
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut eng = AnalyticEngine::new(app, sys);
+        let step = StepBatch {
+            decode_batch: 4,
+            max_context: 4096,
+            prefill_seqs: 1,
+            prefill_tokens: 1024,
+            prefill_past: 0,
+        };
+        let direct = eng.mixed_step_latency(&step);
+        let direct_name = eng.name();
+        let borrowed: &mut dyn StepEngine = &mut eng;
+        let mut boxed: Box<dyn StepEngine + '_> = Box::new(borrowed);
+        assert_eq!(boxed.mixed_step_latency(&step), direct);
+        assert_eq!(boxed.name(), direct_name);
     }
 
     #[test]

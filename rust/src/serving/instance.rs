@@ -1,0 +1,278 @@
+//! One serving instance: the batcher + engine state machine that both
+//! the single-instance simulator ([`ServingSim`](super::ServingSim)) and
+//! the cluster simulator ([`crate::cluster::ClusterSim`]) drive from a
+//! shared [`EventQueue`](crate::des::EventQueue).
+//!
+//! The simulator owns the event calendar; the instance owns everything
+//! inside one model replica — admission queue, KV budget, chunk
+//! planner, the engine that prices steps, and the occupancy statistics.
+//! The split is the contract that makes multi-instance serving possible
+//! at all: N instances multiplex on *one* clock by keying their
+//! [`InstanceEvent::StepDone`] events with an instance id, so
+//! cross-instance causality (routing, KV shipment) is totally ordered
+//! and seeded runs replay exactly.
+//!
+//! Step semantics are exactly the single-simulator fidelity rules:
+//! admission only at step boundaries ([`Instance::kick`] admits, plans,
+//! and prices atomically), plan/price/complete, and duration-weighted
+//! occupancy. Occupancy integrals are charged when a step *completes*
+//! ([`Instance::step_done`]), so a run truncated by `max_steps` or
+//! `max_time` never counts a step that did not finish — busy time can
+//! never exceed the simulated span.
+
+use super::batcher::Batcher;
+use super::engine::StepEngine;
+use super::metrics::{ServingReport, StepStats};
+use super::request::Request;
+
+/// Events driving instances on a shared event calendar. The single-
+/// instance simulator uses instance id 0 throughout; the cluster keys
+/// every completion and KV shipment by the instance it lands on.
+pub enum InstanceEvent {
+    /// A request arriving at the front door (router or lone instance).
+    Arrival(Request),
+    /// The in-flight step of instance `id` completed.
+    StepDone(usize),
+    /// A prefilled request's KV cache finished its interconnect
+    /// transfer and lands at decode instance `id` (disaggregated mode).
+    KvArrive(usize, Request),
+}
+
+/// One model instance: a [`Batcher`] + [`StepEngine`] pair plus its
+/// accounting. The engine is stored as a box over any lifetime so a
+/// simulator can either own its engine (`Box<dyn StepEngine>`, the
+/// cluster) or borrow one (`Box<&mut dyn StepEngine>`, the
+/// single-instance simulator's public API).
+pub struct Instance<'e> {
+    batcher: Batcher,
+    engine: Box<dyn StepEngine + 'e>,
+    /// The in-flight step's `(latency, lanes)`, if any.
+    in_flight: Option<(f64, u64)>,
+    stats: StepStats,
+    /// Requests retired on this instance (a disaggregated request
+    /// retires once on its prefill instance and once on its decode
+    /// instance; each keeps its own copy).
+    finished: Vec<Request>,
+    /// Full KV footprint of everything routed here and not yet retired.
+    outstanding_kv_bytes: f64,
+    /// Generation-token backlog routed here and not yet retired.
+    outstanding_gen_tokens: u64,
+    /// Prompt tokens routed here (pending = this - batcher's processed).
+    routed_prefill_tokens: u64,
+    /// EWMA of recent step latencies (router TTFT-prediction input).
+    ewma_step: f64,
+}
+
+impl<'e> Instance<'e> {
+    /// Wrap a batcher and an engine into an instance.
+    pub fn new(batcher: Batcher, engine: Box<dyn StepEngine + 'e>) -> Self {
+        Instance {
+            batcher,
+            engine,
+            in_flight: None,
+            stats: StepStats::default(),
+            finished: Vec::new(),
+            outstanding_kv_bytes: 0.0,
+            outstanding_gen_tokens: 0,
+            routed_prefill_tokens: 0,
+            ewma_step: 0.0,
+        }
+    }
+
+    /// Hand a routed request to this instance's admission queue,
+    /// charging the routed-load accounting the router snapshots read.
+    pub fn enqueue(&mut self, r: Request) {
+        let bpt = self.batcher.kv_bytes_per_token();
+        self.outstanding_kv_bytes += (r.context_len + r.gen_len) as f64 * bpt;
+        self.outstanding_gen_tokens += r.gen_len;
+        if self.batcher.prefill_chunk() > 0 {
+            self.routed_prefill_tokens += r.context_len;
+        }
+        self.batcher.enqueue(r);
+    }
+
+    /// Step boundary (or idle): admit queued requests, plan the next
+    /// step, and price it. Returns the step latency to schedule a
+    /// [`InstanceEvent::StepDone`] at, or `None` when a step is already
+    /// in flight or there is no work.
+    pub fn kick(&mut self, now: f64) -> Option<f64> {
+        if self.in_flight.is_some() {
+            return None;
+        }
+        self.batcher.admit(now);
+        let plan = self.batcher.plan_step();
+        if plan.is_empty() {
+            return None;
+        }
+        let dt = self.engine.mixed_step_latency(&plan);
+        self.ewma_step = if self.ewma_step == 0.0 {
+            dt
+        } else {
+            0.2 * dt + 0.8 * self.ewma_step
+        };
+        self.in_flight = Some((dt, plan.lanes()));
+        Some(dt)
+    }
+
+    /// Complete the in-flight step: charge its occupancy integral,
+    /// apply the planned token movement, and retire finished requests.
+    /// The retired requests are returned (for cluster-level handling —
+    /// KV shipment, lifecycle merging) and also recorded in this
+    /// instance's own `finished` list for its per-instance report.
+    pub fn step_done(&mut self, now: f64) -> Vec<Request> {
+        if let Some((dt, lanes)) = self.in_flight.take() {
+            self.stats.busy_time += dt;
+            self.stats.batch_time_integral += lanes as f64 * dt;
+        }
+        self.stats.steps += 1;
+        let retired = self.batcher.step_complete(now);
+        let bpt = self.batcher.kv_bytes_per_token();
+        for r in &retired {
+            let bytes = (r.context_len + r.gen_len) as f64 * bpt;
+            self.outstanding_kv_bytes = (self.outstanding_kv_bytes - bytes).max(0.0);
+            self.outstanding_gen_tokens =
+                self.outstanding_gen_tokens.saturating_sub(r.gen_len);
+            self.finished.push(r.clone());
+        }
+        retired
+    }
+
+    /// Steps completed so far.
+    pub fn steps(&self) -> u64 {
+        self.stats.steps
+    }
+
+    /// Whether a step is currently in flight.
+    pub fn busy(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
+    /// Requests queued at the instance (not yet admitted).
+    pub fn queued_len(&self) -> usize {
+        self.batcher.queued_len()
+    }
+
+    /// Requests active on the instance (prefilling or decoding).
+    pub fn active_len(&self) -> usize {
+        self.batcher.active_len()
+    }
+
+    /// The instance's batch cap.
+    pub fn max_batch(&self) -> usize {
+        self.batcher.max_batch
+    }
+
+    /// The instance's prefill chunk size (0 = decode-only).
+    pub fn prefill_chunk(&self) -> u64 {
+        self.batcher.prefill_chunk()
+    }
+
+    /// KV bytes committed to the instance (queued + active footprint).
+    pub fn outstanding_kv_bytes(&self) -> f64 {
+        self.outstanding_kv_bytes
+    }
+
+    /// Generation tokens committed to the instance and not yet retired.
+    pub fn outstanding_gen_tokens(&self) -> u64 {
+        self.outstanding_gen_tokens
+    }
+
+    /// Prompt tokens routed here that are not yet prefilled.
+    pub fn pending_prefill_tokens(&self) -> u64 {
+        self.routed_prefill_tokens
+            .saturating_sub(self.batcher.prefill_tokens_processed())
+    }
+
+    /// Prompts routed here that are not yet fully ingested.
+    pub fn pending_prefill_prompts(&self) -> u64 {
+        self.batcher.prefill_backlog() as u64
+    }
+
+    /// Exponentially-weighted mean of recent step latencies, seconds
+    /// (0 until the first step is priced).
+    pub fn ewma_step(&self) -> f64 {
+        self.ewma_step
+    }
+
+    /// The engine's backend name.
+    pub fn engine_name(&self) -> String {
+        self.engine.name()
+    }
+
+    /// Requests retired on this instance so far.
+    pub fn finished(&self) -> &[Request] {
+        &self.finished
+    }
+
+    /// Step accounting with the prefill total and end time filled in.
+    pub fn stats(&self, end_time: f64) -> StepStats {
+        StepStats {
+            prefill_tokens: self.batcher.prefill_tokens_processed(),
+            end_time,
+            ..self.stats
+        }
+    }
+
+    /// Per-instance serving report over the requests retired here.
+    pub fn report(&self, name: String, end_time: f64) -> ServingReport {
+        ServingReport::from_requests(name, &self.finished, &self.stats(end_time))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{mk_req, open_budget, FixedEngine};
+    use super::*;
+
+    #[test]
+    fn kick_admits_prices_and_step_done_retires() {
+        let batcher = Batcher::new(4, open_budget());
+        let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.1)));
+        assert_eq!(inst.kick(0.0), None, "no work yet");
+        inst.enqueue(mk_req(0, 0.0, 8, 2));
+        assert_eq!(inst.outstanding_gen_tokens(), 2);
+        assert_eq!(inst.kick(0.0), Some(0.1));
+        assert!(inst.busy());
+        assert_eq!(inst.kick(0.0), None, "step already in flight");
+        assert!(inst.step_done(0.1).is_empty());
+        assert_eq!(inst.kick(0.1), Some(0.1));
+        let done = inst.step_done(0.2);
+        assert_eq!(done.len(), 1);
+        assert_eq!(inst.steps(), 2);
+        assert_eq!(inst.outstanding_gen_tokens(), 0);
+        assert_eq!(inst.finished().len(), 1);
+        let rep = inst.report("t".into(), 0.2);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.tokens, 2);
+        assert!((rep.mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_is_charged_at_completion_not_scheduling() {
+        let batcher = Batcher::new(4, open_budget());
+        let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.1)));
+        inst.enqueue(mk_req(0, 0.0, 8, 1));
+        inst.kick(0.0);
+        // In flight but not completed: nothing charged yet.
+        assert_eq!(inst.stats(0.05).busy_time, 0.0);
+        assert_eq!(inst.stats(0.05).steps, 0);
+        inst.step_done(0.1);
+        let st = inst.stats(0.1);
+        assert!((st.busy_time - 0.1).abs() < 1e-12);
+        assert_eq!(st.steps, 1);
+    }
+
+    #[test]
+    fn ewma_tracks_step_latency() {
+        let batcher = Batcher::new(4, open_budget());
+        let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.25)));
+        inst.enqueue(mk_req(0, 0.0, 8, 3));
+        inst.kick(0.0);
+        inst.step_done(0.25);
+        assert!((inst.ewma_step() - 0.25).abs() < 1e-12);
+        inst.kick(0.25);
+        inst.step_done(0.5);
+        // Constant latency: the EWMA stays put.
+        assert!((inst.ewma_step() - 0.25).abs() < 1e-12);
+    }
+}

@@ -14,8 +14,9 @@
 
 use super::request::Request;
 
-/// Percentile of a sorted-or-not sample set (nearest-rank).
-pub fn percentile(samples: &mut Vec<f64>, p: f64) -> f64 {
+/// Percentile of a sorted-or-not sample set (nearest-rank). Sorts the
+/// slice in place; returns NaN for an empty sample set.
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
@@ -44,7 +45,7 @@ impl LatencyStats {
     }
 
     /// Compute from samples (sorts in place; zeros when empty).
-    pub fn from_samples(samples: &mut Vec<f64>) -> LatencyStats {
+    pub fn from_samples(samples: &mut [f64]) -> LatencyStats {
         if samples.is_empty() {
             return LatencyStats::zero();
         }
@@ -224,6 +225,71 @@ mod tests {
         assert!(percentile(&mut empty, 50.0).is_nan());
     }
 
+    #[test]
+    fn percentile_single_sample_is_that_sample_at_every_p() {
+        for p in [0.0, 1.0, 50.0, 90.0, 99.0, 100.0] {
+            let mut one = [0.37f64];
+            assert_eq!(percentile(&mut one, p), 0.37);
+        }
+    }
+
+    #[test]
+    fn percentile_of_two_samples_rounds_to_nearest_rank() {
+        // Nearest-rank on n=2: rank = round(p/100 * 1). p99 (and p90)
+        // land on the larger sample; p49 and below on the smaller.
+        let mut two = [2.0f64, 1.0];
+        assert_eq!(percentile(&mut two, 99.0), 2.0);
+        assert_eq!(percentile(&mut two, 90.0), 2.0);
+        assert_eq!(percentile(&mut two, 49.0), 1.0);
+        // p50 rounds half away from zero: the upper sample.
+        assert_eq!(percentile(&mut two, 50.0), 2.0);
+    }
+
+    #[test]
+    fn merged_report_percentiles_equal_pooled_raw_samples() {
+        // The cluster report aggregates by pooling every instance's
+        // completed requests and recomputing percentiles — which must
+        // equal percentile() over the union of the per-instance raw
+        // samples (NOT any average of per-instance percentiles).
+        let mk = |id: u64, first: f64, done: f64| Request {
+            id,
+            arrival: 0.0,
+            context_len: 10,
+            gen_len: 5,
+            generated: 5,
+            prefilled: 10,
+            scheduled_prefill: 0,
+            admitted_at: Some(0.0),
+            first_token_at: Some(first),
+            completed_at: Some(done),
+        };
+        let inst_a: Vec<Request> =
+            vec![mk(0, 0.1, 1.0), mk(1, 0.2, 2.0), mk(2, 0.9, 3.0)];
+        let inst_b: Vec<Request> = vec![mk(3, 0.3, 1.5), mk(4, 0.6, 2.5)];
+        let pooled: Vec<Request> =
+            inst_a.iter().chain(&inst_b).cloned().collect();
+        let rep = ServingReport::from_requests(
+            "merged".into(),
+            &pooled,
+            &StepStats { end_time: 3.0, ..Default::default() },
+        );
+        let mut ttft_raw: Vec<f64> =
+            pooled.iter().filter_map(|r| r.ttft()).collect();
+        assert_eq!(rep.ttft.p50, percentile(&mut ttft_raw, 50.0));
+        assert_eq!(rep.ttft.p90, percentile(&mut ttft_raw, 90.0));
+        assert_eq!(rep.ttft.p99, percentile(&mut ttft_raw, 99.0));
+        // n=5 nearest-rank: p50 is the middle sample, p90/p99 the max.
+        assert_eq!(rep.ttft.p50, 0.3);
+        assert_eq!(rep.ttft.p99, 0.9);
+        // A per-instance average would get this wrong: each instance's
+        // p99 is its own max (0.9 and 0.6), and no average of those
+        // reproduces the pooled tail for asymmetric instance loads.
+        let mut a: Vec<f64> = inst_a.iter().filter_map(|r| r.ttft()).collect();
+        let mut b: Vec<f64> = inst_b.iter().filter_map(|r| r.ttft()).collect();
+        let avg = (percentile(&mut a, 50.0) + percentile(&mut b, 50.0)) / 2.0;
+        assert_ne!(rep.ttft.p50, avg);
+    }
+
     fn one_request() -> Request {
         Request {
             id: 0,
@@ -276,8 +342,9 @@ mod tests {
 
     #[test]
     fn latency_stats_handle_empty_and_render() {
-        assert_eq!(LatencyStats::from_samples(&mut vec![]), LatencyStats::zero());
-        let s = LatencyStats::from_samples(&mut vec![0.1, 0.2, 0.3]);
+        let mut empty: Vec<f64> = vec![];
+        assert_eq!(LatencyStats::from_samples(&mut empty), LatencyStats::zero());
+        let s = LatencyStats::from_samples(&mut [0.1, 0.2, 0.3]);
         assert!((s.mean - 0.2).abs() < 1e-12);
         assert_eq!(s.p50, 0.2);
         let rep = ServingReport::from_requests(

@@ -14,10 +14,24 @@
 //!   wall-clock including every software overhead the paper's limit
 //!   study idealizes away (Appendix E's "simulated tokens/sec" analog).
 //!
+//! # Architecture: instances on a shared calendar
+//!
+//! The unit of serving is an [`Instance`]: one model replica's
+//! [`Batcher`] (admission queue + KV budget + chunk planner) fused to
+//! one [`StepEngine`], exposing exactly two transitions — `kick` (admit,
+//! plan, price a step) and `step_done` (apply the priced plan). An
+//! instance never owns a clock: *simulators* own a single
+//! [`des::EventQueue`](crate::des) and drive instances with
+//! [`InstanceEvent`]s keyed by instance id. [`ServingSim`] is the
+//! one-instance driver; [`crate::cluster::ClusterSim`] multiplexes N
+//! instances (plus routing and KV-shipment events) on the same calendar
+//! type, so cross-instance causality is totally ordered and seeded runs
+//! replay exactly. A one-instance cluster behind a pass-through router
+//! is step-for-step identical to [`ServingSim`] — pinned by the
+//! equivalence test in `tests/integration_cluster.rs`.
+//!
 //! # Step semantics
 //!
-//! The scheduler is a discrete-event simulation ([`crate::des`]) with
-//! Poisson arrivals and a FIFO admission queue gated by KV capacity.
 //! The fidelity rules, each pinned by a regression test:
 //!
 //! * **Admission points.** Requests are admitted only at step
@@ -32,22 +46,40 @@
 //!   pass emits the first output token; only then does the request
 //!   enter decode. With the chunk set to 0 the simulator reverts to the
 //!   paper's decode-only assumption (prompts prefilled elsewhere, as in
-//!   disaggregated serving).
+//!   disaggregated serving — which is exactly how the cluster's decode
+//!   pools run).
+//! * **Occupancy is duration-weighted and charged at completion.**
+//!   `mean_batch` integrates lanes over busy time, and a step cut short
+//!   by `max_steps`/`max_time` is never charged, so busy time cannot
+//!   exceed the simulated span.
 //! * **SLO metrics.** [`ServingReport`] aggregates TTFT (arrival to
 //!   first token), TPOT (steady-state inter-token time), and E2E
 //!   latency as mean/p50/p90/p99 ([`LatencyStats`]), plus
 //!   duration-weighted batch occupancy and system tokens/sec.
+//!
+//! # Workloads
+//!
+//! [`WorkloadGen`] synthesizes Poisson arrivals with uniform
+//! prompt/generation lengths; [`WorkloadTrace`] replays recorded
+//! JSONL/CSV traces (`arrival, context_len, gen_len` per record) for
+//! trace-driven studies (`serve --trace`).
 
 mod batcher;
 mod engine;
+mod instance;
 mod metrics;
 mod pjrt_engine;
 mod request;
 mod sim;
+#[cfg(test)]
+pub(crate) mod testutil;
+mod trace;
 
 pub use batcher::{Batcher, KvBudget};
 pub use engine::{AnalyticEngine, StepBatch, StepEngine};
+pub use instance::{Instance, InstanceEvent};
 pub use metrics::{percentile, LatencyStats, ServingReport, StepStats};
 pub use pjrt_engine::PjrtEngine;
 pub use request::{Request, WorkloadGen, WorkloadSpec};
 pub use sim::{ServingSim, SimConfig};
+pub use trace::WorkloadTrace;

@@ -1,5 +1,11 @@
-//! The serving simulation driver: DES loop over arrivals and engine
-//! steps (mixed prefill + decode).
+//! The single-instance serving simulator: a DES loop over arrivals and
+//! engine steps (mixed prefill + decode), driving one [`Instance`].
+//!
+//! The event loop owns a [`des::EventQueue`](crate::des::EventQueue) of
+//! [`InstanceEvent`]s keyed by instance id (always 0 here); all
+//! per-step mechanics — admission, planning, pricing, completion,
+//! occupancy accounting — live in [`Instance`], the same state machine
+//! [`crate::cluster::ClusterSim`] multiplexes N of on one calendar.
 //!
 //! Step semantics (fidelity rules the regression tests pin down):
 //!
@@ -14,20 +20,25 @@
 //! * **Occupancy statistics are duration-weighted.** `mean_batch`
 //!   integrates lanes over busy time, so engines with batch-dependent
 //!   step latency (the analytic backend) don't bias the mean.
-//! * **Limits are exact.** `max_steps = N` prices exactly N steps.
+//! * **Limits are exact.** `max_steps = N` prices exactly N steps, and
+//!   `max_time = T` clamps at the boundary: an event scheduled past `T`
+//!   is never applied (the step it would have completed is not counted
+//!   in `steps` or `finished`) and the reported span ends at `T`.
 
 use crate::des::EventQueue;
 
 use super::batcher::Batcher;
 use super::engine::StepEngine;
-use super::metrics::{ServingReport, StepStats};
+use super::instance::{Instance, InstanceEvent};
+use super::metrics::ServingReport;
 use super::request::Request;
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Hard stop on simulated seconds (safety valve; `f64::INFINITY` to
-    /// run to drain).
+    /// run to drain). Enforced at the boundary: events past the deadline
+    /// never apply and the reported span is clamped to it.
     pub max_time: f64,
     /// Hard stop on steps (enforced exactly).
     pub max_steps: u64,
@@ -37,11 +48,6 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig { max_time: f64::INFINITY, max_steps: 10_000_000 }
     }
-}
-
-enum Event {
-    Arrival(Request),
-    StepDone,
 }
 
 /// The serving simulator: continuous batching over a step engine.
@@ -60,91 +66,48 @@ impl<'a> ServingSim<'a> {
     /// Run the given workload to completion (or a configured limit) and
     /// report. The engine is stepped whenever requests are active; a new
     /// step is scheduled at `now + mixed_step_latency(plan)`.
-    pub fn run(mut self, workload: Vec<Request>) -> ServingReport {
-        let mut q: EventQueue<Event> = EventQueue::new();
+    pub fn run(self, workload: Vec<Request>) -> ServingReport {
+        let ServingSim { batcher, engine, cfg } = self;
+        let mut q: EventQueue<InstanceEvent> = EventQueue::new();
         for r in workload {
-            q.schedule_at(r.arrival, Event::Arrival(r));
+            q.schedule_at(r.arrival, InstanceEvent::Arrival(r));
         }
 
-        let mut finished: Vec<Request> = Vec::new();
-        let mut steps: u64 = 0;
-        let mut batch_time_integral: f64 = 0.0;
-        let mut busy_time: f64 = 0.0;
-        let mut step_in_flight = false;
-
+        let mut inst = Instance::new(batcher, Box::new(engine));
         while let Some((now, ev)) = q.next() {
+            if now > cfg.max_time {
+                break; // clamp at the boundary: the event never applies
+            }
             match ev {
-                Event::Arrival(r) => {
-                    self.batcher.enqueue(r);
+                InstanceEvent::Arrival(r) | InstanceEvent::KvArrive(_, r) => {
+                    inst.enqueue(r)
                 }
-                Event::StepDone => {
-                    step_in_flight = false;
-                    finished.extend(self.batcher.step_complete(now));
-                    steps += 1;
+                InstanceEvent::StepDone(_) => {
+                    inst.step_done(now);
                 }
             }
-            if now > self.cfg.max_time || steps >= self.cfg.max_steps {
+            if inst.steps() >= cfg.max_steps {
                 break;
             }
             // Step boundary (or idle): admit, plan, and price one step.
             // While a step is in flight, arrivals above only enqueue.
-            if !step_in_flight {
-                self.batcher.admit(now);
-                let plan = self.batcher.plan_step();
-                if !plan.is_empty() {
-                    let dt = self.engine.mixed_step_latency(&plan);
-                    batch_time_integral += plan.lanes() as f64 * dt;
-                    busy_time += dt;
-                    q.schedule_in(dt, Event::StepDone);
-                    step_in_flight = true;
-                }
+            if let Some(dt) = inst.kick(now) {
+                q.schedule_in(dt, InstanceEvent::StepDone(0));
             }
         }
 
-        let stats = StepStats {
-            steps,
-            batch_time_integral,
-            busy_time,
-            prefill_tokens: self.batcher.prefill_tokens_processed(),
-            end_time: q.now(),
-        };
-        ServingReport::from_requests(self.engine.name(), &finished, &stats)
+        let name = inst.engine_name();
+        inst.report(name, q.now().min(cfg.max_time))
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::{
+        mk_req, open_budget, BatchProportionalEngine, FixedEngine,
+    };
     use super::*;
-    use crate::serving::batcher::KvBudget;
     use crate::serving::request::{WorkloadGen, WorkloadSpec};
-
-    /// A constant-latency engine for deterministic tests.
-    struct FixedEngine(f64);
-    impl StepEngine for FixedEngine {
-        fn step_latency(&mut self, batch: u64, _ctx: u64) -> f64 {
-            if batch == 0 {
-                0.0
-            } else {
-                self.0
-            }
-        }
-        fn name(&self) -> String {
-            "fixed".into()
-        }
-    }
-
-    /// Step latency proportional to the lane count — the shape that
-    /// exposes per-step-averaged (instead of duration-weighted) batch
-    /// statistics.
-    struct BatchProportionalEngine(f64);
-    impl StepEngine for BatchProportionalEngine {
-        fn step_latency(&mut self, batch: u64, _ctx: u64) -> f64 {
-            self.0 * batch as f64
-        }
-        fn name(&self) -> String {
-            "batch-proportional".into()
-        }
-    }
 
     fn small_workload(n: u64) -> Vec<Request> {
         WorkloadGen::new(WorkloadSpec {
@@ -155,25 +118,6 @@ mod tests {
             seed: 1,
         })
         .generate()
-    }
-
-    fn mk_req(id: u64, arrival: f64, ctx: u64, gen: u64) -> Request {
-        Request {
-            id,
-            arrival,
-            context_len: ctx,
-            gen_len: gen,
-            generated: 0,
-            prefilled: 0,
-            scheduled_prefill: 0,
-            admitted_at: None,
-            first_token_at: None,
-            completed_at: None,
-        }
-    }
-
-    fn open_budget() -> KvBudget {
-        KvBudget::new(1e9, 0.0, 1.0)
     }
 
     #[test]
@@ -228,6 +172,83 @@ mod tests {
         // Regression: the limit used to be enforced off-by-one, letting
         // a 6th step run (the old test even asserted `<= 6`).
         assert_eq!(rep.steps, 5);
+    }
+
+    #[test]
+    fn max_time_clamps_at_the_boundary() {
+        // One request decoding 5 tokens at 0.1 s/step: completions land
+        // at 0.1..0.5. With max_time = 0.25 the step finishing at 0.3
+        // must NOT be applied. Regression: the deadline used to be
+        // checked *after* applying the event, so that step was still
+        // counted in `steps` (3 instead of 2) and the span ran to 0.3.
+        let batcher = Batcher::new(4, open_budget());
+        let mut eng = FixedEngine(0.1);
+        let rep = ServingSim::new(
+            batcher,
+            &mut eng,
+            SimConfig { max_time: 0.25, ..Default::default() },
+        )
+        .run(vec![mk_req(0, 0.0, 0, 5)]);
+        assert_eq!(rep.steps, 2, "step past the deadline was counted");
+        assert_eq!(rep.completed, 0);
+        assert!((rep.span - 0.25).abs() < 1e-12, "span {}", rep.span);
+        // Only completed steps are charged: busy 0.2s over 2 steps of
+        // one lane each.
+        assert!((rep.mean_batch - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_time_does_not_disturb_drained_runs() {
+        let run = |max_time: f64| {
+            let batcher = Batcher::new(8, open_budget());
+            let mut eng = FixedEngine(0.01);
+            ServingSim::new(
+                batcher,
+                &mut eng,
+                SimConfig { max_time, ..Default::default() },
+            )
+            .run(small_workload(20))
+        };
+        let free = run(f64::INFINITY);
+        let capped = run(1e9);
+        assert_eq!(free.completed, capped.completed);
+        assert_eq!(free.steps, capped.steps);
+        assert!((free.span - capped.span).abs() < 1e-12);
+    }
+
+    /// The tentpole's single-instance equivalence pin: the refactored
+    /// (instance-based) simulator must reproduce the pre-refactor
+    /// report exactly on a fixed workload. The expected values are the
+    /// pre-refactor loop's output (independently derived by an exact
+    /// mirror of the old event loop), so any drift the extraction of
+    /// [`Instance`] introduced — admission points, charge timing,
+    /// retirement order — fails this test.
+    #[test]
+    fn refactor_reproduces_the_prerefactor_report() {
+        let wl = vec![
+            mk_req(0, 0.00, 24, 3),
+            mk_req(1, 0.02, 16, 2),
+            mk_req(2, 0.03, 0, 4),
+            mk_req(3, 0.30, 40, 1),
+            mk_req(4, 0.31, 8, 5),
+        ];
+        let batcher = Batcher::with_prefill(3, open_budget(), 16);
+        let mut eng = FixedEngine(0.05);
+        let rep =
+            ServingSim::new(batcher, &mut eng, SimConfig::default()).run(wl);
+        assert_eq!(rep.completed, 5);
+        assert_eq!(rep.tokens, 15);
+        assert_eq!(rep.prefill_tokens, 88);
+        assert_eq!(rep.steps, 13);
+        let close = |a: f64, b: f64, what: &str| {
+            assert!((a - b).abs() < 1e-9, "{what}: {a} vs pre-refactor {b}");
+        };
+        close(rep.span, 0.7, "span");
+        close(rep.stps, 15.0 / 0.7, "stps");
+        close(rep.mean_batch, 0.9 / 0.65, "mean_batch");
+        close(rep.ttft.mean, 0.128, "ttft.mean");
+        close(rep.tpot.mean, 0.05, "tpot.mean");
+        close(rep.queue_delay_mean, 0.018, "queue_delay_mean");
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! Shared test scaffolding for the serving and cluster test modules:
+//! request builders, KV budgets, and deterministic step engines that
+//! used to be copy-pasted across `sim.rs` / `batcher.rs` / `cluster`.
+//!
+//! Compiled only for unit tests (`#[cfg(test)]` at the declaration
+//! site); integration tests under `tests/` build their own fixtures
+//! because the library's test-only items are not visible there.
+
+use super::batcher::KvBudget;
+use super::engine::StepEngine;
+use super::request::Request;
+
+/// Build a request with every simulator-mutated field zeroed.
+pub fn mk_req(id: u64, arrival: f64, ctx: u64, gen: u64) -> Request {
+    Request {
+        id,
+        arrival,
+        context_len: ctx,
+        gen_len: gen,
+        generated: 0,
+        prefilled: 0,
+        scheduled_prefill: 0,
+        admitted_at: None,
+        first_token_at: None,
+        completed_at: None,
+    }
+}
+
+/// A KV budget that never gates admission.
+pub fn open_budget() -> KvBudget {
+    KvBudget::new(1e9, 0.0, 1.0)
+}
+
+/// A KV budget holding exactly `tokens` token-slots (1 byte/token).
+pub fn budget(tokens: u64) -> KvBudget {
+    KvBudget::new(tokens as f64, 0.0, 1.0)
+}
+
+/// A constant-latency engine for deterministic timelines (free when the
+/// batch is empty).
+pub struct FixedEngine(pub f64);
+
+impl StepEngine for FixedEngine {
+    fn step_latency(&mut self, batch: u64, _ctx: u64) -> f64 {
+        if batch == 0 {
+            0.0
+        } else {
+            self.0
+        }
+    }
+    fn name(&self) -> String {
+        "fixed".into()
+    }
+}
+
+/// Step latency proportional to the lane count — the shape that exposes
+/// per-step-averaged (instead of duration-weighted) batch statistics.
+pub struct BatchProportionalEngine(pub f64);
+
+impl StepEngine for BatchProportionalEngine {
+    fn step_latency(&mut self, batch: u64, _ctx: u64) -> f64 {
+        self.0 * batch as f64
+    }
+    fn name(&self) -> String {
+        "batch-proportional".into()
+    }
+}

@@ -1,0 +1,172 @@
+//! Cluster-dimension sweeps: instance count x router policy, the
+//! scale-out axes the single-system `Grid` cannot express.
+//!
+//! Each cell runs the full cluster DES
+//! ([`serve_cluster`](crate::coordinator::serve_cluster)) instead of a
+//! closed-form evaluation, so a cell's record carries dynamic
+//! quantities — SLO tails, shed counts, scale-out efficiency — that
+//! only the event-driven simulator can produce. The `cluster-scaling`
+//! experiment and the `sweep` CLI both drive this.
+
+use crate::coordinator::{serve_cluster, ClusterJob, RouterPolicy};
+use crate::util::json::Json;
+use crate::Result;
+
+/// A cluster sweep: run the base job at every `(instances, router)`
+/// combination.
+#[derive(Debug, Clone)]
+pub struct ClusterGrid {
+    /// Base job; `instances` and `router` are overridden per cell.
+    pub base: ClusterJob,
+    /// Instance counts to sweep (e.g. `[1, 2, 4, 8]`).
+    pub instance_counts: Vec<usize>,
+    /// Router policies to sweep.
+    pub routers: Vec<RouterPolicy>,
+    /// Scale the offered load with the instance count (arrival rate and
+    /// request count multiply by `n`), so each cell sees the same
+    /// per-instance pressure — the configuration that isolates scale-out
+    /// efficiency. `false` holds the workload fixed (capacity studies).
+    pub scale_load: bool,
+}
+
+/// One cluster sweep cell, flattened for CSV/JSON export.
+#[derive(Debug, Clone)]
+pub struct ClusterRecord {
+    /// Instances in the cell.
+    pub instances: usize,
+    /// Router policy name (as reported by the router).
+    pub router: String,
+    /// Mode string (`colocated x4`, `disaggregated 2P+2D`, …).
+    pub mode: String,
+    /// Offered arrival rate, requests/second.
+    pub rate: f64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Aggregate system tokens/second.
+    pub stps: f64,
+    /// Scale-out efficiency: tokens/second/instance.
+    pub stps_per_instance: f64,
+    /// TTFT p99, seconds.
+    pub ttft_p99: f64,
+    /// TPOT p99, seconds.
+    pub tpot_p99: f64,
+    /// E2E p99, seconds.
+    pub e2e_p99: f64,
+}
+
+impl ClusterRecord {
+    /// Machine-readable form for experiment artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("instances", Json::Num(self.instances as f64)),
+            ("router", Json::Str(self.router.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("rate", Json::Num(self.rate)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("stps", Json::Num(self.stps)),
+            ("stps_per_instance", Json::Num(self.stps_per_instance)),
+            ("ttft_p99_s", Json::Num(self.ttft_p99)),
+            ("tpot_p99_s", Json::Num(self.tpot_p99)),
+            ("e2e_p99_s", Json::Num(self.e2e_p99)),
+        ])
+    }
+}
+
+/// Run every `(instances, router)` cell of the grid, in declaration
+/// order (instances outer, routers inner). Cells run sequentially: each
+/// is itself a full DES over hundreds of requests, and deterministic
+/// ordering matters more here than wall-clock.
+pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
+    let mut out = Vec::new();
+    for &n in &grid.instance_counts {
+        for &policy in &grid.routers {
+            let mut job = grid.base.clone();
+            job.instances = n;
+            job.router = policy;
+            if grid.scale_load {
+                job.workload.arrival_rate *= n as f64;
+                job.workload.n_requests *= n as u64;
+            }
+            if job.prefill_instances > 0 {
+                anyhow::ensure!(
+                    job.prefill_instances < n,
+                    "disaggregated grid cell {n} instances cannot host {} prefill",
+                    job.prefill_instances
+                );
+            }
+            let rep = serve_cluster(&job)?;
+            out.push(ClusterRecord {
+                instances: n,
+                router: rep.router.clone(),
+                mode: rep.mode.clone(),
+                rate: job.workload.arrival_rate,
+                completed: rep.cluster.completed,
+                shed: rep.shed,
+                stps: rep.cluster.stps,
+                stps_per_instance: rep.stps_per_instance(),
+                ttft_p99: rep.cluster.ttft.p99,
+                tpot_p99: rep.cluster.tpot.p99,
+                e2e_p99: rep.cluster.e2e.p99,
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::default_cluster_job;
+    use crate::hw::{presets, SystemConfig};
+
+    fn small_grid() -> ClusterGrid {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut base = default_cluster_job("llama3-70b", sys);
+        base.max_batch = 8;
+        base.prefill_chunk = 512;
+        base.workload.arrival_rate = 20.0;
+        base.workload.n_requests = 10;
+        base.workload.context = (512, 1024);
+        base.workload.gen = (16, 32);
+        ClusterGrid {
+            base,
+            instance_counts: vec![1, 2],
+            routers: vec![RouterPolicy::RoundRobin, RouterPolicy::LeastTokens],
+            scale_load: true,
+        }
+    }
+
+    #[test]
+    fn grid_runs_every_cell_in_order() {
+        let recs = run_cluster_grid(&small_grid()).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(
+            recs.iter().map(|r| r.instances).collect::<Vec<_>>(),
+            vec![1, 1, 2, 2]
+        );
+        assert_eq!(recs[0].router, "round-robin");
+        assert_eq!(recs[1].router, "least-tokens");
+        // scale_load doubled the 2-instance cells' offered load.
+        assert_eq!(recs[0].completed, 10);
+        assert_eq!(recs[2].completed, 20);
+        assert!((recs[2].rate - 40.0).abs() < 1e-12);
+        assert!(recs.iter().all(|r| r.stps > 0.0));
+    }
+
+    #[test]
+    fn records_export_json() {
+        let recs = run_cluster_grid(&ClusterGrid {
+            instance_counts: vec![1],
+            routers: vec![RouterPolicy::RoundRobin],
+            ..small_grid()
+        })
+        .unwrap();
+        let j = Json::parse(&recs[0].to_json().to_string()).unwrap();
+        assert_eq!(j.get("instances").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("router").unwrap().as_str(), Some("round-robin"));
+        assert!(j.get("ttft_p99_s").unwrap().as_f64().is_some());
+    }
+}

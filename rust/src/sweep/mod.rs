@@ -1,11 +1,18 @@
 //! Parameter-sweep engine: the systematic `application x hardware`
 //! exploration the paper positions as LIMINAL's key advantage over
 //! silicon measurements and point studies.
+//!
+//! Two sweep families: the closed-form [`Grid`] (model x chip x TP x
+//! context, evaluated analytically) and the event-driven
+//! [`ClusterGrid`] (instance count x router policy, each cell a full
+//! cluster DES run producing SLO tails and scale-out efficiency).
 
+mod cluster;
 mod grid;
 mod record;
 mod runner;
 
+pub use cluster::{run_cluster_grid, ClusterGrid, ClusterRecord};
 pub use grid::{BatchSpec, Grid};
 pub use record::Record;
 pub use runner::SweepRunner;
