@@ -1,0 +1,79 @@
+//! Micro-benchmarks over the simulator hot path, on the in-repo
+//! harness ([`liminal::util::bench::Suite`], `harness = false`). Run
+//! with `cargo bench -p liminal-perf [filter]`; each line reports
+//! min/median/mean per iteration and appends a JSON row to
+//! `target/liminal-bench.jsonl`.
+//!
+//! These isolate the four costs the arena refactor targets: calendar
+//! push/pop, batch planning, analytic step pricing, and request-state
+//! churn. The macro numbers (whole cluster runs) live in
+//! `perf-report`; regressions caught here localize which layer moved.
+
+use std::hint::black_box;
+
+use liminal::apps::Registry;
+use liminal::des::EventQueue;
+use liminal::hw::{presets, SystemConfig};
+use liminal::serving::{
+    AnalyticEngine, Batcher, KvBudget, Request, RequestArena, StepEngine,
+};
+use liminal::util::bench::Suite;
+
+fn req(id: u64, ctx: u64, gen: u64) -> Request {
+    Request {
+        id,
+        arrival: 0.0,
+        context_len: ctx,
+        gen_len: gen,
+        generated: 0,
+        prefilled: 0,
+        scheduled_prefill: 0,
+        admitted_at: None,
+        first_token_at: None,
+        completed_at: None,
+    }
+}
+
+fn main() {
+    let mut suite = Suite::from_args();
+
+    suite.bench("des/event_queue_push_pop_1k", || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..1000u32 {
+            q.schedule_at(f64::from(i % 97), i);
+        }
+        while let Some(ev) = q.next() {
+            black_box(ev);
+        }
+    });
+
+    // A full decode batch that never retires: plan_step runs the
+    // steady-state planning path every iteration.
+    let mut arena = RequestArena::new();
+    let mut batcher = Batcher::new(64, KvBudget::new(f64::INFINITY, 0.0, 1.0));
+    for i in 0..64 {
+        let id = arena.alloc(req(i, 512, 1_000_000));
+        batcher.enqueue(id);
+    }
+    batcher.admit(0.0, &mut arena);
+    suite.bench("serving/batcher_plan_64_decode_lanes", || {
+        black_box(batcher.plan_step(&mut arena));
+    });
+
+    let app = Registry::builtin().app("llama3-70b").expect("builtin model");
+    let mut engine =
+        AnalyticEngine::new(app, SystemConfig::new(presets::hbm3(), 8, 1));
+    let plan = batcher.plan_step(&mut arena);
+    suite.bench("serving/analytic_step_price_64_lanes", || {
+        black_box(engine.mixed_step_latency(black_box(&plan)));
+    });
+
+    suite.bench("serving/arena_alloc_touch_1k", || {
+        let mut a = RequestArena::with_capacity(1000);
+        for i in 0..1000u64 {
+            let id = a.alloc(req(i, 128, 16));
+            a[id].generated += 1;
+        }
+        black_box(a.len());
+    });
+}

@@ -1,0 +1,279 @@
+//! `perf-report`: the macro half of the tracked performance suite.
+//!
+//! Runs the cluster simulator end to end on fixed, seeded scenarios
+//! (1, 8, and 64 colocated instances of llama3-70b on an HBM3 TP-8
+//! system), measures wall-clock per run, and reports DES throughput as
+//! **events/second** plus the time-compression ratio
+//! (**simulated seconds per wall second**). The workload is identical
+//! across trials (same seed), so trial-to-trial spread is pure
+//! machine noise and the p50 is a stable tracking number.
+//!
+//! Output is the `liminal-perf/v1` JSON schema documented in
+//! `perf/README.md`. Modes:
+//!
+//! * `perf-report --out BENCH_perf.json` — refresh the baseline.
+//! * `perf-report --short --check BENCH_perf.json` — CI smoke: fewer
+//!   and smaller trials, then fail if p50 events/sec regressed more
+//!   than `--tolerance` (default 0.25) against the baseline. A
+//!   baseline marked `"provisional": true` (recorded on a machine
+//!   other than the CI runner class) warns instead of failing.
+
+use std::time::Instant;
+
+use liminal::coordinator::{default_cluster_job, serve_cluster, ClusterJob};
+use liminal::hw::{presets, SystemConfig};
+use liminal::serving::{percentile, WorkloadSpec};
+use liminal::util::json::Json;
+
+struct Opts {
+    short: bool,
+    check: Option<String>,
+    out: Option<String>,
+    tolerance: f64,
+}
+
+fn parse_args() -> Opts {
+    let mut opts =
+        Opts { short: false, check: None, out: None, tolerance: 0.25 };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--short" => opts.short = true,
+            "--check" => {
+                opts.check = Some(args.next().expect("--check needs a path"))
+            }
+            "--out" => {
+                opts.out = Some(args.next().expect("--out needs a path"))
+            }
+            "--tolerance" => {
+                opts.tolerance = args
+                    .next()
+                    .expect("--tolerance needs a fraction")
+                    .parse()
+                    .expect("--tolerance needs a number")
+            }
+            other => {
+                eprintln!(
+                    "unknown argument {other}\n\
+                     usage: perf-report [--short] [--check BASELINE] \
+                     [--out PATH] [--tolerance FRAC]"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    opts
+}
+
+/// One macro scenario: a colocated cluster at a fixed request rate per
+/// instance, so every size runs at the same per-instance load and the
+/// scaling axis isolates the simulator's own overhead.
+struct Scenario {
+    name: &'static str,
+    instances: usize,
+}
+
+const SCENARIOS: [Scenario; 3] = [
+    Scenario { name: "colocated-1x", instances: 1 },
+    Scenario { name: "colocated-8x", instances: 8 },
+    Scenario { name: "colocated-64x", instances: 64 },
+];
+
+fn scenario_job(instances: usize, reqs_per_instance: u64) -> ClusterJob {
+    let mut job = default_cluster_job(
+        "llama3-70b",
+        SystemConfig::new(presets::hbm3(), 8, 1),
+    );
+    job.instances = instances;
+    job.max_batch = 16;
+    job.prefill_chunk = 512;
+    job.workload = WorkloadSpec {
+        arrival_rate: 40.0 * instances as f64,
+        n_requests: reqs_per_instance * instances as u64,
+        context: (256, 1024),
+        gen: (64, 192),
+        seed: 7,
+    };
+    job
+}
+
+struct ScenarioResult {
+    name: &'static str,
+    instances: usize,
+    requests: u64,
+    /// DES events applied per run (identical across trials: the
+    /// workload is seeded and the simulator is deterministic).
+    events: u64,
+    events_per_sec: Vec<f64>,
+    sim_s_per_wall_s: Vec<f64>,
+}
+
+fn run_scenario(s: &Scenario, trials: usize, reqs_per_instance: u64) -> ScenarioResult {
+    let mut res = ScenarioResult {
+        name: s.name,
+        instances: s.instances,
+        requests: reqs_per_instance * s.instances as u64,
+        events: 0,
+        events_per_sec: Vec::with_capacity(trials),
+        sim_s_per_wall_s: Vec::with_capacity(trials),
+    };
+    for _ in 0..trials {
+        let job = scenario_job(s.instances, reqs_per_instance);
+        let t0 = Instant::now();
+        let rep = serve_cluster(&job).expect("scenario job runs");
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        res.events = rep.events;
+        res.events_per_sec.push(rep.events as f64 / wall);
+        res.sim_s_per_wall_s.push(rep.cluster.span / wall);
+    }
+    res
+}
+
+fn dist_json(samples: &[f64]) -> Json {
+    let mut v = samples.to_vec();
+    let p50 = percentile(&mut v, 50.0);
+    let p99 = percentile(&mut v, 99.0);
+    Json::obj(vec![("p50", Json::Num(p50)), ("p99", Json::Num(p99))])
+}
+
+fn report_json(results: &[ScenarioResult], short: bool) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("liminal-perf/v1".into())),
+        ("mode", Json::Str(if short { "short" } else { "full" }.into())),
+        ("provisional", Json::Bool(false)),
+        (
+            "scenarios",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::Str(r.name.into())),
+                            ("instances", Json::Num(r.instances as f64)),
+                            ("requests", Json::Num(r.requests as f64)),
+                            (
+                                "trials",
+                                Json::Num(r.events_per_sec.len() as f64),
+                            ),
+                            ("events", Json::Num(r.events as f64)),
+                            ("events_per_sec", dist_json(&r.events_per_sec)),
+                            (
+                                "sim_s_per_wall_s",
+                                dist_json(&r.sim_s_per_wall_s),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Compare current p50 events/sec per scenario against a baseline
+/// report. Returns the failure messages (empty = pass). A provisional
+/// baseline downgrades failures to warnings.
+fn check_against(
+    baseline: &Json,
+    results: &[ScenarioResult],
+    tolerance: f64,
+) -> (Vec<String>, bool) {
+    let provisional = matches!(
+        baseline.get("provisional"),
+        Some(Json::Bool(true))
+    );
+    let mut failures = Vec::new();
+    let empty: [Json; 0] = [];
+    let base_scenarios = baseline
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .unwrap_or(&empty);
+    for r in results {
+        let base = base_scenarios.iter().find(|b| {
+            b.get("name").and_then(|n| n.as_str()) == Some(r.name)
+        });
+        let Some(base) = base else {
+            eprintln!("warning: scenario {} missing from baseline", r.name);
+            continue;
+        };
+        let Some(base_p50) = base
+            .get("events_per_sec")
+            .and_then(|d| d.get("p50"))
+            .and_then(|p| p.as_f64())
+        else {
+            eprintln!("warning: baseline {} has no events_per_sec.p50", r.name);
+            continue;
+        };
+        let mut v = r.events_per_sec.clone();
+        let cur_p50 = percentile(&mut v, 50.0);
+        if cur_p50 < base_p50 * (1.0 - tolerance) {
+            failures.push(format!(
+                "{}: p50 {:.0} events/s is {:.0}% below baseline {:.0} \
+                 (tolerance {:.0}%)",
+                r.name,
+                cur_p50,
+                (1.0 - cur_p50 / base_p50) * 100.0,
+                base_p50,
+                tolerance * 100.0,
+            ));
+        }
+    }
+    (failures, provisional)
+}
+
+fn main() {
+    let opts = parse_args();
+    let (trials, reqs_per_instance) =
+        if opts.short { (3, 50) } else { (7, 150) };
+
+    let mut results = Vec::new();
+    for s in &SCENARIOS {
+        let r = run_scenario(s, trials, reqs_per_instance);
+        let mut eps = r.events_per_sec.clone();
+        let mut spw = r.sim_s_per_wall_s.clone();
+        println!(
+            "{:<14} {:>3} inst  {:>6} reqs  {:>9} events  \
+             p50 {:>10.0} events/s  p99 {:>10.0}  {:>8.1} sim-s/wall-s",
+            r.name,
+            r.instances,
+            r.requests,
+            r.events,
+            percentile(&mut eps, 50.0),
+            percentile(&mut eps, 99.0),
+            percentile(&mut spw, 50.0),
+        );
+        results.push(r);
+    }
+
+    let report = report_json(&results, opts.short);
+    if let Some(path) = &opts.out {
+        std::fs::write(path, format!("{report}\n"))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+
+    if let Some(path) = &opts.check {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+        let baseline = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("parsing baseline {path}: {e}"));
+        let (failures, provisional) =
+            check_against(&baseline, &results, opts.tolerance);
+        if failures.is_empty() {
+            println!("perf check vs {path}: ok");
+        } else if provisional {
+            for f in &failures {
+                eprintln!("warning (provisional baseline): {f}");
+            }
+            println!(
+                "perf check vs {path}: {} regression(s) ignored — baseline \
+                 is provisional; refresh it on this runner class",
+                failures.len()
+            );
+        } else {
+            for f in &failures {
+                eprintln!("perf regression: {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

@@ -30,7 +30,12 @@
 //!   multiplexed on one [`EventQueue`](crate::des::EventQueue) of
 //!   [`InstanceEvent`](crate::serving::InstanceEvent)s keyed by
 //!   instance id, so cross-instance causality is totally ordered and
-//!   seeded runs replay exactly.
+//!   seeded runs replay exactly. All request state lives in one
+//!   [`RequestArena`](crate::serving::RequestArena) owned by the
+//!   simulator; events, routers, and batchers carry dense
+//!   [`ReqId`](crate::serving::ReqId) handles, so the hot path moves
+//!   4-byte ids instead of cloning `Request` structs and steady-state
+//!   stepping allocates nothing.
 //! * [`Router`] — pluggable front-door policy: [`RoundRobin`],
 //!   [`LeastOutstandingTokens`], or [`SloAdmission`] (sheds requests
 //!   whose predicted TTFT exceeds the target).

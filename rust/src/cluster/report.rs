@@ -33,6 +33,11 @@ pub struct ClusterReport {
     pub offered: u64,
     /// Requests shed by admission control (never served).
     pub shed: u64,
+    /// DES events applied during the run (arrivals, step completions,
+    /// KV landings). With wall-clock time around the simulation this
+    /// yields events/second — the simulator's throughput figure the
+    /// perf suite tracks.
+    pub events: u64,
     /// Cluster-level aggregate over full request lifecycles: the
     /// percentiles are recomputed from the pooled per-request samples
     /// (never averaged across instances), and TTFT / TPOT / E2E are
@@ -124,6 +129,7 @@ impl ClusterReport {
             ("mode", Json::Str(self.mode.clone())),
             ("offered", Json::Num(self.offered as f64)),
             ("shed", Json::Num(self.shed as f64)),
+            ("events", Json::Num(self.events as f64)),
             ("completed", Json::Num(self.cluster.completed as f64)),
             ("tokens", Json::Num(self.cluster.tokens as f64)),
             ("span_s", Json::Num(self.cluster.span)),
@@ -172,6 +178,7 @@ mod tests {
             mode: "disaggregated 1P+1D".into(),
             offered: 10,
             shed: 2,
+            events: 42,
             cluster: empty_rep("cluster"),
             per_instance: vec![empty_rep("i0"), empty_rep("i1")],
             pools: vec![PoolStats {
@@ -204,6 +211,7 @@ mod tests {
         let j = Json::parse(&rep.to_json().to_string()).unwrap();
         assert_eq!(j.get("router").unwrap().as_str(), Some("round-robin"));
         assert_eq!(j.get("shed").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("events").unwrap().as_u64(), Some(42));
         assert_eq!(j.get("instances").unwrap().as_u64(), Some(2));
         let pools = j.get("pools").unwrap().as_arr().unwrap();
         assert_eq!(pools.len(), 1);

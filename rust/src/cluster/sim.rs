@@ -8,7 +8,11 @@
 //! instances share a single [`EventQueue`](crate::des::EventQueue) of
 //! [`InstanceEvent`]s keyed by instance id, so cross-instance causality
 //! (arrival routing, KV shipment) is ordered by one total-order clock
-//! and seeded runs replay exactly.
+//! and seeded runs replay exactly. All request state lives in one
+//! [`RequestArena`] owned by the simulator; the calendar, the router,
+//! and every batcher move dense [`ReqId`] handles only, so steady-state
+//! stepping allocates nothing — no event carries a `Request`, and
+//! retirement pushes 4-byte ids, not clones.
 //!
 //! # Disaggregated semantics
 //!
@@ -26,12 +30,10 @@
 //! prefill tokens); the prefill pool's per-instance reports measure
 //! ingestion, not token generation.
 
-use std::collections::HashMap;
-
 use crate::des::EventQueue;
 use crate::serving::{
-    Batcher, Instance, InstanceEvent, KvBudget, Request, ServingReport,
-    SimConfig, StepEngine, StepStats,
+    Batcher, Instance, InstanceEvent, KvBudget, ReqId, Request, RequestArena,
+    ServingReport, SimConfig, StepEngine, StepStats,
 };
 
 use super::report::{ClusterReport, PoolStats};
@@ -98,10 +100,18 @@ pub struct ClusterSim {
     router: Box<dyn Router>,
     spec: ClusterSpec,
     kv_bytes_per_token: f64,
-    /// Disaggregated bookkeeping: request id -> full generation length,
-    /// parked while the truncated ingestion sub-request runs at the
-    /// prefill pool.
-    decode_gen: HashMap<u64, u64>,
+    /// All request state of the run, addressed by dense [`ReqId`]s.
+    arena: RequestArena,
+    /// Disaggregated bookkeeping, indexed by arena slot: a prefill
+    /// pool's ingestion sub-request maps back to the original request
+    /// it was cloned from (which parks in the arena, full `gen_len`
+    /// intact, until the sub-request's KV ships to the decode pool).
+    /// Replaces the old `HashMap<u64, u64>` of parked generation
+    /// lengths with a direct `Vec` lookup.
+    origin: Vec<Option<ReqId>>,
+    /// Router snapshot buffer, reused across arrivals so routing
+    /// allocates nothing in steady state.
+    loads_buf: Vec<InstanceLoad>,
     /// KV bytes shipped prefill -> decode so far.
     kv_shipped_bytes: f64,
     /// Sum of shipment latencies, seconds.
@@ -181,7 +191,9 @@ impl ClusterSim {
             router,
             spec,
             kv_bytes_per_token,
-            decode_gen: HashMap::new(),
+            arena: RequestArena::new(),
+            origin: Vec::new(),
+            loads_buf: Vec::with_capacity(n),
             kv_shipped_bytes: 0.0,
             kv_transfer_total: 0.0,
             kv_transfers: 0,
@@ -201,12 +213,13 @@ impl ClusterSim {
         }
     }
 
-    /// Load snapshot of every instance, for the router.
-    fn loads(&self) -> Vec<InstanceLoad> {
-        self.instances
-            .iter()
-            .zip(&self.roles)
-            .map(|(inst, &role)| InstanceLoad {
+    /// Refresh the router's load snapshot into the reusable buffer
+    /// (`loads_buf`), so per-arrival routing allocates nothing.
+    fn refresh_loads(&mut self) {
+        self.loads_buf.clear();
+        let arena = &self.arena;
+        for (inst, &role) in self.instances.iter().zip(&self.roles) {
+            self.loads_buf.push(InstanceLoad {
                 role,
                 queued: inst.queued_len(),
                 active: inst.active_len(),
@@ -214,24 +227,31 @@ impl ClusterSim {
                 outstanding_kv_bytes: inst.outstanding_kv_bytes(),
                 outstanding_gen_tokens: inst.outstanding_gen_tokens(),
                 pending_prefill_tokens: inst.pending_prefill_tokens(),
-                pending_prefill_prompts: inst.pending_prefill_prompts(),
+                pending_prefill_prompts: inst.pending_prefill_prompts(arena),
                 ewma_step_latency: inst.ewma_step(),
                 prefill_chunk: inst.prefill_chunk(),
-            })
-            .collect()
+            });
+        }
     }
 
     /// Hand a routed request to instance `i`. On a prefill instance the
-    /// request is truncated to a pure-ingestion sub-request (`gen_len`
-    /// 1: the batcher retires it the moment its last chunk lands); the
-    /// full generation length is parked in `decode_gen` until the KV
+    /// request is cloned into a pure-ingestion sub-request (`gen_len`
+    /// 1: the batcher retires it the moment its last chunk lands) and
+    /// `origin` maps the sub-request's arena slot back to the original,
+    /// which parks untouched — full `gen_len` intact — until the KV
     /// ships to the decode pool.
-    fn assign(&mut self, i: usize, r: Request) {
+    fn assign(&mut self, i: usize, id: ReqId) {
         if self.roles[i] == Role::Prefill {
-            self.decode_gen.insert(r.id, r.gen_len);
-            self.instances[i].enqueue(Request { gen_len: 1, ..r });
+            let mut sub = self.arena[id].clone();
+            sub.gen_len = 1;
+            let sub_id = self.arena.alloc(sub);
+            if self.origin.len() <= sub_id.index() {
+                self.origin.resize(sub_id.index() + 1, None);
+            }
+            self.origin[sub_id.index()] = Some(id);
+            self.instances[i].enqueue(sub_id, &self.arena);
         } else {
-            self.instances[i].enqueue(r);
+            self.instances[i].enqueue(id, &self.arena);
         }
     }
 
@@ -258,87 +278,114 @@ impl ClusterSim {
     pub fn run(mut self, workload: Vec<Request>) -> ClusterReport {
         let mut q: EventQueue<InstanceEvent> = EventQueue::new();
         let offered = workload.len() as u64;
+        self.arena = RequestArena::with_capacity(workload.len());
         for r in workload {
-            q.schedule_at(r.arrival, InstanceEvent::Arrival(r));
+            let at = r.arrival;
+            let id = self.arena.alloc(r);
+            q.schedule_at(at, InstanceEvent::Arrival(id));
         }
 
         // Full request lifecycles (prefill + decode merged) for the
-        // cluster-level SLO report.
-        let mut finished: Vec<Request> = Vec::new();
+        // cluster-level SLO report, as arena handles.
+        let mut finished: Vec<ReqId> = Vec::new();
+        // Reused copy of each step's retirements, so we can route them
+        // (ship / finish) without holding the batcher's buffer borrow.
+        let mut retired_scratch: Vec<ReqId> = Vec::new();
         let mut shed: u64 = 0;
         let mut steps_total: u64 = 0;
+        let mut deadline_hit = false;
 
-        while let Some((now, ev)) = q.next() {
-            if now > self.spec.sim.max_time {
+        while let Some(t) = q.peek_time() {
+            if t > self.spec.sim.max_time {
+                deadline_hit = true;
                 break; // clamp at the boundary, like the single sim
             }
+            let (now, ev) = q.next().expect("peeked event is still queued");
             match ev {
-                InstanceEvent::Arrival(r) => {
-                    let loads = self.loads();
-                    match self.router.route(&r, &self.front_door, &loads) {
-                        Some(i) => self.assign(i, r),
+                InstanceEvent::Arrival(id) => {
+                    self.refresh_loads();
+                    let pick = {
+                        let r = &self.arena[id];
+                        self.router.route(r, &self.front_door, &self.loads_buf)
+                    };
+                    match pick {
+                        Some(i) => self.assign(i, id),
                         None => shed += 1,
                     }
                 }
                 InstanceEvent::StepDone(i) => {
-                    let retired = self.instances[i].step_done(now);
+                    let retired = self.instances[i].step_done(now, &mut self.arena);
+                    retired_scratch.clear();
+                    retired_scratch.extend_from_slice(retired);
                     steps_total += 1;
-                    for r in retired {
+                    for &id in &retired_scratch {
                         if self.roles[i] == Role::Prefill {
-                            self.ship(r, &mut q);
+                            self.ship(id, &mut q);
                         } else {
-                            finished.push(r);
+                            finished.push(id);
                         }
                     }
                 }
-                InstanceEvent::KvArrive(i, r) => {
+                InstanceEvent::KvArrive(i, id) => {
+                    let r = &self.arena[id];
                     let bytes =
                         (r.context_len + r.gen_len) as f64 * self.kv_bytes_per_token;
                     self.in_transit_kv[i] = (self.in_transit_kv[i] - bytes).max(0.0);
-                    self.instances[i].enqueue(r);
+                    self.instances[i].enqueue(id, &self.arena);
                 }
             }
             if steps_total >= self.spec.sim.max_steps {
                 break;
             }
             for (i, inst) in self.instances.iter_mut().enumerate() {
-                if let Some(dt) = inst.kick(now) {
+                if let Some(dt) = inst.kick(now, &mut self.arena) {
                     q.schedule_in(dt, InstanceEvent::StepDone(i));
                 }
             }
         }
 
-        let end_time = q.now().min(self.spec.sim.max_time);
-        self.into_report(finished, offered, shed, end_time)
+        let events = q.fired();
+        let end_time = if deadline_hit {
+            self.spec.sim.max_time
+        } else {
+            q.now().min(self.spec.sim.max_time)
+        };
+        self.into_report(finished, offered, shed, end_time, events)
     }
 
     /// A prompt finished ingesting on a prefill instance: ship its KV
     /// cache (`context_len * kv_bytes_per_token` bytes) to the least-
     /// loaded decode instance; the transfer latency lands *before*
-    /// decode admission. The handoff clears the ingestion sub-request's
-    /// token state, so the decode pool produces every output token
-    /// (including the first) and the lifecycle metrics see the stall.
-    fn ship(&mut self, r: Request, q: &mut EventQueue<InstanceEvent>) {
-        let full_gen = self.decode_gen.remove(&r.id).unwrap_or(r.gen_len);
-        // `admitted_at` survives the hop (the decode batcher keeps an
-        // existing stamp), so queue delay and residence stay lifecycle
-        // quantities.
-        let handoff = Request {
-            gen_len: full_gen,
-            generated: 0,
-            first_token_at: None,
-            completed_at: None,
-            ..r
+    /// decode admission. The original request (parked in the arena with
+    /// its full `gen_len` and untouched token state) inherits the
+    /// sub-request's prefill progress and admission stamp, so the
+    /// decode pool produces every output token (including the first)
+    /// and the lifecycle metrics see the stall. `admitted_at` survives
+    /// the hop (the decode batcher keeps an existing stamp), so queue
+    /// delay and residence stay lifecycle quantities.
+    fn ship(&mut self, sub: ReqId, q: &mut EventQueue<InstanceEvent>) {
+        let orig = self.origin[sub.index()]
+            .expect("prefill pool retired a request it never ingested");
+        let (ctx, prefilled, scheduled, admitted) = {
+            let s = &self.arena[sub];
+            (s.context_len, s.prefilled, s.scheduled_prefill, s.admitted_at)
         };
-        let ship_bytes = handoff.context_len as f64 * self.kv_bytes_per_token;
+        let full_gen = {
+            let r = &mut self.arena[orig];
+            r.prefilled = prefilled;
+            r.scheduled_prefill = scheduled;
+            r.admitted_at = admitted;
+            r.gen_len
+        };
+        let ship_bytes = ctx as f64 * self.kv_bytes_per_token;
         let dest = self.pick_decode();
         self.in_transit_kv[dest] +=
-            (handoff.context_len + handoff.gen_len) as f64 * self.kv_bytes_per_token;
+            (ctx + full_gen) as f64 * self.kv_bytes_per_token;
         let dt = ship_bytes / self.spec.kv_link_bw;
         self.kv_shipped_bytes += ship_bytes;
         self.kv_transfer_total += dt;
         self.kv_transfers += 1;
-        q.schedule_in(dt, InstanceEvent::KvArrive(dest, handoff));
+        q.schedule_in(dt, InstanceEvent::KvArrive(dest, orig));
     }
 
     /// Assemble the cluster report: per-instance reports, the merged
@@ -346,10 +393,11 @@ impl ClusterSim {
     /// per-pool utilization.
     fn into_report(
         self,
-        finished: Vec<Request>,
+        finished: Vec<ReqId>,
         offered: u64,
         shed: u64,
         end_time: f64,
+        events: u64,
     ) -> ClusterReport {
         let router_name = self.router.name();
         let mode = self.mode_label();
@@ -363,11 +411,11 @@ impl ClusterSim {
             agg.prefill_tokens += st.prefill_tokens;
             let name =
                 format!("i{i}:{}:{}", self.roles[i].tag(), inst.engine_name());
-            per_instance.push(inst.report(name, end_time));
+            per_instance.push(inst.report(name, end_time, &self.arena));
         }
-        let cluster = ServingReport::from_requests(
+        let cluster = ServingReport::from_refs(
             format!("{router_name} / {mode}"),
-            &finished,
+            finished.iter().map(|&id| &self.arena[id]),
             &agg,
         );
         let pools = self.pool_stats(end_time);
@@ -377,6 +425,7 @@ impl ClusterSim {
             mode,
             offered,
             shed,
+            events,
             cluster,
             per_instance,
             pools,
@@ -417,7 +466,7 @@ impl ClusterSim {
                     tokens += inst
                         .finished()
                         .iter()
-                        .map(|r| r.generated)
+                        .map(|&id| self.arena[id].generated)
                         .sum::<u64>();
                 }
             }

@@ -379,11 +379,21 @@ fn cmd_serve(args: &Args) -> i32 {
             eprintln!("error: cluster serving supports the analytic backend only");
             return 2;
         }
+        let t0 = std::time::Instant::now();
         return match coordinator::serve_cluster(&job) {
             Ok(report) => {
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
                 println!("{}", report.summary());
                 print!("{}", report.pool_summary());
                 println!("{}", report.slo_summary());
+                println!(
+                    "des: {} events in {:.3}s wall -> {:.0} events/s, \
+                     {:.1} sim-s/wall-s",
+                    report.events,
+                    wall,
+                    report.events as f64 / wall,
+                    report.cluster.span / wall,
+                );
                 0
             }
             Err(e) => {

@@ -1,0 +1,127 @@
+//! Request arena: every [`Request`] of a run owned in one slab, handled
+//! by dense [`ReqId`] indices.
+//!
+//! The simulators' hot path used to move `Request` structs by value —
+//! through the event calendar, the batcher's queues, and per-instance
+//! `finished` lists — cloning a ~100-byte struct at every hop. The
+//! arena inverts that: a simulator allocates each request into a
+//! [`RequestArena`] once, and a 4-byte copyable [`ReqId`] flows through
+//! [`Batcher`](super::Batcher) / [`Instance`](super::Instance) /
+//! [`crate::cluster::ClusterSim`] instead. Lookups are direct `Vec`
+//! indexing (no hashing), retirement moves one `u32`, and reports
+//! resolve ids back to request state at the very end of the run.
+//!
+//! Slots are never freed individually: a run allocates monotonically
+//! and drops the whole arena at once, which is exactly the lifetime of
+//! a simulation. That makes ids stable for the run — safe to park in
+//! events, side tables, and finished lists.
+
+use std::ops::{Index, IndexMut};
+
+use super::request::Request;
+
+/// Dense handle to a [`Request`] in a [`RequestArena`]. Copyable and
+/// 4 bytes wide, so events and batcher queues move ids, not structs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReqId(u32);
+
+impl ReqId {
+    /// The arena slot this id addresses (for parallel side tables).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Slab of [`Request`]s with monotone allocation; see the module docs.
+#[derive(Debug, Default)]
+pub struct RequestArena {
+    reqs: Vec<Request>,
+}
+
+impl RequestArena {
+    /// Empty arena.
+    pub fn new() -> RequestArena {
+        RequestArena { reqs: Vec::new() }
+    }
+
+    /// Empty arena with room for `n` requests before reallocating.
+    pub fn with_capacity(n: usize) -> RequestArena {
+        RequestArena { reqs: Vec::with_capacity(n) }
+    }
+
+    /// Move a request into the arena, returning its id.
+    pub fn alloc(&mut self, r: Request) -> ReqId {
+        let idx = self.reqs.len();
+        assert!(idx <= u32::MAX as usize, "request arena overflow");
+        self.reqs.push(r);
+        ReqId(idx as u32)
+    }
+
+    /// Number of requests allocated so far.
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// Whether nothing has been allocated.
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+}
+
+impl Index<ReqId> for RequestArena {
+    type Output = Request;
+
+    fn index(&self, id: ReqId) -> &Request {
+        &self.reqs[id.index()]
+    }
+}
+
+impl IndexMut<ReqId> for RequestArena {
+    fn index_mut(&mut self, id: ReqId) -> &mut Request {
+        &mut self.reqs[id.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::mk_req;
+    use super::*;
+
+    #[test]
+    fn alloc_returns_dense_ids_and_indexing_round_trips() {
+        let mut arena = RequestArena::new();
+        assert!(arena.is_empty());
+        let a = arena.alloc(mk_req(10, 0.0, 8, 2));
+        let b = arena.alloc(mk_req(11, 0.5, 16, 4));
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        assert_eq!(arena.len(), 2);
+        assert_eq!(arena[a].id, 10);
+        assert_eq!(arena[b].context_len, 16);
+    }
+
+    #[test]
+    fn ids_stay_valid_across_growth_and_mutation() {
+        let mut arena = RequestArena::with_capacity(1);
+        let first = arena.alloc(mk_req(0, 0.0, 4, 1));
+        // Grow well past the initial capacity; the dense id (an index,
+        // not a pointer) must keep addressing the same request.
+        for i in 1..100 {
+            arena.alloc(mk_req(i, 0.0, 4, 1));
+        }
+        arena[first].generated = 7;
+        assert_eq!(arena[first].id, 0);
+        assert_eq!(arena[first].generated, 7);
+        assert_eq!(arena.len(), 100);
+    }
+
+    #[test]
+    fn ids_are_copy_and_comparable() {
+        let mut arena = RequestArena::new();
+        let a = arena.alloc(mk_req(0, 0.0, 4, 1));
+        let also_a = a; // Copy
+        assert_eq!(a, also_a);
+        let b = arena.alloc(mk_req(1, 0.0, 4, 1));
+        assert_ne!(a, b);
+    }
+}

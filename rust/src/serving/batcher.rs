@@ -15,9 +15,17 @@
 //! mode) prompts are assumed prefilled elsewhere — the paper's
 //! disaggregated decode-only focus — and requests enter decode
 //! directly.
+//!
+//! Request state lives in the caller's [`RequestArena`]; the batcher's
+//! queue, active set, and retirement buffer hold dense [`ReqId`]s only,
+//! so admitting, planning, and completing steps never move or clone a
+//! `Request`. The retirement buffer is reused across steps
+//! ([`Batcher::step_complete`] returns a borrowed slice), keeping
+//! steady-state stepping allocation-free.
 
 use std::collections::VecDeque;
 
+use super::arena::{ReqId, RequestArena};
 use super::engine::StepBatch;
 use super::request::Request;
 
@@ -78,18 +86,21 @@ impl KvBudget {
     }
 }
 
-/// FIFO continuous batcher.
+/// FIFO continuous batcher over arena-resident requests.
 pub struct Batcher {
     /// Maximum concurrent sequences (compiled bucket size or policy cap).
     pub max_batch: usize,
-    queue: VecDeque<Request>,
-    active: Vec<Request>,
+    queue: VecDeque<ReqId>,
+    active: Vec<ReqId>,
     kv: KvBudget,
     /// Max prefill tokens ingested per engine step (0 = prefill served
     /// elsewhere; requests enter decode directly).
     prefill_chunk: u64,
     /// Total prompt tokens this batcher has prefilled.
     prefill_processed: u64,
+    /// Retirement buffer, reused across steps so completing a step
+    /// allocates nothing in steady state.
+    retired: Vec<ReqId>,
 }
 
 impl Batcher {
@@ -104,6 +115,7 @@ impl Batcher {
             kv,
             prefill_chunk: 0,
             prefill_processed: 0,
+            retired: Vec::new(),
         }
     }
 
@@ -118,9 +130,9 @@ impl Batcher {
         b
     }
 
-    /// Enqueue an arriving request.
-    pub fn enqueue(&mut self, r: Request) {
-        self.queue.push_back(r);
+    /// Enqueue an arriving request by id.
+    pub fn enqueue(&mut self, id: ReqId) {
+        self.queue.push_back(id);
     }
 
     /// Admit as many queued requests as fit. The simulator calls this
@@ -131,14 +143,15 @@ impl Batcher {
     /// an earlier admission already stamped it (a disaggregated request
     /// re-admitted at the decode pool keeps its first admission, so
     /// queue-delay and residence metrics span the whole lifecycle).
-    pub fn admit(&mut self, now: f64) -> usize {
+    pub fn admit(&mut self, now: f64, arena: &mut RequestArena) -> usize {
         let mut n = 0;
         while self.active.len() < self.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            if !self.kv.reserve(front) {
+            let Some(&front) = self.queue.front() else { break };
+            if !self.kv.reserve(&arena[front]) {
                 break; // FIFO head-of-line: preserve arrival order
             }
-            let mut r = self.queue.pop_front().unwrap();
+            self.queue.pop_front();
+            let r = &mut arena[front];
             if r.admitted_at.is_none() {
                 r.admitted_at = Some(now);
             }
@@ -147,7 +160,7 @@ impl Batcher {
                 // KV cache when the request reaches us.
                 r.prefilled = r.context_len;
             }
-            self.active.push(r);
+            self.active.push(front);
             n += 1;
         }
         n
@@ -161,10 +174,11 @@ impl Batcher {
     /// `(prefill_tokens, prefill_past)` description of the chunk exact
     /// (mixing two prompts' chunks would conflate their attention
     /// depths).
-    pub fn plan_step(&mut self) -> StepBatch {
+    pub fn plan_step(&mut self, arena: &mut RequestArena) -> StepBatch {
         let mut step = StepBatch::default();
         let mut budget = self.prefill_chunk;
-        for r in &mut self.active {
+        for &id in &self.active {
+            let r = &mut arena[id];
             if r.in_prefill() {
                 let take = r.prefill_remaining().min(budget);
                 r.scheduled_prefill = take;
@@ -186,43 +200,53 @@ impl Batcher {
     /// Complete the step planned by [`Batcher::plan_step`]: prefilling
     /// lanes advance by their scheduled chunk (the final chunk emits the
     /// first output token); decode lanes each gain one token; finished
-    /// requests are retired. Returns the retired requests (stamped with
-    /// `completed_at`).
-    pub fn step_complete(&mut self, now: f64) -> Vec<Request> {
-        let mut done = Vec::new();
+    /// requests are retired. Returns the retired ids (their requests
+    /// are stamped with `completed_at` in the arena); the slice borrows
+    /// the batcher's reusable retirement buffer and is valid until the
+    /// next `step_complete` call.
+    pub fn step_complete(&mut self, now: f64, arena: &mut RequestArena) -> &[ReqId] {
+        self.retired.clear();
         let mut i = 0;
         while i < self.active.len() {
-            let r = &mut self.active[i];
-            if r.scheduled_prefill > 0 {
-                self.prefill_processed += r.scheduled_prefill;
-                r.prefilled += r.scheduled_prefill;
-                r.scheduled_prefill = 0;
-                if !r.in_prefill() {
-                    // The last prefill chunk's forward pass produces the
-                    // first generated token.
+            let id = self.active[i];
+            let done = {
+                let r = &mut arena[id];
+                if r.scheduled_prefill > 0 {
+                    self.prefill_processed += r.scheduled_prefill;
+                    r.prefilled += r.scheduled_prefill;
+                    r.scheduled_prefill = 0;
+                    if !r.in_prefill() {
+                        // The last prefill chunk's forward pass produces
+                        // the first generated token.
+                        r.generated += 1;
+                        r.first_token_at = Some(now);
+                    }
+                } else if !r.in_prefill() {
                     r.generated += 1;
-                    r.first_token_at = Some(now);
+                    if r.first_token_at.is_none() {
+                        r.first_token_at = Some(now);
+                    }
                 }
-            } else if !r.in_prefill() {
-                r.generated += 1;
-                if r.first_token_at.is_none() {
-                    r.first_token_at = Some(now);
+                // else: prefilling but received no budget this step — waits.
+                if r.done() {
+                    r.completed_at = Some(now);
+                    true
+                } else {
+                    false
                 }
-            }
-            // else: prefilling but received no budget this step — waits.
-            if self.active[i].done() {
+            };
+            if done {
                 // `remove`, not `swap_remove`: the active list's order is
                 // the admission FIFO that plan_step's prefill scheduling
-                // relies on.
-                let mut r = self.active.remove(i);
-                r.completed_at = Some(now);
-                self.kv.release(&r);
-                done.push(r);
+                // relies on (it's a memmove of 4-byte ids, not requests).
+                self.active.remove(i);
+                self.kv.release(&arena[id]);
+                self.retired.push(id);
             } else {
                 i += 1;
             }
         }
-        done
+        &self.retired
     }
 
     /// Active batch size (decode + prefilling lanes).
@@ -239,21 +263,22 @@ impl Batcher {
     /// still queued plus active lanes in prefill. Since the planner
     /// issues at most one chunk to one prompt per step, this is a lower
     /// bound on the steps needed to drain the prompt backlog.
-    pub fn prefill_backlog(&self) -> usize {
-        self.queue.len() + self.active.iter().filter(|r| r.in_prefill()).count()
+    pub fn prefill_backlog(&self, arena: &RequestArena) -> usize {
+        self.queue.len()
+            + self.active.iter().filter(|&&id| arena[id].in_prefill()).count()
     }
 
     /// Longest active sequence length (drives attention cost).
-    pub fn max_seq_len(&self) -> u64 {
-        self.active.iter().map(|r| r.seq_len()).max().unwrap_or(0)
+    pub fn max_seq_len(&self, arena: &RequestArena) -> u64 {
+        self.active.iter().map(|&id| arena[id].seq_len()).max().unwrap_or(0)
     }
 
     /// Mean active sequence length.
-    pub fn mean_seq_len(&self) -> f64 {
+    pub fn mean_seq_len(&self, arena: &RequestArena) -> f64 {
         if self.active.is_empty() {
             0.0
         } else {
-            self.active.iter().map(|r| r.seq_len()).sum::<u64>() as f64
+            self.active.iter().map(|&id| arena[id].seq_len()).sum::<u64>() as f64
                 / self.active.len() as f64
         }
     }
@@ -290,17 +315,19 @@ mod tests {
     use super::super::testutil::{budget, mk_req};
     use super::*;
 
-    fn req(id: u64, ctx: u64, gen: u64) -> Request {
-        mk_req(id, 0.0, ctx, gen)
+    fn req(arena: &mut RequestArena, id: u64, ctx: u64, gen: u64) -> ReqId {
+        arena.alloc(mk_req(id, 0.0, ctx, gen))
     }
 
     #[test]
     fn admits_up_to_batch_cap() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::new(2, budget(1_000_000));
         for i in 0..5 {
-            b.enqueue(req(i, 10, 5));
+            let id = req(&mut a, i, 10, 5);
+            b.enqueue(id);
         }
-        assert_eq!(b.admit(0.0), 2);
+        assert_eq!(b.admit(0.0, &mut a), 2);
         assert_eq!(b.active_len(), 2);
         assert_eq!(b.queued_len(), 3);
     }
@@ -308,41 +335,49 @@ mod tests {
     #[test]
     fn kv_budget_gates_admission() {
         // Budget holds one request of (10 ctx + 5 gen) = 15 tokens.
+        let mut a = RequestArena::new();
         let mut b = Batcher::new(8, budget(20));
-        b.enqueue(req(0, 10, 5));
-        b.enqueue(req(1, 10, 5));
-        assert_eq!(b.admit(0.0), 1);
+        let r0 = req(&mut a, 0, 10, 5);
+        let r1 = req(&mut a, 1, 10, 5);
+        b.enqueue(r0);
+        b.enqueue(r1);
+        assert_eq!(b.admit(0.0, &mut a), 1);
         // Retire the first; second then fits.
         for _ in 0..5 {
-            b.step_complete(1.0);
+            b.step_complete(1.0, &mut a);
         }
-        assert_eq!(b.admit(1.0), 1);
+        assert_eq!(b.admit(1.0, &mut a), 1);
     }
 
     #[test]
     fn steps_retire_completed_requests() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(1000));
-        b.enqueue(req(0, 10, 2));
-        b.enqueue(req(1, 10, 3));
-        b.admit(0.0);
-        assert!(b.step_complete(0.1).is_empty());
-        let done = b.step_complete(0.2);
+        let r0 = req(&mut a, 0, 10, 2);
+        let r1 = req(&mut a, 1, 10, 3);
+        b.enqueue(r0);
+        b.enqueue(r1);
+        b.admit(0.0, &mut a);
+        assert!(b.step_complete(0.1, &mut a).is_empty());
+        let done = b.step_complete(0.2, &mut a);
         assert_eq!(done.len(), 1);
-        assert_eq!(done[0].id, 0);
-        let done = b.step_complete(0.3);
+        assert_eq!(a[done[0]].id, 0);
+        let done = b.step_complete(0.3, &mut a);
         assert_eq!(done.len(), 1);
-        assert_eq!(done[0].id, 1);
+        assert_eq!(a[done[0]].id, 1);
         assert!(b.idle());
     }
 
     #[test]
     fn kv_is_released_on_completion() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(15));
-        b.enqueue(req(0, 10, 2));
-        b.admit(0.0);
+        let r0 = req(&mut a, 0, 10, 2);
+        b.enqueue(r0);
+        b.admit(0.0, &mut a);
         assert!(b.kv_utilization() > 0.7);
-        b.step_complete(0.1);
-        b.step_complete(0.2);
+        b.step_complete(0.1, &mut a);
+        b.step_complete(0.2, &mut a);
         assert_eq!(b.kv_utilization(), 0.0);
     }
 
@@ -354,41 +389,45 @@ mod tests {
 
     #[test]
     fn decode_only_mode_skips_prefill() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(1000));
-        b.enqueue(req(0, 100, 2));
-        b.admit(0.0);
-        let plan = b.plan_step();
+        let r0 = req(&mut a, 0, 100, 2);
+        b.enqueue(r0);
+        b.admit(0.0, &mut a);
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.decode_batch, 1);
         assert_eq!(plan.prefill_tokens, 0);
-        let done = b.step_complete(0.1);
+        let done = b.step_complete(0.1, &mut a);
         assert!(done.is_empty());
-        assert_eq!(b.step_complete(0.2).len(), 1);
+        assert_eq!(b.step_complete(0.2, &mut a).len(), 1);
         assert_eq!(b.prefill_tokens_processed(), 0);
     }
 
     #[test]
     fn prefill_chunks_run_before_decode() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(4, budget(1000), 30);
-        b.enqueue(req(0, 100, 2));
-        b.admit(0.0);
+        let r0 = req(&mut a, 0, 100, 2);
+        b.enqueue(r0);
+        b.admit(0.0, &mut a);
 
         // 100-token prompt at 30 tokens/step: 3 full chunks + 10.
         for (i, expect) in [30u64, 30, 30, 10].iter().enumerate() {
-            let plan = b.plan_step();
+            let plan = b.plan_step(&mut a);
             assert_eq!(plan.decode_batch, 0, "step {i}");
             assert_eq!(plan.prefill_tokens, *expect, "step {i}");
             assert_eq!(plan.prefill_past, 30 * i as u64, "step {i}");
             let t = 0.1 * (i as f64 + 1.0);
-            assert!(b.step_complete(t).is_empty());
+            assert!(b.step_complete(t, &mut a).is_empty());
         }
 
         // The final chunk emitted the first token; one decode step left.
-        let plan = b.plan_step();
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.decode_batch, 1);
         assert_eq!(plan.max_context, 101);
-        let done = b.step_complete(0.5);
+        let done = b.step_complete(0.5, &mut a);
         assert_eq!(done.len(), 1);
-        let r = &done[0];
+        let r = &a[done[0]];
         assert_eq!(r.prefilled, 100);
         assert_eq!(r.generated, 2);
         assert!((r.first_token_at.unwrap() - 0.4).abs() < 1e-12);
@@ -398,26 +437,29 @@ mod tests {
 
     #[test]
     fn one_prefill_chunk_per_step_fifo() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(4, budget(1000), 8);
-        b.enqueue(req(0, 6, 1));
-        b.enqueue(req(1, 6, 1));
-        b.admit(0.0);
+        let r0 = req(&mut a, 0, 6, 1);
+        let r1 = req(&mut a, 1, 6, 1);
+        b.enqueue(r0);
+        b.enqueue(r1);
+        b.admit(0.0, &mut a);
         // First step: only the oldest prompt gets a chunk, even though
         // 2 tokens of budget are nominally left over.
-        let plan = b.plan_step();
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.prefill_seqs, 1);
         assert_eq!(plan.prefill_tokens, 6);
         assert_eq!(plan.prefill_past, 0);
-        b.step_complete(0.1);
+        b.step_complete(0.1, &mut a);
         // Request 0 is decode-done (gen 1 emitted by its final chunk,
         // gen_len 1 -> retired); request 1's whole prompt goes next.
-        let plan = b.plan_step();
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.decode_batch, 0); // r0 retired at 0.1 (gen_len 1)
         assert_eq!(plan.prefill_seqs, 1);
         assert_eq!(plan.prefill_tokens, 6);
-        let done = b.step_complete(0.2);
+        let done = b.step_complete(0.2, &mut a);
         assert_eq!(done.len(), 1);
-        assert_eq!(done[0].id, 1);
+        assert_eq!(a[done[0]].id, 1);
     }
 
     #[test]
@@ -425,33 +467,37 @@ mod tests {
         // r0 (short) retires first; the prefill budget must then go to
         // r1, not to a later-admitted request (a swap_remove-based
         // retirement used to reorder the active list).
+        let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(4, budget(1000), 10);
-        b.enqueue(req(0, 5, 1));
-        b.enqueue(req(1, 20, 1));
-        b.enqueue(req(2, 20, 1));
-        b.admit(0.0);
-        b.plan_step(); // r0's 5-token prompt
-        b.step_complete(0.1); // r0 retires (gen_len 1)
+        for (id, ctx) in [(0, 5), (1, 20), (2, 20)] {
+            let rid = req(&mut a, id, ctx, 1);
+            b.enqueue(rid);
+        }
+        b.admit(0.0, &mut a);
+        b.plan_step(&mut a); // r0's 5-token prompt
+        b.step_complete(0.1, &mut a); // r0 retires (gen_len 1)
         // The next two chunks must go to r1 (admitted before r2).
-        let plan = b.plan_step();
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.prefill_tokens, 10);
-        assert!(b.step_complete(0.2).is_empty());
-        let plan = b.plan_step();
+        assert!(b.step_complete(0.2, &mut a).is_empty());
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.prefill_past, 10);
-        let done = b.step_complete(0.3);
+        let done = b.step_complete(0.3, &mut a);
         assert_eq!(done.len(), 1);
-        assert_eq!(done[0].id, 1, "r1 must finish before r2");
+        assert_eq!(a[done[0]].id, 1, "r1 must finish before r2");
     }
 
     #[test]
     fn zero_length_prompts_enter_decode_directly() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(4, budget(1000), 16);
-        b.enqueue(req(0, 0, 1));
-        b.admit(0.0);
-        let plan = b.plan_step();
+        let r0 = req(&mut a, 0, 0, 1);
+        b.enqueue(r0);
+        b.admit(0.0, &mut a);
+        let plan = b.plan_step(&mut a);
         assert_eq!(plan.decode_batch, 1);
         assert_eq!(plan.prefill_tokens, 0);
-        assert_eq!(b.step_complete(0.1).len(), 1);
+        assert_eq!(b.step_complete(0.1, &mut a).len(), 1);
     }
 
     #[test]
@@ -459,17 +505,20 @@ mod tests {
         // A disaggregated request re-admitted at the decode pool must
         // keep its prefill-side admission time: queue delay is a
         // lifecycle quantity, not a per-pool one.
+        let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(1000));
-        let mut r = req(0, 10, 2);
-        r.admitted_at = Some(0.25);
-        b.enqueue(r);
-        b.enqueue(req(1, 10, 2));
-        b.admit(1.0);
-        for done in [b.step_complete(1.1), b.step_complete(1.2)] {
-            for d in done {
-                match d.id {
-                    0 => assert_eq!(d.admitted_at, Some(0.25)),
-                    _ => assert_eq!(d.admitted_at, Some(1.0)),
+        let r0 = req(&mut a, 0, 10, 2);
+        a[r0].admitted_at = Some(0.25);
+        b.enqueue(r0);
+        let r1 = req(&mut a, 1, 10, 2);
+        b.enqueue(r1);
+        b.admit(1.0, &mut a);
+        for t in [1.1, 1.2] {
+            let done = b.step_complete(t, &mut a);
+            for &d in done {
+                match a[d].id {
+                    0 => assert_eq!(a[d].admitted_at, Some(0.25)),
+                    _ => assert_eq!(a[d].admitted_at, Some(1.0)),
                 }
             }
         }
@@ -477,18 +526,34 @@ mod tests {
 
     #[test]
     fn prefill_backlog_counts_queued_and_prefilling() {
+        let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(2, budget(1000), 8);
-        b.enqueue(req(0, 16, 1));
-        b.enqueue(req(1, 16, 1));
-        b.enqueue(req(2, 16, 1));
-        assert_eq!(b.prefill_backlog(), 3); // all queued
-        b.admit(0.0);
-        assert_eq!(b.prefill_backlog(), 3); // 2 prefilling + 1 queued
-        b.plan_step();
-        b.step_complete(0.1); // r0: 8 of 16 tokens in
-        assert_eq!(b.prefill_backlog(), 3);
-        b.plan_step();
-        b.step_complete(0.2); // r0 fully prefilled (emits first token)
-        assert_eq!(b.prefill_backlog(), 2);
+        for id in 0..3 {
+            let rid = req(&mut a, id, 16, 1);
+            b.enqueue(rid);
+        }
+        assert_eq!(b.prefill_backlog(&a), 3); // all queued
+        b.admit(0.0, &mut a);
+        assert_eq!(b.prefill_backlog(&a), 3); // 2 prefilling + 1 queued
+        b.plan_step(&mut a);
+        b.step_complete(0.1, &mut a); // r0: 8 of 16 tokens in
+        assert_eq!(b.prefill_backlog(&a), 3);
+        b.plan_step(&mut a);
+        b.step_complete(0.2, &mut a); // r0 fully prefilled (emits first token)
+        assert_eq!(b.prefill_backlog(&a), 2);
+    }
+
+    #[test]
+    fn retirement_buffer_is_reused_not_grown() {
+        // Consecutive step_complete calls return slices from the same
+        // reusable buffer; a later empty step yields an empty slice, not
+        // stale retirees.
+        let mut a = RequestArena::new();
+        let mut b = Batcher::new(4, budget(1000));
+        let r0 = req(&mut a, 0, 10, 1);
+        b.enqueue(r0);
+        b.admit(0.0, &mut a);
+        assert_eq!(b.step_complete(0.1, &mut a).len(), 1);
+        assert!(b.step_complete(0.2, &mut a).is_empty());
     }
 }

@@ -3,14 +3,18 @@
 //! the cluster simulator ([`crate::cluster::ClusterSim`]) drive from a
 //! shared [`EventQueue`](crate::des::EventQueue).
 //!
-//! The simulator owns the event calendar; the instance owns everything
-//! inside one model replica — admission queue, KV budget, chunk
-//! planner, the engine that prices steps, and the occupancy statistics.
-//! The split is the contract that makes multi-instance serving possible
-//! at all: N instances multiplex on *one* clock by keying their
+//! The simulator owns the event calendar and the [`RequestArena`]; the
+//! instance owns everything inside one model replica — admission queue,
+//! KV budget, chunk planner, the engine that prices steps, and the
+//! occupancy statistics — and touches request state only through dense
+//! [`ReqId`] handles the simulator passes in with the arena. The split
+//! is the contract that makes multi-instance serving possible at all:
+//! N instances multiplex on *one* clock by keying their
 //! [`InstanceEvent::StepDone`] events with an instance id, so
 //! cross-instance causality (routing, KV shipment) is totally ordered
-//! and seeded runs replay exactly.
+//! and seeded runs replay exactly. Events carry ids, never `Request`
+//! structs, so the calendar and the per-instance finished lists move
+//! 4-byte copies.
 //!
 //! Step semantics are exactly the single-simulator fidelity rules:
 //! admission only at step boundaries ([`Instance::kick`] admits, plans,
@@ -20,22 +24,25 @@
 //! `max_time` never counts a step that did not finish — busy time can
 //! never exceed the simulated span.
 
+use super::arena::{ReqId, RequestArena};
 use super::batcher::Batcher;
 use super::engine::StepEngine;
 use super::metrics::{ServingReport, StepStats};
-use super::request::Request;
 
 /// Events driving instances on a shared event calendar. The single-
 /// instance simulator uses instance id 0 throughout; the cluster keys
 /// every completion and KV shipment by the instance it lands on.
+/// Carries only dense ids, so the enum is `Copy` and the calendar never
+/// moves request state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InstanceEvent {
     /// A request arriving at the front door (router or lone instance).
-    Arrival(Request),
+    Arrival(ReqId),
     /// The in-flight step of instance `id` completed.
     StepDone(usize),
     /// A prefilled request's KV cache finished its interconnect
     /// transfer and lands at decode instance `id` (disaggregated mode).
-    KvArrive(usize, Request),
+    KvArrive(usize, ReqId),
 }
 
 /// One model instance: a [`Batcher`] + [`StepEngine`] pair plus its
@@ -49,10 +56,10 @@ pub struct Instance<'e> {
     /// The in-flight step's `(latency, lanes)`, if any.
     in_flight: Option<(f64, u64)>,
     stats: StepStats,
-    /// Requests retired on this instance (a disaggregated request
-    /// retires once on its prefill instance and once on its decode
-    /// instance; each keeps its own copy).
-    finished: Vec<Request>,
+    /// Ids of requests retired on this instance (a disaggregated
+    /// request's ingestion sub-request retires on its prefill instance,
+    /// the full request on its decode instance).
+    finished: Vec<ReqId>,
     /// Full KV footprint of everything routed here and not yet retired.
     outstanding_kv_bytes: f64,
     /// Generation-token backlog routed here and not yet retired.
@@ -81,26 +88,27 @@ impl<'e> Instance<'e> {
 
     /// Hand a routed request to this instance's admission queue,
     /// charging the routed-load accounting the router snapshots read.
-    pub fn enqueue(&mut self, r: Request) {
+    pub fn enqueue(&mut self, id: ReqId, arena: &RequestArena) {
+        let r = &arena[id];
         let bpt = self.batcher.kv_bytes_per_token();
         self.outstanding_kv_bytes += (r.context_len + r.gen_len) as f64 * bpt;
         self.outstanding_gen_tokens += r.gen_len;
         if self.batcher.prefill_chunk() > 0 {
             self.routed_prefill_tokens += r.context_len;
         }
-        self.batcher.enqueue(r);
+        self.batcher.enqueue(id);
     }
 
     /// Step boundary (or idle): admit queued requests, plan the next
     /// step, and price it. Returns the step latency to schedule a
     /// [`InstanceEvent::StepDone`] at, or `None` when a step is already
     /// in flight or there is no work.
-    pub fn kick(&mut self, now: f64) -> Option<f64> {
+    pub fn kick(&mut self, now: f64, arena: &mut RequestArena) -> Option<f64> {
         if self.in_flight.is_some() {
             return None;
         }
-        self.batcher.admit(now);
-        let plan = self.batcher.plan_step();
+        self.batcher.admit(now, arena);
+        let plan = self.batcher.plan_step(arena);
         if plan.is_empty() {
             return None;
         }
@@ -116,23 +124,26 @@ impl<'e> Instance<'e> {
 
     /// Complete the in-flight step: charge its occupancy integral,
     /// apply the planned token movement, and retire finished requests.
-    /// The retired requests are returned (for cluster-level handling —
-    /// KV shipment, lifecycle merging) and also recorded in this
-    /// instance's own `finished` list for its per-instance report.
-    pub fn step_done(&mut self, now: f64) -> Vec<Request> {
+    /// The retired ids are returned (for cluster-level handling — KV
+    /// shipment, lifecycle merging) and also recorded in this
+    /// instance's own `finished` list for its per-instance report. The
+    /// returned slice borrows the batcher's reusable retirement buffer
+    /// and is valid until the next step completes.
+    pub fn step_done(&mut self, now: f64, arena: &mut RequestArena) -> &[ReqId] {
         if let Some((dt, lanes)) = self.in_flight.take() {
             self.stats.busy_time += dt;
             self.stats.batch_time_integral += lanes as f64 * dt;
         }
         self.stats.steps += 1;
-        let retired = self.batcher.step_complete(now);
         let bpt = self.batcher.kv_bytes_per_token();
-        for r in &retired {
+        let retired = self.batcher.step_complete(now, arena);
+        for &id in retired {
+            let r = &arena[id];
             let bytes = (r.context_len + r.gen_len) as f64 * bpt;
             self.outstanding_kv_bytes = (self.outstanding_kv_bytes - bytes).max(0.0);
             self.outstanding_gen_tokens =
                 self.outstanding_gen_tokens.saturating_sub(r.gen_len);
-            self.finished.push(r.clone());
+            self.finished.push(id);
         }
         retired
     }
@@ -184,8 +195,8 @@ impl<'e> Instance<'e> {
     }
 
     /// Prompts routed here that are not yet fully ingested.
-    pub fn pending_prefill_prompts(&self) -> u64 {
-        self.batcher.prefill_backlog() as u64
+    pub fn pending_prefill_prompts(&self, arena: &RequestArena) -> u64 {
+        self.batcher.prefill_backlog(arena) as u64
     }
 
     /// Exponentially-weighted mean of recent step latencies, seconds
@@ -199,8 +210,8 @@ impl<'e> Instance<'e> {
         self.engine.name()
     }
 
-    /// Requests retired on this instance so far.
-    pub fn finished(&self) -> &[Request] {
+    /// Ids of requests retired on this instance so far.
+    pub fn finished(&self) -> &[ReqId] {
         &self.finished
     }
 
@@ -214,8 +225,17 @@ impl<'e> Instance<'e> {
     }
 
     /// Per-instance serving report over the requests retired here.
-    pub fn report(&self, name: String, end_time: f64) -> ServingReport {
-        ServingReport::from_requests(name, &self.finished, &self.stats(end_time))
+    pub fn report(
+        &self,
+        name: String,
+        end_time: f64,
+        arena: &RequestArena,
+    ) -> ServingReport {
+        ServingReport::from_refs(
+            name,
+            self.finished.iter().map(|&id| &arena[id]),
+            &self.stats(end_time),
+        )
     }
 }
 
@@ -226,22 +246,24 @@ mod tests {
 
     #[test]
     fn kick_admits_prices_and_step_done_retires() {
+        let mut a = RequestArena::new();
         let batcher = Batcher::new(4, open_budget());
         let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.1)));
-        assert_eq!(inst.kick(0.0), None, "no work yet");
-        inst.enqueue(mk_req(0, 0.0, 8, 2));
+        assert_eq!(inst.kick(0.0, &mut a), None, "no work yet");
+        let r0 = a.alloc(mk_req(0, 0.0, 8, 2));
+        inst.enqueue(r0, &a);
         assert_eq!(inst.outstanding_gen_tokens(), 2);
-        assert_eq!(inst.kick(0.0), Some(0.1));
+        assert_eq!(inst.kick(0.0, &mut a), Some(0.1));
         assert!(inst.busy());
-        assert_eq!(inst.kick(0.0), None, "step already in flight");
-        assert!(inst.step_done(0.1).is_empty());
-        assert_eq!(inst.kick(0.1), Some(0.1));
-        let done = inst.step_done(0.2);
+        assert_eq!(inst.kick(0.0, &mut a), None, "step already in flight");
+        assert!(inst.step_done(0.1, &mut a).is_empty());
+        assert_eq!(inst.kick(0.1, &mut a), Some(0.1));
+        let done = inst.step_done(0.2, &mut a);
         assert_eq!(done.len(), 1);
         assert_eq!(inst.steps(), 2);
         assert_eq!(inst.outstanding_gen_tokens(), 0);
         assert_eq!(inst.finished().len(), 1);
-        let rep = inst.report("t".into(), 0.2);
+        let rep = inst.report("t".into(), 0.2, &a);
         assert_eq!(rep.completed, 1);
         assert_eq!(rep.tokens, 2);
         assert!((rep.mean_batch - 1.0).abs() < 1e-12);
@@ -249,14 +271,16 @@ mod tests {
 
     #[test]
     fn occupancy_is_charged_at_completion_not_scheduling() {
+        let mut a = RequestArena::new();
         let batcher = Batcher::new(4, open_budget());
         let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.1)));
-        inst.enqueue(mk_req(0, 0.0, 8, 1));
-        inst.kick(0.0);
+        let r0 = a.alloc(mk_req(0, 0.0, 8, 1));
+        inst.enqueue(r0, &a);
+        inst.kick(0.0, &mut a);
         // In flight but not completed: nothing charged yet.
         assert_eq!(inst.stats(0.05).busy_time, 0.0);
         assert_eq!(inst.stats(0.05).steps, 0);
-        inst.step_done(0.1);
+        inst.step_done(0.1, &mut a);
         let st = inst.stats(0.1);
         assert!((st.busy_time - 0.1).abs() < 1e-12);
         assert_eq!(st.steps, 1);
@@ -264,14 +288,16 @@ mod tests {
 
     #[test]
     fn ewma_tracks_step_latency() {
+        let mut a = RequestArena::new();
         let batcher = Batcher::new(4, open_budget());
         let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.25)));
-        inst.enqueue(mk_req(0, 0.0, 8, 3));
-        inst.kick(0.0);
-        inst.step_done(0.25);
+        let r0 = a.alloc(mk_req(0, 0.0, 8, 3));
+        inst.enqueue(r0, &a);
+        inst.kick(0.0, &mut a);
+        inst.step_done(0.25, &mut a);
         assert!((inst.ewma_step() - 0.25).abs() < 1e-12);
-        inst.kick(0.25);
-        inst.step_done(0.5);
+        inst.kick(0.25, &mut a);
+        inst.step_done(0.5, &mut a);
         // Constant latency: the EWMA stays put.
         assert!((inst.ewma_step() - 0.25).abs() < 1e-12);
     }

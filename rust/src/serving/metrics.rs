@@ -112,16 +112,34 @@ pub struct ServingReport {
 }
 
 impl ServingReport {
-    /// Build from completed requests + step accounting.
+    /// Build from a slice of requests + step accounting. Thin wrapper
+    /// over [`ServingReport::from_refs`] for callers that own their
+    /// requests contiguously (tests, trace tooling).
     pub fn from_requests(
         engine: String,
         reqs: &[Request],
         stats: &StepStats,
     ) -> ServingReport {
+        ServingReport::from_refs(engine, reqs.iter(), stats)
+    }
+
+    /// Build from any re-iterable stream of request references + step
+    /// accounting. This is the arena-friendly entry point: simulators
+    /// keep dense ids and resolve them against their
+    /// [`RequestArena`](super::RequestArena) here, without materializing
+    /// a `Vec<Request>` first.
+    pub fn from_refs<'a, I>(
+        engine: String,
+        reqs: I,
+        stats: &StepStats,
+    ) -> ServingReport
+    where
+        I: Iterator<Item = &'a Request> + Clone,
+    {
         let completed: Vec<&Request> =
-            reqs.iter().filter(|r| r.completed_at.is_some()).collect();
+            reqs.clone().filter(|r| r.completed_at.is_some()).collect();
         let tokens: u64 = completed.iter().map(|r| r.generated).sum();
-        let first = reqs.iter().map(|r| r.arrival).fold(f64::MAX, f64::min);
+        let first = reqs.map(|r| r.arrival).fold(f64::MAX, f64::min);
         let span = (stats.end_time - first).max(1e-12);
 
         let mut utps: Vec<f64> = completed

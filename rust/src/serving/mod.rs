@@ -14,15 +14,25 @@
 //!   wall-clock including every software overhead the paper's limit
 //!   study idealizes away (Appendix E's "simulated tokens/sec" analog).
 //!
-//! # Architecture: instances on a shared calendar
+//! # Architecture: an arena of requests, instances on a shared calendar
+//!
+//! Request state lives in a [`RequestArena`]: a simulator allocates
+//! every workload request into the slab once and a dense, copyable
+//! [`ReqId`] flows through the rest of the machinery — the event
+//! calendar, the batcher's admission queue and active set, and each
+//! instance's finished list all move 4-byte ids, never `Request`
+//! structs. Steady-state stepping therefore allocates nothing: lookups
+//! are `Vec` indexing and retirement reuses per-batcher scratch
+//! buffers. Reports resolve ids back to request state only at the end
+//! of a run.
 //!
 //! The unit of serving is an [`Instance`]: one model replica's
 //! [`Batcher`] (admission queue + KV budget + chunk planner) fused to
 //! one [`StepEngine`], exposing exactly two transitions — `kick` (admit,
 //! plan, price a step) and `step_done` (apply the priced plan). An
-//! instance never owns a clock: *simulators* own a single
-//! [`des::EventQueue`](crate::des) and drive instances with
-//! [`InstanceEvent`]s keyed by instance id. [`ServingSim`] is the
+//! instance never owns a clock or the arena: *simulators* own a single
+//! [`des::EventQueue`](crate::des) plus the arena, and drive instances
+//! with [`InstanceEvent`]s keyed by instance id. [`ServingSim`] is the
 //! one-instance driver; [`crate::cluster::ClusterSim`] multiplexes N
 //! instances (plus routing and KV-shipment events) on the same calendar
 //! type, so cross-instance causality is totally ordered and seeded runs
@@ -64,6 +74,7 @@
 //! JSONL/CSV traces (`arrival, context_len, gen_len` per record) for
 //! trace-driven studies (`serve --trace`).
 
+mod arena;
 mod batcher;
 mod engine;
 mod instance;
@@ -75,6 +86,7 @@ mod sim;
 pub(crate) mod testutil;
 mod trace;
 
+pub use arena::{ReqId, RequestArena};
 pub use batcher::{Batcher, KvBudget};
 pub use engine::{AnalyticEngine, StepBatch, StepEngine};
 pub use instance::{Instance, InstanceEvent};

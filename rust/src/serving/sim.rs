@@ -2,9 +2,11 @@
 //! engine steps (mixed prefill + decode), driving one [`Instance`].
 //!
 //! The event loop owns a [`des::EventQueue`](crate::des::EventQueue) of
-//! [`InstanceEvent`]s keyed by instance id (always 0 here); all
-//! per-step mechanics — admission, planning, pricing, completion,
-//! occupancy accounting — live in [`Instance`], the same state machine
+//! [`InstanceEvent`]s keyed by instance id (always 0 here) plus the
+//! [`RequestArena`] holding all request state; events and batcher
+//! queues carry dense [`ReqId`](super::ReqId)s only. All per-step
+//! mechanics — admission, planning, pricing, completion, occupancy
+//! accounting — live in [`Instance`], the same state machine
 //! [`crate::cluster::ClusterSim`] multiplexes N of on one calendar.
 //!
 //! Step semantics (fidelity rules the regression tests pin down):
@@ -27,6 +29,7 @@
 
 use crate::des::EventQueue;
 
+use super::arena::RequestArena;
 use super::batcher::Batcher;
 use super::engine::StepEngine;
 use super::instance::{Instance, InstanceEvent};
@@ -66,24 +69,37 @@ impl<'a> ServingSim<'a> {
     /// Run the given workload to completion (or a configured limit) and
     /// report. The engine is stepped whenever requests are active; a new
     /// step is scheduled at `now + mixed_step_latency(plan)`.
+    ///
+    /// Internally the workload is moved into a [`RequestArena`] once and
+    /// dense ids flow through the calendar and the instance, so the
+    /// event loop allocates nothing in steady state.
     pub fn run(self, workload: Vec<Request>) -> ServingReport {
         let ServingSim { batcher, engine, cfg } = self;
         let mut q: EventQueue<InstanceEvent> = EventQueue::new();
+        let mut arena = RequestArena::with_capacity(workload.len());
         for r in workload {
-            q.schedule_at(r.arrival, InstanceEvent::Arrival(r));
+            let at = r.arrival;
+            let id = arena.alloc(r);
+            q.schedule_at(at, InstanceEvent::Arrival(id));
         }
 
         let mut inst = Instance::new(batcher, Box::new(engine));
-        while let Some((now, ev)) = q.next() {
-            if now > cfg.max_time {
-                break; // clamp at the boundary: the event never applies
+        // Peek before popping: an event past the deadline is left on the
+        // calendar (it never applies), and the reported span clamps to
+        // the deadline.
+        let mut deadline_hit = false;
+        while let Some(t) = q.peek_time() {
+            if t > cfg.max_time {
+                deadline_hit = true;
+                break;
             }
+            let (now, ev) = q.next().expect("peeked event is still queued");
             match ev {
-                InstanceEvent::Arrival(r) | InstanceEvent::KvArrive(_, r) => {
-                    inst.enqueue(r)
+                InstanceEvent::Arrival(id) | InstanceEvent::KvArrive(_, id) => {
+                    inst.enqueue(id, &arena)
                 }
                 InstanceEvent::StepDone(_) => {
-                    inst.step_done(now);
+                    inst.step_done(now, &mut arena);
                 }
             }
             if inst.steps() >= cfg.max_steps {
@@ -91,13 +107,18 @@ impl<'a> ServingSim<'a> {
             }
             // Step boundary (or idle): admit, plan, and price one step.
             // While a step is in flight, arrivals above only enqueue.
-            if let Some(dt) = inst.kick(now) {
+            if let Some(dt) = inst.kick(now, &mut arena) {
                 q.schedule_in(dt, InstanceEvent::StepDone(0));
             }
         }
 
         let name = inst.engine_name();
-        inst.report(name, q.now().min(cfg.max_time))
+        // With peek-first clamping the clock never advances past the
+        // deadline, so a clamped run's span must end at `max_time`
+        // itself (exactly what the pop-and-discard loop reported).
+        let end_time =
+            if deadline_hit { cfg.max_time } else { q.now().min(cfg.max_time) };
+        inst.report(name, end_time, &arena)
     }
 }
 

@@ -44,6 +44,8 @@ pub struct ClusterRecord {
     pub completed: u64,
     /// Requests shed by admission control.
     pub shed: u64,
+    /// DES events applied by the cell's simulation run.
+    pub events: u64,
     /// Aggregate system tokens/second.
     pub stps: f64,
     /// Scale-out efficiency: tokens/second/instance.
@@ -66,6 +68,7 @@ impl ClusterRecord {
             ("rate", Json::Num(self.rate)),
             ("completed", Json::Num(self.completed as f64)),
             ("shed", Json::Num(self.shed as f64)),
+            ("events", Json::Num(self.events as f64)),
             ("stps", Json::Num(self.stps)),
             ("stps_per_instance", Json::Num(self.stps_per_instance)),
             ("ttft_p99_s", Json::Num(self.ttft_p99)),
@@ -105,6 +108,7 @@ pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
                 rate: job.workload.arrival_rate,
                 completed: rep.cluster.completed,
                 shed: rep.shed,
+                events: rep.events,
                 stps: rep.cluster.stps,
                 stps_per_instance: rep.stps_per_instance(),
                 ttft_p99: rep.cluster.ttft.p99,

@@ -74,6 +74,57 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "boom at 37")]
+    fn worker_panics_propagate_to_the_caller() {
+        // A mapper panic must not be swallowed by the worker thread: the
+        // scope join re-raises it (with its payload) on the calling
+        // thread. 64 items forces the threaded path on multi-core
+        // machines; the sequential fallback panics identically.
+        let items: Vec<u32> = (0..64).collect();
+        parallel_map(items, |&x| {
+            if x == 37 {
+                panic!("boom at 37");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn sizes_around_the_worker_count_preserve_order() {
+        // The chunking math has its edge cases exactly around the
+        // worker count: n just below it leaves threads idle, n equal
+        // gives chunk size 1, n just above forces one uneven chunk.
+        let w = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        for n in [w.saturating_sub(1), w, w + 1, 2 * w + 1] {
+            let items: Vec<usize> = (0..n).collect();
+            let out = parallel_map(items, |&x| x + 1);
+            assert_eq!(out.len(), n, "n={n}");
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i + 1, "n={n} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_output_order_always_matches_input_order() {
+        // Randomized sizes (seeded, so reproducible): for any n the
+        // output must be the input mapped in place — the threaded and
+        // sequential paths are indistinguishable to the caller.
+        let mut rng = crate::util::rng::Pcg32::seed_from(0xC0FFEE);
+        for round in 0..50 {
+            let n = rng.below(200) as usize;
+            let items: Vec<u32> = (0..n as u32).collect();
+            let out = parallel_map(items, |&x| x.wrapping_mul(2654435761));
+            assert_eq!(out.len(), n, "round {round}");
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, (i as u32).wrapping_mul(2654435761), "round {round}");
+            }
+        }
+    }
+
+    #[test]
     fn actually_runs_concurrently_when_possible() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let peak = AtomicUsize::new(0);
