@@ -32,8 +32,8 @@
 
 use crate::des::EventQueue;
 use crate::serving::{
-    Batcher, Instance, InstanceEvent, KvBudget, ReqId, Request, RequestArena,
-    ServingReport, SimConfig, StepEngine, StepStats,
+    Batcher, Instance, InstanceEvent, KvBudget, NoopObserver, ReqId, Request,
+    RequestArena, ServingReport, SimConfig, SimObserver, StepEngine, StepStats,
 };
 
 use super::report::{ClusterReport, PoolStats};
@@ -239,8 +239,9 @@ impl ClusterSim {
     /// 1: the batcher retires it the moment its last chunk lands) and
     /// `origin` maps the sub-request's arena slot back to the original,
     /// which parks untouched — full `gen_len` intact — until the KV
-    /// ships to the decode pool.
-    fn assign(&mut self, i: usize, id: ReqId) {
+    /// ships to the decode pool. Returns the sub-request's id when one
+    /// was minted (so observers can track the orig -> sub lineage).
+    fn assign(&mut self, i: usize, id: ReqId) -> Option<ReqId> {
         if self.roles[i] == Role::Prefill {
             let mut sub = self.arena[id].clone();
             sub.gen_len = 1;
@@ -250,9 +251,32 @@ impl ClusterSim {
             }
             self.origin[sub_id.index()] = Some(id);
             self.instances[i].enqueue(sub_id, &self.arena);
+            Some(sub_id)
         } else {
             self.instances[i].enqueue(id, &self.arena);
+            None
         }
+    }
+
+    /// A KV shipment landed at decode instance `i`: settle the
+    /// in-transit accounting and admit the original request. A shipment
+    /// addressed to a request that already completed its lifecycle (a
+    /// stale transfer) still settles the accounting but must be a
+    /// no-op for admission — re-enqueueing a dead request would
+    /// double-count its generation.
+    fn kv_arrive(&mut self, i: usize, id: ReqId) {
+        let (bytes, dead) = {
+            let r = &self.arena[id];
+            (
+                (r.context_len + r.gen_len) as f64 * self.kv_bytes_per_token,
+                r.completed_at.is_some(),
+            )
+        };
+        self.in_transit_kv[i] = (self.in_transit_kv[i] - bytes).max(0.0);
+        if dead {
+            return;
+        }
+        self.instances[i].enqueue(id, &self.arena);
     }
 
     /// Decode-pool placement for a prefilled request: least committed
@@ -275,7 +299,21 @@ impl ClusterSim {
     }
 
     /// Run the workload to completion (or a configured limit).
-    pub fn run(mut self, workload: Vec<Request>) -> ClusterReport {
+    pub fn run(self, workload: Vec<Request>) -> ClusterReport {
+        // The no-op observer monomorphizes every hook away, so this is
+        // exactly the pre-observer event loop.
+        self.run_with(workload, &mut NoopObserver)
+    }
+
+    /// [`ClusterSim::run`] with a [`SimObserver`] watching every applied
+    /// event, routing decision, and retirement — the deterministic
+    /// simulation-testing harness ([`crate::dst`]) hooks its invariant
+    /// checker in here.
+    pub fn run_with<O: SimObserver>(
+        mut self,
+        workload: Vec<Request>,
+        obs: &mut O,
+    ) -> ClusterReport {
         let mut q: EventQueue<InstanceEvent> = EventQueue::new();
         let offered = workload.len() as u64;
         self.arena = RequestArena::with_capacity(workload.len());
@@ -309,8 +347,16 @@ impl ClusterSim {
                         self.router.route(r, &self.front_door, &self.loads_buf)
                     };
                     match pick {
-                        Some(i) => self.assign(i, id),
-                        None => shed += 1,
+                        Some(i) => {
+                            obs.on_route(now, id, i);
+                            if let Some(sub) = self.assign(i, id) {
+                                obs.on_sub_request(now, id, sub);
+                            }
+                        }
+                        None => {
+                            obs.on_shed(now, id);
+                            shed += 1;
+                        }
                     }
                 }
                 InstanceEvent::StepDone(i) => {
@@ -318,21 +364,17 @@ impl ClusterSim {
                     retired_scratch.clear();
                     retired_scratch.extend_from_slice(retired);
                     steps_total += 1;
+                    let lifecycle_done = self.roles[i] != Role::Prefill;
                     for &id in &retired_scratch {
-                        if self.roles[i] == Role::Prefill {
-                            self.ship(id, &mut q);
-                        } else {
+                        obs.on_retire(now, i, id, lifecycle_done, &self.arena);
+                        if lifecycle_done {
                             finished.push(id);
+                        } else {
+                            self.ship(id, &mut q);
                         }
                     }
                 }
-                InstanceEvent::KvArrive(i, id) => {
-                    let r = &self.arena[id];
-                    let bytes =
-                        (r.context_len + r.gen_len) as f64 * self.kv_bytes_per_token;
-                    self.in_transit_kv[i] = (self.in_transit_kv[i] - bytes).max(0.0);
-                    self.instances[i].enqueue(id, &self.arena);
-                }
+                InstanceEvent::KvArrive(i, id) => self.kv_arrive(i, id),
             }
             if steps_total >= self.spec.sim.max_steps {
                 break;
@@ -342,6 +384,7 @@ impl ClusterSim {
                     q.schedule_in(dt, InstanceEvent::StepDone(i));
                 }
             }
+            obs.post_event(now, &ev, &self.instances, &self.arena);
         }
 
         let events = q.fired();
@@ -350,6 +393,7 @@ impl ClusterSim {
         } else {
             q.now().min(self.spec.sim.max_time)
         };
+        obs.on_done(end_time, &self.instances, &self.arena);
         self.into_report(finished, offered, shed, end_time, events)
     }
 
@@ -364,7 +408,12 @@ impl ClusterSim {
     /// the hop (the decode batcher keeps an existing stamp), so queue
     /// delay and residence stay lifecycle quantities.
     fn ship(&mut self, sub: ReqId, q: &mut EventQueue<InstanceEvent>) {
+        // `take`, not a copy: the sub-request is fully retired once its
+        // KV ships, so its side-table entry must die with it. Leaving
+        // the entry behind would let a replayed retirement ship (and
+        // double-count) the original a second time.
         let orig = self.origin[sub.index()]
+            .take()
             .expect("prefill pool retired a request it never ingested");
         let (ctx, prefilled, scheduled, admitted) = {
             let s = &self.arena[sub];
@@ -764,5 +813,49 @@ mod tests {
             Box::new(RoundRobin::new()),
             disagg_spec(1, 8, 0.0),
         );
+    }
+
+    #[test]
+    fn kv_arrive_for_a_dead_request_is_a_noop() {
+        // A KV shipment addressed to a request whose lifecycle already
+        // completed must settle the in-transit accounting but never
+        // re-admit the request (which would double-count its decode).
+        let mut sim = ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            disagg_spec(1, 8, 80.0),
+        );
+        let mut r = mk_req(0, 0.0, 8, 3);
+        r.completed_at = Some(1.0);
+        let id = sim.arena.alloc(r);
+        sim.in_transit_kv[1] = 100.0;
+        sim.kv_arrive(1, id);
+        assert!(
+            sim.in_transit_kv[1] < 100.0,
+            "in-transit accounting must still settle"
+        );
+        assert_eq!(sim.instances[1].queued_len(), 0);
+        assert_eq!(sim.instances[1].active_len(), 0);
+    }
+
+    #[test]
+    fn shipping_consumes_the_origin_entry() {
+        // Regression (DST audit): `ship` used to read the origin
+        // side-table without clearing it, leaving a stale entry mapping
+        // the retired sub-request to its original forever.
+        let mut sim = ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            disagg_spec(1, 8, 80.0),
+        );
+        let id = sim.arena.alloc(mk_req(0, 0.0, 8, 2));
+        let sub = sim.assign(0, id).expect("prefill role mints a sub-request");
+        assert_eq!(sim.origin[sub.index()], Some(id));
+        let mut q: EventQueue<InstanceEvent> = EventQueue::new();
+        sim.ship(sub, &mut q);
+        assert_eq!(sim.origin[sub.index()], None, "stale origin entry leaks");
+        assert_eq!(q.len(), 1, "exactly one KvArrive scheduled");
     }
 }

@@ -215,8 +215,13 @@ pub fn default_cluster_job(model: &str, sys: SystemConfig) -> ClusterJob {
     }
 }
 
-/// Run a cluster job to completion and return its merged report.
-pub fn serve_cluster(job: &ClusterJob) -> Result<ClusterReport> {
+/// Validate a cluster job and build its simulator (N analytic
+/// instances, KV budget, router, spec) without running it. Split out of
+/// [`serve_cluster`] so callers that need the simulator itself — the
+/// DST harness runs it under [`crate::serving::SimObserver`] hooks via
+/// [`crate::cluster::ClusterSim::run_with`] — share the exact
+/// production wiring.
+pub fn build_cluster_sim(job: &ClusterJob) -> Result<ClusterSim> {
     let registry = Registry::builtin();
     let app = registry
         .app(&job.model)
@@ -262,8 +267,14 @@ pub fn serve_cluster(job: &ClusterJob) -> Result<ClusterReport> {
         sim: SimConfig::default(),
     };
     let router = job.router.build(job.ttft_target);
+    Ok(ClusterSim::new(engines, kv, router, spec))
+}
+
+/// Run a cluster job to completion and return its merged report.
+pub fn serve_cluster(job: &ClusterJob) -> Result<ClusterReport> {
+    let sim = build_cluster_sim(job)?;
     let workload = resolve_workload(&job.workload, &job.trace)?;
-    Ok(ClusterSim::new(engines, kv, router, spec).run(workload))
+    Ok(sim.run(workload))
 }
 
 /// Re-exported so `main.rs` needn't reach into serving directly.

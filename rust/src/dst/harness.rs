@@ -1,0 +1,412 @@
+//! The fuzz harness: run one [`FuzzCase`] under the
+//! [`InvariantChecker`], cross-check the final report against the
+//! checker's independent books (and, where eligible, against the
+//! single-instance simulator as an oracle), and shrink failures to a
+//! minimal reproducer.
+
+use crate::cluster::ClusterReport;
+use crate::serving::{Batcher, ServingSim, SimConfig};
+
+use super::gen::{gen_case, FuzzCase, RouterKind};
+use super::invariant::InvariantChecker;
+
+/// Everything one case run produced: the report and any violations
+/// (empty = the case passed).
+#[derive(Debug)]
+pub struct CaseOutcome {
+    /// The cluster report of the run.
+    pub report: ClusterReport,
+    /// Invariant and cross-check violations, in discovery order.
+    pub violations: Vec<String>,
+}
+
+/// One failing seed, with its shrunk reproducer.
+#[derive(Debug)]
+pub struct FuzzFailure {
+    /// The seed that failed.
+    pub seed: u64,
+    /// Violations from the original (unshrunk) case.
+    pub violations: Vec<String>,
+    /// The smallest case found that still fails.
+    pub minimized: FuzzCase,
+}
+
+/// Run a case under the invariant checker and all report cross-checks.
+pub fn run_case(case: &FuzzCase) -> CaseOutcome {
+    let mut chk = InvariantChecker::new(case.expect_drained());
+    let report =
+        case.build_sim().run_with(case.requests.clone(), &mut chk);
+    let mut violations: Vec<String> = chk.violations().to_vec();
+    if chk.suppressed() > 0 {
+        violations.push(format!("... and {} more", chk.suppressed()));
+    }
+    report_checks(case, &chk, &report, &mut violations);
+    if violations.is_empty() && case.oracle_eligible() {
+        oracle_check(case, &report, &mut violations);
+    }
+    CaseOutcome { report, violations }
+}
+
+/// Generate and run the case a seed names.
+pub fn run_seed(seed: u64) -> CaseOutcome {
+    run_case(&gen_case(seed))
+}
+
+/// Fuzz `count` consecutive seeds starting at `start`; returns the
+/// failures, each with a shrunk reproducer.
+pub fn fuzz_range(start: u64, count: u64) -> Vec<FuzzFailure> {
+    let mut failures = Vec::new();
+    for seed in start..start.saturating_add(count) {
+        let case = gen_case(seed);
+        let out = run_case(&case);
+        if !out.violations.is_empty() {
+            failures.push(FuzzFailure {
+                seed,
+                violations: out.violations,
+                minimized: shrink(&case),
+            });
+        }
+    }
+    failures
+}
+
+/// Relative-plus-absolute float closeness for accounting cross-checks.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+fn check_finite(tag: &str, v: f64, out: &mut Vec<String>) {
+    if !v.is_finite() {
+        out.push(format!("report field {tag} is not finite: {v}"));
+    }
+}
+
+fn check_report_finite(
+    prefix: &str,
+    rep: &crate::serving::ServingReport,
+    out: &mut Vec<String>,
+) {
+    let fields = [
+        ("span", rep.span),
+        ("stps", rep.stps),
+        ("utps_mean", rep.utps_mean),
+        ("utps_p50", rep.utps_p50),
+        ("utps_p99_low", rep.utps_p99_low),
+        ("queue_delay_mean", rep.queue_delay_mean),
+        ("mean_batch", rep.mean_batch),
+        ("ttft.mean", rep.ttft.mean),
+        ("ttft.p50", rep.ttft.p50),
+        ("ttft.p90", rep.ttft.p90),
+        ("ttft.p99", rep.ttft.p99),
+        ("tpot.mean", rep.tpot.mean),
+        ("tpot.p99", rep.tpot.p99),
+        ("e2e.mean", rep.e2e.mean),
+        ("e2e.p99", rep.e2e.p99),
+    ];
+    for (name, v) in fields {
+        check_finite(&format!("{prefix}.{name}"), v, out);
+    }
+}
+
+/// Cross-check the cluster report against the checker's independent
+/// books. Every number a user reads must reconcile with what the
+/// observer saw happen, event by event.
+fn report_checks(
+    case: &FuzzCase,
+    chk: &InvariantChecker,
+    report: &ClusterReport,
+    out: &mut Vec<String>,
+) {
+    // Finiteness: NaN/inf in any float a report exposes is a bug even
+    // on degenerate runs (zero completions, zero steps).
+    check_report_finite("cluster", &report.cluster, out);
+    for (i, rep) in report.per_instance.iter().enumerate() {
+        check_report_finite(&format!("i{i}"), rep, out);
+    }
+    for p in &report.pools {
+        check_finite(&format!("pool.{}.busy_frac", p.label), p.busy_frac, out);
+        check_finite(&format!("pool.{}.mean_batch", p.label), p.mean_batch, out);
+    }
+    check_finite("kv_shipped_bytes", report.kv_shipped_bytes, out);
+    check_finite("kv_transfer_mean", report.kv_transfer_mean, out);
+
+    if report.offered != case.requests.len() as u64 {
+        out.push(format!(
+            "offered {} != workload size {}",
+            report.offered,
+            case.requests.len()
+        ));
+    }
+    if report.shed != chk.shed() {
+        out.push(format!(
+            "report shed {} != checker shed {}",
+            report.shed,
+            chk.shed()
+        ));
+    }
+    if report.cluster.completed != chk.finished() {
+        out.push(format!(
+            "report completed {} != checker finished {}",
+            report.cluster.completed,
+            chk.finished()
+        ));
+    }
+    if report.cluster.tokens != chk.tokens_out() {
+        out.push(format!(
+            "report tokens {} != checker tokens {}",
+            report.cluster.tokens,
+            chk.tokens_out()
+        ));
+    }
+    let instance_steps: u64 = report.per_instance.iter().map(|r| r.steps).sum();
+    if report.cluster.steps != instance_steps {
+        out.push(format!(
+            "cluster steps {} != sum of per-instance steps {instance_steps}",
+            report.cluster.steps
+        ));
+    }
+    let pool_steps: u64 = report.pools.iter().map(|p| p.steps).sum();
+    if report.cluster.steps != pool_steps {
+        out.push(format!(
+            "cluster steps {} != sum of pool steps {pool_steps}",
+            report.cluster.steps
+        ));
+    }
+    // Pools count tokens only where lifecycles retire (prefill pools
+    // emit none), so the pool totals must re-add to the cluster total.
+    let pool_tokens: u64 = report.pools.iter().map(|p| p.tokens).sum();
+    if report.cluster.tokens != pool_tokens {
+        out.push(format!(
+            "cluster tokens {} != sum of pool tokens {pool_tokens}",
+            report.cluster.tokens
+        ));
+    }
+    // Pooled-vs-merged percentiles: the checker collected the same
+    // per-request samples in the same retirement order the report
+    // merges, so the distributions must match bit-for-bit.
+    let (ttft, tpot, e2e) = chk.latency_stats();
+    if report.cluster.ttft != ttft {
+        out.push(format!(
+            "pooled TTFT {:?} != checker-merged {ttft:?}",
+            report.cluster.ttft
+        ));
+    }
+    if report.cluster.tpot != tpot {
+        out.push(format!(
+            "pooled TPOT {:?} != checker-merged {tpot:?}",
+            report.cluster.tpot
+        ));
+    }
+    if report.cluster.e2e != e2e {
+        out.push(format!(
+            "pooled E2E {:?} != checker-merged {e2e:?}",
+            report.cluster.e2e
+        ));
+    }
+    if case.expect_drained() {
+        if report.cluster.completed + report.shed != report.offered {
+            out.push(format!(
+                "drained run: completed {} + shed {} != offered {}",
+                report.cluster.completed, report.shed, report.offered
+            ));
+        }
+        let expect_prefill = if case.prefill_chunk == 0 {
+            0
+        } else {
+            chk.ctx_finished()
+        };
+        if report.cluster.prefill_tokens != expect_prefill {
+            out.push(format!(
+                "drained run: prefill tokens {} != finished prompt tokens \
+                 {expect_prefill}",
+                report.cluster.prefill_tokens
+            ));
+        }
+    }
+}
+
+/// For a one-instance colocated case behind a pass-through router, the
+/// single-instance serving simulator is an exact oracle: same batcher,
+/// same engine, same limits must give the same report.
+fn oracle_check(case: &FuzzCase, report: &ClusterReport, out: &mut Vec<String>) {
+    let mut engine = case.engine.clone();
+    let sim = ServingSim::new(
+        Batcher::with_prefill(case.max_batch, case.kv_budget(), case.prefill_chunk),
+        &mut engine,
+        SimConfig { max_time: case.max_time, max_steps: case.max_steps },
+    );
+    let single = sim.run(case.requests.clone());
+    let cl = &report.cluster;
+    let exact = [
+        ("completed", cl.completed, single.completed),
+        ("tokens", cl.tokens, single.tokens),
+        ("prefill_tokens", cl.prefill_tokens, single.prefill_tokens),
+        ("steps", cl.steps, single.steps),
+    ];
+    for (name, a, b) in exact {
+        if a != b {
+            out.push(format!("oracle: cluster {name} {a} != single {b}"));
+        }
+    }
+    let floats = [
+        ("span", cl.span, single.span),
+        ("stps", cl.stps, single.stps),
+        ("utps_mean", cl.utps_mean, single.utps_mean),
+        ("utps_p50", cl.utps_p50, single.utps_p50),
+        ("utps_p99_low", cl.utps_p99_low, single.utps_p99_low),
+        ("queue_delay_mean", cl.queue_delay_mean, single.queue_delay_mean),
+        ("mean_batch", cl.mean_batch, single.mean_batch),
+        ("ttft.mean", cl.ttft.mean, single.ttft.mean),
+        ("ttft.p99", cl.ttft.p99, single.ttft.p99),
+        ("tpot.mean", cl.tpot.mean, single.tpot.mean),
+        ("tpot.p99", cl.tpot.p99, single.tpot.p99),
+        ("e2e.mean", cl.e2e.mean, single.e2e.mean),
+        ("e2e.p99", cl.e2e.p99, single.e2e.p99),
+    ];
+    for (name, a, b) in floats {
+        if !close(a, b) {
+            out.push(format!("oracle: cluster {name} {a} != single {b}"));
+        }
+    }
+}
+
+/// Greedy shrink: try structurally smaller variants of a failing case,
+/// keeping any that still fail, until no candidate fails or the run
+/// budget (200 re-executions) is spent. Every candidate stays within
+/// the simulator's validity envelope (positive instance counts, prefill
+/// pool smaller than the cluster, chunked prefill wherever a prefill
+/// pool exists).
+pub fn shrink(case: &FuzzCase) -> FuzzCase {
+    let mut best = case.clone();
+    let mut budget = 200u32;
+    loop {
+        let mut improved = false;
+        for cand in shrink_candidates(&best) {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            if !run_case(&cand).violations.is_empty() {
+                best = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved || budget == 0 {
+            return best;
+        }
+    }
+}
+
+fn shrink_candidates(c: &FuzzCase) -> Vec<FuzzCase> {
+    let mut out = Vec::new();
+    let n = c.requests.len();
+    if n >= 2 {
+        // First half, second half, drop-last.
+        let mut first = c.clone();
+        first.requests.truncate(n / 2);
+        out.push(first);
+        let mut second = c.clone();
+        second.requests.drain(..n / 2);
+        out.push(second);
+    }
+    if n >= 1 {
+        let mut drop_last = c.clone();
+        drop_last.requests.pop();
+        out.push(drop_last);
+    }
+    if c.instances > 1 {
+        let mut cand = c.clone();
+        cand.instances = (c.instances / 2).max(1);
+        if cand.instances == 1 {
+            cand.prefill_instances = 0;
+        } else if cand.prefill_instances >= cand.instances {
+            cand.prefill_instances = cand.instances - 1;
+        }
+        out.push(cand);
+    }
+    if c.prefill_instances > 0 {
+        let mut cand = c.clone();
+        cand.prefill_instances = 0;
+        out.push(cand);
+    }
+    if c.router != RouterKind::RoundRobin {
+        let mut cand = c.clone();
+        cand.router = RouterKind::RoundRobin;
+        out.push(cand);
+    }
+    if c.kv_link_bw.is_finite() {
+        let mut cand = c.clone();
+        cand.kv_link_bw = f64::INFINITY;
+        out.push(cand);
+    }
+    if c.max_time.is_finite() {
+        let mut cand = c.clone();
+        cand.max_time = f64::INFINITY;
+        out.push(cand);
+    }
+    if c.max_batch > 1 {
+        let mut cand = c.clone();
+        cand.max_batch = 1;
+        out.push(cand);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_first_seed_of_every_family_passes() {
+        for seed in 0..8u64 {
+            let out = run_seed(seed);
+            assert!(
+                out.violations.is_empty(),
+                "seed {seed} violated:\n{}",
+                out.violations.join("\n")
+            );
+        }
+    }
+
+    #[test]
+    fn shrinking_a_passing_case_returns_it_unchanged() {
+        let case = gen_case(7);
+        let shrunk = shrink(&case);
+        assert_eq!(shrunk.requests.len(), case.requests.len());
+        assert_eq!(shrunk.instances, case.instances);
+    }
+
+    #[test]
+    fn shrink_candidates_stay_within_the_validity_envelope() {
+        for seed in 0..16u64 {
+            let case = gen_case(seed);
+            for cand in shrink_candidates(&case) {
+                assert!(cand.instances >= 1);
+                assert!(
+                    cand.prefill_instances == 0
+                        || cand.prefill_instances < cand.instances
+                );
+                if cand.prefill_instances > 0 {
+                    assert!(cand.prefill_chunk > 0);
+                }
+                // Constructive proof each candidate builds.
+                let _ = cand.build_sim();
+            }
+        }
+    }
+
+    #[test]
+    fn an_empty_workload_passes_cleanly() {
+        let mut case = gen_case(7);
+        case.requests.clear();
+        let out = run_case(&case);
+        assert!(
+            out.violations.is_empty(),
+            "{}",
+            out.violations.join("\n")
+        );
+        assert_eq!(out.report.offered, 0);
+        assert_eq!(out.report.cluster.completed, 0);
+    }
+}

@@ -1,0 +1,529 @@
+//! The per-event invariant checker: a [`SimObserver`] that shadows a
+//! run with its own books and flags any state the simulators must never
+//! reach.
+//!
+//! The checker keeps a tiny state machine per arena slot (routed,
+//! parked behind a prefill sub-request, in KV transit, retired, shed)
+//! plus conservation counters, and audits after **every applied event**:
+//!
+//! * the simulated clock never runs backwards;
+//! * per instance, KV bytes reserved never exceed the budget and busy
+//!   time never exceeds the clock;
+//! * requests are conserved — everything routed is in exactly one
+//!   instance queue/batch, parked, in transit, retired, or shed;
+//! * at retirement, token accounting closed out exactly
+//!   (`generated == gen_len`, `prefilled == context_len`) and the
+//!   lifecycle stamps are ordered
+//!   (`arrival <= admitted <= first_token <= completed == now`);
+//! * after a fully drained run, every queue is empty, no KV is
+//!   reserved, and the arena reconciles against routed + subs + shed.
+//!
+//! Violations are collected as human-readable strings (never panics),
+//! so the harness can report all of them alongside the seed.
+
+use crate::serving::{
+    Instance, InstanceEvent, LatencyStats, ReqId, RequestArena, SimObserver,
+};
+
+/// Where one arena slot sits in the request lifecycle, per the
+/// checker's books.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    /// Allocated, not yet routed (or never offered: a workload request
+    /// whose arrival fell past the deadline).
+    Fresh,
+    /// In some instance's queue or active batch.
+    Enqueued,
+    /// A disaggregated original, parked while its prefill sub-request
+    /// runs.
+    Parked,
+    /// A disaggregated original, KV shipping to its decode instance.
+    InTransit,
+    /// Retired (lifecycle complete, or a finished prefill sub-request).
+    Retired,
+    /// Shed by admission control.
+    Shed,
+}
+
+/// Cap on recorded violations; everything past it is only counted, so a
+/// hot loop of failures cannot balloon memory.
+const MAX_RECORDED: usize = 32;
+
+/// The invariant checker. Build one per run with
+/// [`InvariantChecker::new`], pass it to `run_with`, then read
+/// [`violations`](InvariantChecker::violations) and the counters.
+#[derive(Debug, Default)]
+pub struct InvariantChecker {
+    expect_drained: bool,
+    last_time: f64,
+    state: Vec<SlotState>,
+    /// For a prefill sub-request's slot: the original it ingests for.
+    sub_of: Vec<Option<ReqId>>,
+    routed: u64,
+    subs: u64,
+    shed: u64,
+    finished: u64,
+    sub_retired: u64,
+    /// Requests currently in some instance queue or active batch.
+    live: u64,
+    parked: u64,
+    in_transit: u64,
+    tokens_out: u64,
+    /// Prompt tokens of lifecycle-finished requests.
+    ctx_finished: u64,
+    events: u64,
+    ttft: Vec<f64>,
+    tpot: Vec<f64>,
+    e2e: Vec<f64>,
+    violations: Vec<String>,
+    suppressed: u64,
+}
+
+impl InvariantChecker {
+    /// New checker. `expect_drained` arms the end-of-run checks that
+    /// only hold when nothing truncated the run (no deadline, no step
+    /// limit): empty queues, zero KV reserved, closed conservation.
+    pub fn new(expect_drained: bool) -> InvariantChecker {
+        InvariantChecker { expect_drained, ..InvariantChecker::default() }
+    }
+
+    /// Violations found so far (capped; see [`suppressed`](Self::suppressed)).
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    /// Violations found past the recording cap.
+    pub fn suppressed(&self) -> u64 {
+        self.suppressed
+    }
+
+    /// Requests routed through the front door.
+    pub fn routed(&self) -> u64 {
+        self.routed
+    }
+
+    /// Prefill sub-requests minted (disaggregated mode).
+    pub fn subs(&self) -> u64 {
+        self.subs
+    }
+
+    /// Requests shed by admission control.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Full request lifecycles completed.
+    pub fn finished(&self) -> u64 {
+        self.finished
+    }
+
+    /// Output tokens across finished lifecycles.
+    pub fn tokens_out(&self) -> u64 {
+        self.tokens_out
+    }
+
+    /// Prompt tokens across finished lifecycles.
+    pub fn ctx_finished(&self) -> u64 {
+        self.ctx_finished
+    }
+
+    /// Events observed.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// TTFT / TPOT / E2E over the finished lifecycles, aggregated
+    /// exactly like the report does (same samples, same order), so the
+    /// harness can cross-check the pooled percentiles bit-for-bit.
+    pub fn latency_stats(&self) -> (LatencyStats, LatencyStats, LatencyStats) {
+        (
+            LatencyStats::from_samples(&mut self.ttft.clone()),
+            LatencyStats::from_samples(&mut self.tpot.clone()),
+            LatencyStats::from_samples(&mut self.e2e.clone()),
+        )
+    }
+
+    fn violate(&mut self, msg: String) {
+        if self.violations.len() < MAX_RECORDED {
+            self.violations.push(msg);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    fn grow(&mut self, id: ReqId) {
+        let need = id.index() + 1;
+        if self.state.len() < need {
+            self.state.resize(need, SlotState::Fresh);
+            self.sub_of.resize(need, None);
+        }
+    }
+
+    fn slot(&mut self, id: ReqId) -> SlotState {
+        self.grow(id);
+        self.state[id.index()]
+    }
+
+    fn set_slot(&mut self, id: ReqId, s: SlotState) {
+        self.grow(id);
+        self.state[id.index()] = s;
+    }
+
+    /// Audit a lifecycle retirement's request state.
+    fn check_lifecycle(&mut self, now: f64, id: ReqId, arena: &RequestArena) {
+        let r = arena[id].clone();
+        if r.generated != r.gen_len {
+            self.violate(format!(
+                "req {id:?}: retired with {} of {} tokens generated",
+                r.generated, r.gen_len
+            ));
+        }
+        if r.prefilled != r.context_len {
+            self.violate(format!(
+                "req {id:?}: retired with {} of {} prompt tokens prefilled",
+                r.prefilled, r.context_len
+            ));
+        }
+        match (r.admitted_at, r.first_token_at, r.completed_at) {
+            (Some(adm), Some(ftok), Some(comp)) => {
+                if !(r.arrival <= adm && adm <= ftok && ftok <= comp) {
+                    self.violate(format!(
+                        "req {id:?}: lifecycle stamps out of order \
+                         (arrival {} admitted {adm} first_token {ftok} \
+                         completed {comp})",
+                        r.arrival
+                    ));
+                }
+                if comp != now {
+                    self.violate(format!(
+                        "req {id:?}: completed_at {comp} != retirement time {now}"
+                    ));
+                }
+            }
+            _ => self.violate(format!(
+                "req {id:?}: retired with missing lifecycle stamps {:?}/{:?}/{:?}",
+                r.admitted_at, r.first_token_at, r.completed_at
+            )),
+        }
+        self.finished += 1;
+        self.tokens_out += r.generated;
+        self.ctx_finished += r.context_len;
+        // Mirror the report's sample collection exactly (same
+        // filter_map, same retirement order).
+        if let Some(t) = r.ttft() {
+            self.ttft.push(t);
+        }
+        if let Some(t) = r.tpot() {
+            self.tpot.push(t);
+        }
+        if let Some(t) = r.e2e() {
+            self.e2e.push(t);
+        }
+    }
+}
+
+impl SimObserver for InvariantChecker {
+    fn on_route(&mut self, _now: f64, id: ReqId, _instance: usize) {
+        match self.slot(id) {
+            SlotState::Fresh => {
+                self.set_slot(id, SlotState::Enqueued);
+                self.routed += 1;
+                self.live += 1;
+            }
+            other => self.violate(format!(
+                "req {id:?}: routed while already {other:?}"
+            )),
+        }
+    }
+
+    fn on_shed(&mut self, _now: f64, id: ReqId) {
+        match self.slot(id) {
+            SlotState::Fresh => {
+                self.set_slot(id, SlotState::Shed);
+                self.shed += 1;
+            }
+            other => self.violate(format!(
+                "req {id:?}: shed while already {other:?}"
+            )),
+        }
+    }
+
+    fn on_sub_request(&mut self, _now: f64, orig: ReqId, sub: ReqId) {
+        match self.slot(orig) {
+            SlotState::Enqueued => {
+                self.set_slot(orig, SlotState::Parked);
+                self.live -= 1;
+                self.parked += 1;
+            }
+            other => self.violate(format!(
+                "req {orig:?}: sub-request minted while original is {other:?}"
+            )),
+        }
+        match self.slot(sub) {
+            SlotState::Fresh => {
+                self.set_slot(sub, SlotState::Enqueued);
+                self.subs += 1;
+                self.live += 1;
+                self.sub_of[sub.index()] = Some(orig);
+            }
+            other => self.violate(format!(
+                "sub {sub:?}: minted into non-fresh slot ({other:?})"
+            )),
+        }
+    }
+
+    fn on_retire(
+        &mut self,
+        now: f64,
+        _instance: usize,
+        id: ReqId,
+        lifecycle_done: bool,
+        arena: &RequestArena,
+    ) {
+        match self.slot(id) {
+            SlotState::Enqueued => {
+                self.set_slot(id, SlotState::Retired);
+                self.live -= 1;
+            }
+            other => self.violate(format!(
+                "req {id:?}: retired while {other:?} (never enqueued?)"
+            )),
+        }
+        if lifecycle_done {
+            self.check_lifecycle(now, id, arena);
+        } else {
+            // A prefill sub-request finishing moves its original from
+            // parked into KV transit.
+            self.sub_retired += 1;
+            match self.sub_of[id.index()] {
+                Some(orig) => match self.slot(orig) {
+                    SlotState::Parked => {
+                        self.set_slot(orig, SlotState::InTransit);
+                        self.parked -= 1;
+                        self.in_transit += 1;
+                    }
+                    other => self.violate(format!(
+                        "sub {id:?} retired but original {orig:?} is {other:?}"
+                    )),
+                },
+                None => self.violate(format!(
+                    "sub-request retirement for {id:?} with no recorded original"
+                )),
+            }
+        }
+    }
+
+    fn post_event(
+        &mut self,
+        now: f64,
+        ev: &InstanceEvent,
+        instances: &[Instance<'_>],
+        _arena: &RequestArena,
+    ) {
+        self.events += 1;
+        if now < self.last_time {
+            self.violate(format!(
+                "clock ran backwards: {} -> {now} at {ev:?}",
+                self.last_time
+            ));
+        }
+        self.last_time = now;
+        if let InstanceEvent::KvArrive(_, id) = ev {
+            match self.slot(*id) {
+                SlotState::InTransit => {
+                    self.set_slot(*id, SlotState::Enqueued);
+                    self.in_transit -= 1;
+                    self.live += 1;
+                }
+                // A shipment landing after its request retired is legal
+                // and must be a no-op; conservation below catches the
+                // sim enqueueing it anyway.
+                SlotState::Retired => {}
+                other => self.violate(format!(
+                    "KvArrive for req {id:?} in state {other:?}"
+                )),
+            }
+        }
+        for (i, inst) in instances.iter().enumerate() {
+            let used = inst.kv_used_bytes();
+            let budget = inst.kv_budget_bytes();
+            if used > budget * (1.0 + 1e-9) + 1e-6 {
+                self.violate(format!(
+                    "instance {i}: KV reserved {used} exceeds budget {budget} \
+                     after {ev:?} at t={now}"
+                ));
+            }
+            if used < -1e-6 {
+                self.violate(format!(
+                    "instance {i}: negative KV reservation {used} at t={now}"
+                ));
+            }
+            let busy = inst.stats(now).busy_time;
+            if busy > now * (1.0 + 1e-9) + 1e-9 {
+                self.violate(format!(
+                    "instance {i}: busy time {busy} exceeds clock {now}"
+                ));
+            }
+        }
+        let in_instances: u64 = instances
+            .iter()
+            .map(|inst| (inst.queued_len() + inst.active_len()) as u64)
+            .sum();
+        if in_instances != self.live {
+            self.violate(format!(
+                "conservation: {in_instances} requests across instance \
+                 queues/batches but books say {} after {ev:?} at t={now}",
+                self.live
+            ));
+        }
+    }
+
+    fn on_done(
+        &mut self,
+        end_time: f64,
+        instances: &[Instance<'_>],
+        arena: &RequestArena,
+    ) {
+        if end_time + 1e-9 < self.last_time {
+            self.violate(format!(
+                "end time {end_time} precedes last event at {}",
+                self.last_time
+            ));
+        }
+        for (id, r) in arena.iter() {
+            if r.generated > r.gen_len {
+                self.violate(format!(
+                    "req {id:?}: over-generated ({} of {})",
+                    r.generated, r.gen_len
+                ));
+            }
+            if let Some(c) = r.completed_at {
+                if r.generated != r.gen_len {
+                    self.violate(format!(
+                        "req {id:?}: completed at {c} with {} of {} tokens",
+                        r.generated, r.gen_len
+                    ));
+                }
+            }
+        }
+        if !self.expect_drained {
+            return;
+        }
+        if self.live != 0 || self.parked != 0 || self.in_transit != 0 {
+            self.violate(format!(
+                "drained run left {} live / {} parked / {} in transit",
+                self.live, self.parked, self.in_transit
+            ));
+        }
+        for (i, inst) in instances.iter().enumerate() {
+            if inst.queued_len() != 0 || inst.active_len() != 0 {
+                self.violate(format!(
+                    "instance {i}: {} queued / {} active after drain",
+                    inst.queued_len(),
+                    inst.active_len()
+                ));
+            }
+            if inst.busy() {
+                self.violate(format!("instance {i}: still busy after drain"));
+            }
+            if inst.kv_used_bytes().abs() > 1e-6 {
+                self.violate(format!(
+                    "instance {i}: {} KV bytes still reserved after drain",
+                    inst.kv_used_bytes()
+                ));
+            }
+            if inst.outstanding_kv_bytes().abs() > 1e-6 {
+                self.violate(format!(
+                    "instance {i}: {} KV bytes still outstanding after drain",
+                    inst.outstanding_kv_bytes()
+                ));
+            }
+            if inst.outstanding_gen_tokens() != 0 {
+                self.violate(format!(
+                    "instance {i}: {} gen tokens still outstanding after drain",
+                    inst.outstanding_gen_tokens()
+                ));
+            }
+        }
+        let accounted = self.routed + self.subs + self.shed;
+        if arena.len() as u64 != accounted {
+            self.violate(format!(
+                "arena holds {} slots but only {accounted} were \
+                 routed/minted/shed",
+                arena.len()
+            ));
+        }
+        if self.finished + self.shed != self.routed {
+            self.violate(format!(
+                "drained run: routed {} != finished {} + shed {}",
+                self.routed, self.finished, self.shed
+            ));
+        }
+        if self.sub_retired != self.subs {
+            self.violate(format!(
+                "drained run: {} sub-requests minted, {} retired",
+                self.subs, self.sub_retired
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::testutil::{mk_req, open_budget, FixedEngine};
+    use crate::serving::{Batcher, RequestArena};
+
+    #[test]
+    fn double_route_is_a_violation() {
+        let mut a = RequestArena::new();
+        let id = a.alloc(mk_req(0, 0.0, 8, 2));
+        let mut chk = InvariantChecker::new(false);
+        chk.on_route(0.0, id, 0);
+        assert!(chk.violations().is_empty());
+        chk.on_route(0.1, id, 1);
+        assert_eq!(chk.violations().len(), 1);
+        assert!(chk.violations()[0].contains("routed while already"));
+    }
+
+    #[test]
+    fn retiring_an_unrouted_request_is_a_violation() {
+        let mut a = RequestArena::new();
+        let id = a.alloc(mk_req(0, 0.0, 8, 2));
+        let mut chk = InvariantChecker::new(false);
+        chk.on_retire(1.0, 0, id, false, &a);
+        assert!(chk.violations().iter().any(|v| v.contains("never enqueued")));
+    }
+
+    #[test]
+    fn a_backwards_clock_is_a_violation() {
+        let a = RequestArena::new();
+        let inst = [crate::serving::Instance::new(
+            Batcher::new(1, open_budget()),
+            Box::new(FixedEngine(0.1)),
+        )];
+        let mut chk = InvariantChecker::new(false);
+        chk.post_event(1.0, &InstanceEvent::StepDone(0), &inst, &a);
+        assert!(chk.violations().is_empty());
+        chk.post_event(0.5, &InstanceEvent::StepDone(0), &inst, &a);
+        assert!(chk.violations().iter().any(|v| v.contains("backwards")));
+        assert_eq!(chk.events(), 2);
+    }
+
+    #[test]
+    fn conservation_flags_a_phantom_enqueue() {
+        // The sim enqueues a request the checker never saw routed: the
+        // books disagree with the instance queues.
+        let mut a = RequestArena::new();
+        let id = a.alloc(mk_req(0, 0.0, 8, 2));
+        let mut inst = crate::serving::Instance::new(
+            Batcher::new(1, open_budget()),
+            Box::new(FixedEngine(0.1)),
+        );
+        inst.enqueue(id, &a);
+        let insts = [inst];
+        let mut chk = InvariantChecker::new(false);
+        chk.post_event(0.0, &InstanceEvent::Arrival(id), &insts, &a);
+        assert!(chk.violations().iter().any(|v| v.contains("conservation")));
+    }
+}

@@ -22,7 +22,9 @@
 //!   "measured silicon" analog for the paper's Appendix E validation,
 //!   and a cluster simulator (multi-instance routing + disaggregated
 //!   prefill/decode pools with KV shipping) for the scale-out scenarios
-//!   beyond the paper's single-box limit study.
+//!   beyond the paper's single-box limit study. The [`dst`] module
+//!   fuzzes that substrate deterministically: seeded scenario
+//!   generation, per-event invariant checking, and seed replay.
 //!
 //! ## Quickstart
 //!
@@ -44,6 +46,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod des;
+pub mod dst;
 pub mod experiments;
 pub mod hw;
 pub mod model;

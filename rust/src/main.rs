@@ -14,6 +14,7 @@
 //!               [--instances 4] [--router round-robin|least-tokens|slo]
 //!               [--disagg-prefill 2] [--kv-link-gbps 100]
 //! liminal validate [--artifacts artifacts]
+//! liminal dst [--seeds 50] [--start 0] [--seed N] [--verbose]
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -39,6 +40,7 @@ fn main() {
         Some("findings") => cmd_findings(),
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
+        Some("dst") => cmd_dst(&args),
         _ => {
             eprint!("{}", USAGE);
             2
@@ -69,6 +71,8 @@ USAGE:
                [--disagg-prefill P  (dedicated prefill instances; 0 = colocated)]
                [--kv-link-gbps G  (KV shipment bandwidth, gigabits/s; inf = ideal)]
   liminal validate [--artifacts DIR]
+  liminal dst [--seeds N  (default 50)] [--start S] [--seed X  (replay one)]
+               [--verbose]
 ";
 
 fn load_config(args: &Args) -> ConfigFile {
@@ -427,6 +431,70 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
+fn cmd_dst(args: &Args) -> i32 {
+    use liminal::dst;
+    if args.get("seed").is_some() {
+        // Replay a single seed (the CI-failure reproduction path).
+        let seed = args.get_parsed("seed", 0u64);
+        let case = dst::gen_case(seed);
+        let out = dst::run_case(&case);
+        if out.violations.is_empty() {
+            println!(
+                "seed {seed}: ok ({} offered, {} completed, {} shed, {} events)",
+                out.report.offered,
+                out.report.cluster.completed,
+                out.report.shed,
+                out.report.events,
+            );
+            return 0;
+        }
+        println!("seed {seed}: FAILED");
+        for v in &out.violations {
+            println!("  violation: {v}");
+        }
+        let min = dst::shrink(&case);
+        println!("shrunk case:\n{min:#?}");
+        return 1;
+    }
+    let seeds = args.get_parsed("seeds", 50u64);
+    let start = args.get_parsed("start", 0u64);
+    let verbose = args.flag("verbose");
+    let t0 = std::time::Instant::now();
+    let mut failures = Vec::new();
+    for seed in start..start.saturating_add(seeds) {
+        let case = dst::gen_case(seed);
+        let out = dst::run_case(&case);
+        if verbose {
+            println!(
+                "seed {seed}: {} ({} offered, {} completed, {} events)",
+                if out.violations.is_empty() { "ok" } else { "FAILED" },
+                out.report.offered,
+                out.report.cluster.completed,
+                out.report.events,
+            );
+        }
+        if !out.violations.is_empty() {
+            let minimized = dst::shrink(&case);
+            failures.push((seed, out.violations, minimized));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if failures.is_empty() {
+        println!("dst: {seeds} seeds passed (start {start}) in {wall:.2}s");
+        return 0;
+    }
+    for (seed, violations, minimized) in &failures {
+        println!("seed {seed} failed:");
+        for v in violations {
+            println!("  violation: {v}");
+        }
+        println!("  replay with: cargo run --release -- dst --seed {seed}");
+        println!("  shrunk case:\n{minimized:#?}");
+    }
+    println!("dst: {}/{seeds} seeds FAILED in {wall:.2}s", failures.len());
+    1
+}
+
 fn cmd_validate(args: &Args) -> i32 {
     let opts = liminal::experiments::ValidationOptions {
         artifact_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
@@ -448,7 +516,9 @@ fn cmd_validate(args: &Args) -> i32 {
 mod tests {
     #[test]
     fn usage_mentions_every_subcommand() {
-        for sub in ["list", "eval", "sweep", "experiment", "findings", "serve", "validate"] {
+        for sub in
+            ["list", "eval", "sweep", "experiment", "findings", "serve", "validate", "dst"]
+        {
             assert!(super::USAGE.contains(sub), "usage missing {sub}");
         }
     }

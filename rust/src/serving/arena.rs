@@ -66,6 +66,12 @@ impl RequestArena {
     pub fn is_empty(&self) -> bool {
         self.reqs.is_empty()
     }
+
+    /// Iterate every allocated request with its id, in allocation
+    /// order (the invariant checker's token-accounting sweep).
+    pub fn iter(&self) -> impl Iterator<Item = (ReqId, &Request)> {
+        self.reqs.iter().enumerate().map(|(i, r)| (ReqId(i as u32), r))
+    }
 }
 
 impl Index<ReqId> for RequestArena {

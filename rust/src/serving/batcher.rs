@@ -76,6 +76,11 @@ impl KvBudget {
         self.used_bytes = (self.used_bytes - self.bytes_for(r)).max(0.0);
     }
 
+    /// KV bytes currently reserved by admitted requests.
+    pub fn used_bytes(&self) -> f64 {
+        self.used_bytes
+    }
+
     /// Current utilization fraction.
     pub fn utilization(&self) -> f64 {
         if self.budget_bytes == 0.0 {
@@ -292,6 +297,16 @@ impl Batcher {
     /// routed-footprint accounting and KV-shipment sizing).
     pub fn kv_bytes_per_token(&self) -> f64 {
         self.kv.bytes_per_token
+    }
+
+    /// KV bytes currently reserved by the active batch.
+    pub fn kv_used_bytes(&self) -> f64 {
+        self.kv.used_bytes()
+    }
+
+    /// Total KV bytes the budget may reserve.
+    pub fn kv_budget_bytes(&self) -> f64 {
+        self.kv.budget_bytes
     }
 
     /// Configured prefill chunk (0 = decode-only mode).

@@ -183,6 +183,17 @@ impl<'e> Instance<'e> {
         self.outstanding_kv_bytes
     }
 
+    /// KV bytes actually reserved by the active batch (the invariant
+    /// `kv_used_bytes() <= kv_budget_bytes()` must hold at all times).
+    pub fn kv_used_bytes(&self) -> f64 {
+        self.batcher.kv_used_bytes()
+    }
+
+    /// Total KV bytes this instance's budget may reserve.
+    pub fn kv_budget_bytes(&self) -> f64 {
+        self.batcher.kv_budget_bytes()
+    }
+
     /// Generation tokens committed to the instance and not yet retired.
     pub fn outstanding_gen_tokens(&self) -> u64 {
         self.outstanding_gen_tokens

@@ -139,8 +139,16 @@ impl ServingReport {
         let completed: Vec<&Request> =
             reqs.clone().filter(|r| r.completed_at.is_some()).collect();
         let tokens: u64 = completed.iter().map(|r| r.generated).sum();
-        let first = reqs.map(|r| r.arrival).fold(f64::MAX, f64::min);
-        let span = (stats.end_time - first).max(1e-12);
+        let first = reqs.map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        // Regression (DST seed 1088): with no requests at all the fold
+        // leaves `first` at its sentinel and `end_time - first` used to
+        // collapse the span to the 1e-12 floor; an empty report's span
+        // is the simulated span itself.
+        let span = if first.is_finite() {
+            (stats.end_time - first).max(1e-12)
+        } else {
+            stats.end_time.max(1e-12)
+        };
 
         let mut utps: Vec<f64> = completed
             .iter()
@@ -176,8 +184,20 @@ impl ServingReport {
             span,
             stps: tokens as f64 / span,
             utps_mean,
-            utps_p50: percentile(&mut utps, 50.0),
-            utps_p99_low: percentile(&mut utps, 1.0),
+            // Regression (DST seed 1088): `percentile` of zero samples
+            // is NaN, which used to leak into every report with no
+            // completions (e.g. a deadline before the first arrival).
+            // Zero, matching `utps_mean` and `LatencyStats::zero()`.
+            utps_p50: if utps.is_empty() {
+                0.0
+            } else {
+                percentile(&mut utps, 50.0)
+            },
+            utps_p99_low: if utps.is_empty() {
+                0.0
+            } else {
+                percentile(&mut utps, 1.0)
+            },
             queue_delay_mean,
             ttft: LatencyStats::from_samples(&mut ttft),
             tpot: LatencyStats::from_samples(&mut tpot),
@@ -356,6 +376,60 @@ mod tests {
         };
         let rep = ServingReport::from_requests("t".into(), &[one_request()], &stats);
         assert!((rep.mean_batch - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_finite_with_zero_throughputs() {
+        // Regression (DST seed 1088, a deadline before the first
+        // arrival): a run with zero completions used to report NaN
+        // utps_p50/utps_p99_low (percentile of no samples) and, with no
+        // requests at all, a 1e-12 span (the f64::MAX arrival sentinel
+        // leaked into `end_time - first`).
+        let rep = ServingReport::from_requests(
+            "empty".into(),
+            &[],
+            &StepStats { end_time: 2.5, ..Default::default() },
+        );
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.tokens, 0);
+        assert_eq!(rep.utps_p50, 0.0);
+        assert_eq!(rep.utps_p99_low, 0.0);
+        assert!((rep.span - 2.5).abs() < 1e-12, "span {}", rep.span);
+        assert_eq!(rep.stps, 0.0);
+        for v in [
+            rep.span,
+            rep.stps,
+            rep.utps_mean,
+            rep.utps_p50,
+            rep.utps_p99_low,
+            rep.queue_delay_mean,
+            rep.mean_batch,
+            rep.ttft.mean,
+            rep.tpot.p99,
+            rep.e2e.p50,
+        ] {
+            assert!(v.is_finite(), "NaN/inf leaked into the empty report");
+        }
+    }
+
+    #[test]
+    fn uncompleted_requests_anchor_the_span_but_not_the_stats() {
+        // One offered-but-never-completed request: span still runs from
+        // its arrival (the load existed), while every latency stat stays
+        // finite and zero-sampled.
+        let mut r = one_request();
+        r.completed_at = None;
+        r.first_token_at = None;
+        r.arrival = 0.5;
+        let rep = ServingReport::from_requests(
+            "t".into(),
+            &[r],
+            &StepStats { end_time: 2.5, ..Default::default() },
+        );
+        assert_eq!(rep.completed, 0);
+        assert!((rep.span - 2.0).abs() < 1e-12);
+        assert_eq!(rep.utps_p50, 0.0);
+        assert_eq!(rep.ttft, LatencyStats::zero());
     }
 
     #[test]

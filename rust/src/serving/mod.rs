@@ -79,6 +79,7 @@ mod batcher;
 mod engine;
 mod instance;
 mod metrics;
+mod observe;
 mod pjrt_engine;
 mod request;
 mod sim;
@@ -91,6 +92,7 @@ pub use batcher::{Batcher, KvBudget};
 pub use engine::{AnalyticEngine, StepBatch, StepEngine};
 pub use instance::{Instance, InstanceEvent};
 pub use metrics::{percentile, LatencyStats, ServingReport, StepStats};
+pub use observe::{NoopObserver, SimObserver};
 pub use pjrt_engine::PjrtEngine;
 pub use request::{Request, WorkloadGen, WorkloadSpec};
 pub use sim::{ServingSim, SimConfig};

@@ -1,0 +1,84 @@
+//! Observation hooks for the simulators: a [`SimObserver`] is invited
+//! into [`ServingSim::run_with`](super::ServingSim::run_with) and
+//! [`crate::cluster::ClusterSim::run_with`] and sees every applied
+//! event, routing decision, and retirement as it happens.
+//!
+//! The trait exists for the deterministic simulation-testing harness
+//! ([`crate::dst`]): its invariant checker audits conservation, KV
+//! accounting, and clock monotonicity after every event without the
+//! simulators growing any test-only state. Every method has an empty
+//! default body and the simulators are generic over the observer, so
+//! the production entry points (`run`, which passes [`NoopObserver`])
+//! monomorphize to exactly the pre-hook code — the hot path pays
+//! nothing for the instrumentation.
+//!
+//! Hook order within one applied event: the lifecycle hooks
+//! ([`SimObserver::on_route`], [`SimObserver::on_shed`],
+//! [`SimObserver::on_sub_request`], [`SimObserver::on_retire`]) fire
+//! while the event is being applied, and [`SimObserver::post_event`]
+//! fires once at the end of the loop iteration — after the event *and*
+//! the step-boundary kick (admission + planning + pricing), so the
+//! observer sees the post-admission KV state the invariants constrain.
+
+use super::arena::{ReqId, RequestArena};
+use super::instance::{Instance, InstanceEvent};
+
+/// Passive observer of a simulation run; see the module docs. All
+/// methods default to no-ops so observers implement only what they
+/// audit.
+pub trait SimObserver {
+    /// An event was applied and the step-boundary kick that followed it
+    /// has run. `instances` is every instance of the simulation (one
+    /// for [`ServingSim`](super::ServingSim), N for the cluster).
+    fn post_event(
+        &mut self,
+        _now: f64,
+        _ev: &InstanceEvent,
+        _instances: &[Instance<'_>],
+        _arena: &RequestArena,
+    ) {
+    }
+
+    /// A front-door arrival was routed to `instance` (always 0 in the
+    /// single-instance simulator).
+    fn on_route(&mut self, _now: f64, _id: ReqId, _instance: usize) {}
+
+    /// A front-door arrival was shed by the router (cluster only).
+    fn on_shed(&mut self, _now: f64, _id: ReqId) {}
+
+    /// A disaggregated prefill pool cloned routed request `orig` into
+    /// pure-ingestion sub-request `sub` (cluster only). `orig` parks in
+    /// the arena until the sub-request's KV ships.
+    fn on_sub_request(&mut self, _now: f64, _orig: ReqId, _sub: ReqId) {}
+
+    /// Request `id` retired on `instance`. `lifecycle_done` is false
+    /// for a prefill pool's ingestion sub-request (the original request
+    /// lives on toward the decode pool) and true when the request's
+    /// full lifecycle completed.
+    fn on_retire(
+        &mut self,
+        _now: f64,
+        _instance: usize,
+        _id: ReqId,
+        _lifecycle_done: bool,
+        _arena: &RequestArena,
+    ) {
+    }
+
+    /// The run ended (drain, `max_steps`, or the `max_time` clamp) and
+    /// `end_time` is the span the report will use.
+    fn on_done(
+        &mut self,
+        _end_time: f64,
+        _instances: &[Instance<'_>],
+        _arena: &RequestArena,
+    ) {
+    }
+}
+
+/// The do-nothing observer the production `run` entry points pass to
+/// `run_with`; monomorphizes every hook away.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl SimObserver for NoopObserver {}

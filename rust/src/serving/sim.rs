@@ -34,6 +34,7 @@ use super::batcher::Batcher;
 use super::engine::StepEngine;
 use super::instance::{Instance, InstanceEvent};
 use super::metrics::ServingReport;
+use super::observe::{NoopObserver, SimObserver};
 use super::request::Request;
 
 /// Simulation parameters.
@@ -74,6 +75,19 @@ impl<'a> ServingSim<'a> {
     /// dense ids flow through the calendar and the instance, so the
     /// event loop allocates nothing in steady state.
     pub fn run(self, workload: Vec<Request>) -> ServingReport {
+        // The no-op observer monomorphizes every hook away, so this is
+        // exactly the pre-observer event loop.
+        self.run_with(workload, &mut NoopObserver)
+    }
+
+    /// [`ServingSim::run`] with a [`SimObserver`] watching every applied
+    /// event and retirement — the deterministic simulation-testing
+    /// harness ([`crate::dst`]) hooks its invariant checker in here.
+    pub fn run_with<O: SimObserver>(
+        self,
+        workload: Vec<Request>,
+        obs: &mut O,
+    ) -> ServingReport {
         let ServingSim { batcher, engine, cfg } = self;
         let mut q: EventQueue<InstanceEvent> = EventQueue::new();
         let mut arena = RequestArena::with_capacity(workload.len());
@@ -95,11 +109,17 @@ impl<'a> ServingSim<'a> {
             }
             let (now, ev) = q.next().expect("peeked event is still queued");
             match ev {
-                InstanceEvent::Arrival(id) | InstanceEvent::KvArrive(_, id) => {
-                    inst.enqueue(id, &arena)
+                InstanceEvent::Arrival(id) => {
+                    // The lone instance is the whole front door.
+                    obs.on_route(now, id, 0);
+                    inst.enqueue(id, &arena);
                 }
+                InstanceEvent::KvArrive(_, id) => inst.enqueue(id, &arena),
                 InstanceEvent::StepDone(_) => {
-                    inst.step_done(now, &mut arena);
+                    let retired = inst.step_done(now, &mut arena);
+                    for &id in retired {
+                        obs.on_retire(now, 0, id, true, &arena);
+                    }
                 }
             }
             if inst.steps() >= cfg.max_steps {
@@ -110,6 +130,7 @@ impl<'a> ServingSim<'a> {
             if let Some(dt) = inst.kick(now, &mut arena) {
                 q.schedule_in(dt, InstanceEvent::StepDone(0));
             }
+            obs.post_event(now, &ev, std::slice::from_ref(&inst), &arena);
         }
 
         let name = inst.engine_name();
@@ -118,6 +139,7 @@ impl<'a> ServingSim<'a> {
         // itself (exactly what the pop-and-discard loop reported).
         let end_time =
             if deadline_hit { cfg.max_time } else { q.now().min(cfg.max_time) };
+        obs.on_done(end_time, std::slice::from_ref(&inst), &arena);
         inst.report(name, end_time, &arena)
     }
 }

@@ -40,6 +40,11 @@ impl WorkloadTrace {
     /// Parse trace text. The first non-empty line decides the format:
     /// `{`-prefixed means JSONL, anything else CSV.
     pub fn parse(text: &str) -> Result<Vec<Request>> {
+        // Tolerate a UTF-8 byte-order mark (Excel-exported CSV, some
+        // JSONL writers): without stripping it the sniffer saw
+        // `\u{feff}{` instead of `{` and misparsed JSONL as CSV, and a
+        // BOM'd CSV header failed the literal `arrival` match.
+        let text = text.strip_prefix('\u{feff}').unwrap_or(text);
         let first = text.lines().map(str::trim).find(|l| !l.is_empty());
         let mut records = match first {
             None => anyhow::bail!("trace contains no records"),
@@ -229,6 +234,62 @@ mod tests {
         assert!(WorkloadTrace::parse("0.0,100,0\n").is_err(), "zero gen_len");
         assert!(WorkloadTrace::parse("").is_err(), "empty trace");
         assert!(WorkloadTrace::parse("arrival,context_len,gen_len\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_timestamps_keep_file_order() {
+        // Simultaneous arrivals must replay in file order (stable sort),
+        // so a trace with tied timestamps is still deterministic.
+        let text = "0.5,111,10\n0.5,222,10\n0.0,333,10\n0.5,444,10\n";
+        let reqs = WorkloadTrace::parse(text).unwrap();
+        assert_eq!(
+            reqs.iter().map(|r| r.context_len).collect::<Vec<_>>(),
+            vec![333, 111, 222, 444]
+        );
+        assert_eq!(
+            reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn trailing_newlines_and_crlf_parse() {
+        // CRLF line endings and trailing blank lines (the usual state
+        // of an exported CSV) must not add phantom records or errors.
+        let text = "arrival,context_len,gen_len\r\n0.1,512,32\r\n0.2,1024,64\r\n\r\n\n";
+        let reqs = WorkloadTrace::parse(text).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[1].context_len, 1024);
+        let jsonl = "{\"arrival\": 0.0, \"context_len\": 8, \"gen_len\": 2}\n\n";
+        assert_eq!(WorkloadTrace::parse(jsonl).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn utf8_bom_is_stripped_before_sniffing() {
+        // Regression (DST trace fuzzing): a BOM'd JSONL trace was
+        // sniffed as CSV (first char != '{') and a BOM'd CSV header
+        // failed the literal `arrival` match — both erred on line 1.
+        let jsonl =
+            "\u{feff}{\"arrival\": 0.0, \"context_len\": 8, \"gen_len\": 2}\n";
+        let reqs = WorkloadTrace::parse(jsonl).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].context_len, 8);
+        let csv = "\u{feff}arrival,context_len,gen_len\n0.1,512,32\n";
+        let reqs = WorkloadTrace::parse(csv).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].gen_len, 32);
+    }
+
+    #[test]
+    fn zero_token_rows_error_with_their_line_number() {
+        let err = WorkloadTrace::parse("0.0,100,10\n0.1,100,0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("gen_len"), "{err}");
+        // Zero-length *prompts* are legal (decode-only requests).
+        let reqs = WorkloadTrace::parse("0.0,0,10\n").unwrap();
+        assert_eq!(reqs[0].context_len, 0);
     }
 
     #[test]
