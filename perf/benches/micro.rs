@@ -4,11 +4,15 @@
 //! min/median/mean per iteration and appends a JSON row to
 //! `target/liminal-bench.jsonl`.
 //!
-//! These isolate the four costs the arena refactor targets: calendar
-//! push/pop, batch planning, analytic step pricing, and request-state
-//! churn. The macro numbers (whole cluster runs) live in
-//! `perf-report`; regressions caught here localize which layer moved.
+//! These isolate the costs the arena and calendar-queue refactors
+//! target: calendar push/pop (including a side-by-side binary-heap
+//! reference and a bimodal-schedule-time stress), batch planning,
+//! analytic step pricing, and request-state churn. The macro numbers
+//! (whole cluster runs) live in `perf-report`; regressions caught here
+//! localize which layer moved.
 
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 use std::hint::black_box;
 
 use liminal::apps::Registry;
@@ -18,6 +22,71 @@ use liminal::serving::{
     AnalyticEngine, Batcher, KvBudget, Request, RequestArena, StepEngine,
 };
 use liminal::util::bench::Suite;
+
+/// The pre-calendar binary-heap scheduler, kept verbatim as the
+/// comparison baseline for the `des/*` benches (the property test in
+/// `rust/tests/property_des.rs` pins the two to identical behavior;
+/// this pins the speed ratio).
+struct HeapScheduled {
+    at: f64,
+    seq: u64,
+    event: u32,
+}
+impl PartialEq for HeapScheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for HeapScheduled {}
+impl PartialOrd for HeapScheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapScheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct HeapQueue {
+    heap: BinaryHeap<HeapScheduled>,
+    now: f64,
+    seq: u64,
+}
+impl HeapQueue {
+    fn new() -> HeapQueue {
+        HeapQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+    fn schedule_at(&mut self, at: f64, event: u32) {
+        self.heap.push(HeapScheduled {
+            at: at.max(self.now),
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+    fn next(&mut self) -> Option<(f64, u32)> {
+        let s = self.heap.pop()?;
+        self.now = s.at;
+        Some((s.at, s.event))
+    }
+}
+
+/// Bimodal schedule times — most events a short hop past now, a tail
+/// two decades farther out — the shape that stresses the calendar's
+/// overflow rung and respan policy, interleaved schedule/pop like a
+/// live DES.
+fn bimodal_at(now: f64, i: u32) -> f64 {
+    if i % 16 == 0 {
+        now + 100.0 + f64::from(i % 7)
+    } else {
+        now + 0.001 * f64::from(i % 97)
+    }
+}
 
 fn req(id: u64, ctx: u64, gen: u64) -> Request {
     Request {
@@ -44,6 +113,50 @@ fn main() {
         }
         while let Some(ev) = q.next() {
             black_box(ev);
+        }
+    });
+
+    // The same workload on the old binary heap: the heap-vs-calendar
+    // ratio is the headline number of the scheduler swap.
+    suite.bench("des/heap_reference_push_pop_1k", || {
+        let mut q = HeapQueue::new();
+        for i in 0..1000u32 {
+            q.schedule_at(f64::from(i % 97), i);
+        }
+        while let Some(ev) = q.next() {
+            black_box(ev);
+        }
+    });
+
+    // Bimodal interleaved schedule/pop: ~500 resident events, every pop
+    // schedules a successor, 1 in 16 lands far out on the overflow rung.
+    suite.bench("des/event_queue_bimodal_interleaved_8k", || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..500u32 {
+            q.schedule_at(bimodal_at(0.0, i), i);
+        }
+        let mut i = 500u32;
+        while let Some((t, e)) = q.next() {
+            black_box(e);
+            if i < 8000 {
+                q.schedule_at(bimodal_at(t, i), i);
+                i += 1;
+            }
+        }
+    });
+
+    suite.bench("des/heap_reference_bimodal_interleaved_8k", || {
+        let mut q = HeapQueue::new();
+        for i in 0..500u32 {
+            q.schedule_at(bimodal_at(0.0, i), i);
+        }
+        let mut i = 500u32;
+        while let Some((t, e)) = q.next() {
+            black_box(e);
+            if i < 8000 {
+                q.schedule_at(bimodal_at(t, i), i);
+                i += 1;
+            }
         }
     });
 

@@ -1,14 +1,27 @@
 //! `perf-report`: the macro half of the tracked performance suite.
 //!
-//! Runs the cluster simulator end to end on fixed, seeded scenarios
-//! (1, 8, and 64 colocated instances of llama3-70b on an HBM3 TP-8
-//! system), measures wall-clock per run, and reports DES throughput as
+//! Runs the cluster simulator end to end on fixed, seeded scenarios,
+//! measures wall-clock per run, and reports DES throughput as
 //! **events/second** plus the time-compression ratio
 //! (**simulated seconds per wall second**). The workload is identical
 //! across trials (same seed), so trial-to-trial spread is pure
 //! machine noise and the p50 is a stable tracking number.
 //!
-//! Output is the `liminal-perf/v1` JSON schema documented in
+//! Two scenario kinds separate the two things this PR sequence
+//! optimizes:
+//!
+//! * **Colocated 1/8/64-instance cells** run a single DES on one core —
+//!   they track the scheduler itself (`jobs` is always 1, so a
+//!   calendar-queue win shows here undiluted).
+//! * **`grid-2r-124x`** runs a whole cluster-sweep grid
+//!   (`run_cluster_grid`: instance counts 1/2/4 x two routers) through
+//!   the `parallel_map` fan-out — it tracks grid-level parallel
+//!   scaling on top of the scheduler (`jobs` records the worker
+//!   count, and `sim_s_per_wall_s` aggregates across concurrent
+//!   cells, so it exceeds the single-cell ratio when the fan-out is
+//!   actually running cells concurrently).
+//!
+//! Output is the `liminal-perf/v2` JSON schema documented in
 //! `perf/README.md`. Modes:
 //!
 //! * `perf-report --out BENCH_perf.json` — refresh the baseline.
@@ -20,10 +33,12 @@
 
 use std::time::Instant;
 
-use liminal::coordinator::{default_cluster_job, serve_cluster, ClusterJob};
+use liminal::coordinator::{default_cluster_job, serve_cluster, ClusterJob, RouterPolicy};
 use liminal::hw::{presets, SystemConfig};
 use liminal::serving::{percentile, WorkloadSpec};
+use liminal::sweep::{run_cluster_grid, ClusterGrid};
 use liminal::util::json::Json;
+use liminal::util::par::default_jobs;
 
 struct Opts {
     short: bool,
@@ -65,20 +80,35 @@ fn parse_args() -> Opts {
     opts
 }
 
-/// One macro scenario: a colocated cluster at a fixed request rate per
-/// instance, so every size runs at the same per-instance load and the
-/// scaling axis isolates the simulator's own overhead.
-struct Scenario {
-    name: &'static str,
-    instances: usize,
+/// What one macro scenario runs per trial.
+enum Kind {
+    /// One colocated cluster cell on one core: tracks the scheduler.
+    Colocated { instances: usize },
+    /// A full `run_cluster_grid` sweep through the parallel fan-out:
+    /// tracks grid throughput and parallel scaling.
+    Grid,
 }
 
-const SCENARIOS: [Scenario; 3] = [
-    Scenario { name: "colocated-1x", instances: 1 },
-    Scenario { name: "colocated-8x", instances: 8 },
-    Scenario { name: "colocated-64x", instances: 64 },
+struct Scenario {
+    name: &'static str,
+    kind: Kind,
+}
+
+const SCENARIOS: [Scenario; 4] = [
+    Scenario { name: "colocated-1x", kind: Kind::Colocated { instances: 1 } },
+    Scenario { name: "colocated-8x", kind: Kind::Colocated { instances: 8 } },
+    Scenario { name: "colocated-64x", kind: Kind::Colocated { instances: 64 } },
+    Scenario { name: "grid-2r-124x", kind: Kind::Grid },
 ];
 
+/// Instance counts and router count of the grid scenario.
+const GRID_COUNTS: [usize; 3] = [1, 2, 4];
+const GRID_ROUTERS: [RouterPolicy; 2] =
+    [RouterPolicy::RoundRobin, RouterPolicy::LeastTokens];
+
+/// A colocated cluster cell at a fixed request rate per instance, so
+/// every size runs at the same per-instance load and the scaling axis
+/// isolates the simulator's own overhead.
 fn scenario_job(instances: usize, reqs_per_instance: u64) -> ClusterJob {
     let mut job = default_cluster_job(
         "llama3-70b",
@@ -97,13 +127,28 @@ fn scenario_job(instances: usize, reqs_per_instance: u64) -> ClusterJob {
     job
 }
 
+/// The grid scenario: scale-load cells over `GRID_COUNTS x GRID_ROUTERS`
+/// with the same per-instance pressure as the colocated scenarios.
+fn scenario_grid(reqs_per_instance: u64) -> ClusterGrid {
+    ClusterGrid {
+        base: scenario_job(1, reqs_per_instance),
+        instance_counts: GRID_COUNTS.to_vec(),
+        routers: GRID_ROUTERS.to_vec(),
+        scale_load: true,
+    }
+}
+
 struct ScenarioResult {
     name: &'static str,
     instances: usize,
     requests: u64,
+    /// Workers driving the scenario (1 for single-cell scenarios, the
+    /// `parallel_map` worker count for the grid fan-out).
+    jobs: usize,
     /// DES events applied per run (identical across trials: the
     /// workload is seeded and the simulator is deterministic).
     events: u64,
+    wall_s: Vec<f64>,
     events_per_sec: Vec<f64>,
     sim_s_per_wall_s: Vec<f64>,
 }
@@ -111,20 +156,44 @@ struct ScenarioResult {
 fn run_scenario(s: &Scenario, trials: usize, reqs_per_instance: u64) -> ScenarioResult {
     let mut res = ScenarioResult {
         name: s.name,
-        instances: s.instances,
-        requests: reqs_per_instance * s.instances as u64,
+        instances: 0,
+        requests: 0,
+        jobs: 1,
         events: 0,
+        wall_s: Vec::with_capacity(trials),
         events_per_sec: Vec::with_capacity(trials),
         sim_s_per_wall_s: Vec::with_capacity(trials),
     };
     for _ in 0..trials {
-        let job = scenario_job(s.instances, reqs_per_instance);
-        let t0 = Instant::now();
-        let rep = serve_cluster(&job).expect("scenario job runs");
-        let wall = t0.elapsed().as_secs_f64().max(1e-9);
-        res.events = rep.events;
-        res.events_per_sec.push(rep.events as f64 / wall);
-        res.sim_s_per_wall_s.push(rep.cluster.span / wall);
+        match s.kind {
+            Kind::Colocated { instances } => {
+                let job = scenario_job(instances, reqs_per_instance);
+                res.instances = instances;
+                res.requests = job.workload.n_requests;
+                let t0 = Instant::now();
+                let rep = serve_cluster(&job).expect("scenario job runs");
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                res.events = rep.events;
+                res.wall_s.push(wall);
+                res.events_per_sec.push(rep.events as f64 / wall);
+                res.sim_s_per_wall_s.push(rep.cluster.span / wall);
+            }
+            Kind::Grid => {
+                let grid = scenario_grid(reqs_per_instance);
+                let cells: usize = GRID_COUNTS.len() * GRID_ROUTERS.len();
+                res.instances = GRID_COUNTS.iter().sum();
+                res.jobs = default_jobs().min(cells);
+                let t0 = Instant::now();
+                let recs = run_cluster_grid(&grid).expect("grid scenario runs");
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                res.requests = recs.iter().map(|r| r.completed + r.shed).sum();
+                res.events = recs.iter().map(|r| r.events).sum();
+                let span: f64 = recs.iter().map(|r| r.span).sum();
+                res.wall_s.push(wall);
+                res.events_per_sec.push(res.events as f64 / wall);
+                res.sim_s_per_wall_s.push(span / wall);
+            }
+        }
     }
     res
 }
@@ -138,7 +207,7 @@ fn dist_json(samples: &[f64]) -> Json {
 
 fn report_json(results: &[ScenarioResult], short: bool) -> Json {
     Json::obj(vec![
-        ("schema", Json::Str("liminal-perf/v1".into())),
+        ("schema", Json::Str("liminal-perf/v2".into())),
         ("mode", Json::Str(if short { "short" } else { "full" }.into())),
         ("provisional", Json::Bool(false)),
         (
@@ -155,7 +224,9 @@ fn report_json(results: &[ScenarioResult], short: bool) -> Json {
                                 "trials",
                                 Json::Num(r.events_per_sec.len() as f64),
                             ),
+                            ("jobs", Json::Num(r.jobs as f64)),
                             ("events", Json::Num(r.events as f64)),
+                            ("wall_s", dist_json(&r.wall_s)),
                             ("events_per_sec", dist_json(&r.events_per_sec)),
                             (
                                 "sim_s_per_wall_s",
@@ -230,13 +301,17 @@ fn main() {
         let r = run_scenario(s, trials, reqs_per_instance);
         let mut eps = r.events_per_sec.clone();
         let mut spw = r.sim_s_per_wall_s.clone();
+        let mut wall = r.wall_s.clone();
         println!(
-            "{:<14} {:>3} inst  {:>6} reqs  {:>9} events  \
-             p50 {:>10.0} events/s  p99 {:>10.0}  {:>8.1} sim-s/wall-s",
+            "{:<14} {:>3} inst  {:>6} reqs  {:>9} events  jobs {:>2}  \
+             wall_s {:>7.3}  p50 {:>10.0} events/s  p99 {:>10.0}  \
+             {:>8.1} sim-s/wall-s",
             r.name,
             r.instances,
             r.requests,
             r.events,
+            r.jobs,
+            percentile(&mut wall, 50.0),
             percentile(&mut eps, 50.0),
             percentile(&mut eps, 99.0),
             percentile(&mut spw, 50.0),

@@ -1,15 +1,63 @@
 //! Discrete-event simulation substrate for the serving simulator.
 //!
-//! A classic event-calendar design: a monotonically non-decreasing
-//! simulated clock and a binary-heap calendar of `(time, seq, event)`
-//! entries. The `seq` tiebreaker makes simultaneous events fire in
-//! insertion order, so runs are fully deterministic.
+//! # The calendar-queue scheduler
+//!
+//! The calendar is an index-addressed ladder/calendar queue instead of
+//! a comparison heap: a **near-future wheel** of equal-width time
+//! buckets plus a **sorted-on-demand overflow rung** for events beyond
+//! the wheel's horizon, and a FIFO **never list** for `+inf` ("never")
+//! sentinels. A DES schedules almost every event a short, clustered
+//! distance past `now`, so the wheel absorbs nearly all traffic at
+//! O(1) amortized per schedule/pop — an index computation and a push —
+//! where a binary heap pays an O(log n) sift both ways.
+//!
+//! * **Wheel** — `buckets[i]` holds events with
+//!   `bucket_start + i*width <= at < bucket_start + (i+1)*width`.
+//!   Buckets are unsorted until the drain cursor reaches them; the
+//!   current bucket is kept sorted (descending, so `pop()` from the
+//!   back yields the minimum) and in-cursor inserts use a binary
+//!   search. Events landing at or before the cursor's bucket (the
+//!   clamp-to-`now` path) are folded into the current bucket — the
+//!   sort order inside it, not the bucket index, is what fires them
+//!   first.
+//! * **Overflow rung** — events at or past the horizon wait in an
+//!   unsorted vector. When the wheel drains, the queue **respans**:
+//!   the wheel is rebuilt over the overflow's `[min, max]` time range
+//!   with `bucket_count = next_power_of_two(pending)` clamped to
+//!   `[4, 65536]` and `width = span / bucket_count` (1.0 when the span
+//!   degenerates to a point). This is the whole resize policy: bucket
+//!   count and width adapt to the live population once per respan, so
+//!   a million pre-scheduled arrivals and a lone timer both get a
+//!   sensibly-sized wheel, and there is no incremental re-hashing on
+//!   the hot path.
+//! * **Never list** — `+inf` models "never"; those events go to a FIFO
+//!   queue drained only after every finite event, in insertion order.
+//!
+//! # Determinism
+//!
+//! Ordering is *identical* to the previous binary-heap calendar: the
+//! global firing order is `(at, seq)` lexicographic, where `seq` is
+//! the insertion counter. Within a bucket that order is enforced by
+//! the descending `(at, seq)` sort (ties keep insertion order because
+//! `seq` is unique and monotone); across buckets it holds because the
+//! bucket index is monotone in `at` and cursor-clamped inserts are
+//! binary-searched into the sorted current bucket. `total_cmp` keeps
+//! the sort total for exotic floats, and NaN is rejected at the
+//! `schedule_at` boundary, so no unordered value ever reaches a
+//! comparison. The bit-identical-report regression tests and the DST
+//! harness pin this equivalence.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::VecDeque;
 
 /// Simulated time in seconds.
 pub type SimTime = f64;
+
+/// Smallest wheel built by a respan.
+const MIN_BUCKETS: usize = 4;
+/// Largest wheel built by a respan (caps memory and empty-bucket scan
+/// cost; beyond this, buckets just hold more than one event each).
+const MAX_BUCKETS: usize = 1 << 16;
 
 /// One scheduled event.
 struct Scheduled<E> {
@@ -18,34 +66,32 @@ struct Scheduled<E> {
     event: E,
 }
 
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<E> Eq for Scheduled<E> {}
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse: BinaryHeap is a max-heap, we want earliest-first.
-        // `total_cmp` keeps the order total even for exotic floats; a
-        // `partial_cmp().unwrap_or(Equal)` fallback would silently
-        // corrupt the heap invariant if a NaN ever reached it. NaN is
-        // additionally rejected at the `schedule_at` boundary.
-        other
-            .at
-            .total_cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
+/// Descending `(at, seq)` order, so a sorted bucket pops its minimum
+/// from the back in O(1).
+fn desc<E>(a: &Scheduled<E>, b: &Scheduled<E>) -> Ordering {
+    b.at.total_cmp(&a.at).then_with(|| b.seq.cmp(&a.seq))
 }
 
 /// The event calendar.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    /// Near-future wheel; see the module docs.
+    buckets: Vec<Vec<Scheduled<E>>>,
+    /// Lower time edge of `buckets[0]`.
+    bucket_start: SimTime,
+    /// Bucket width in simulated seconds (`> 0` once spanned).
+    width: SimTime,
+    /// First time not covered by the wheel (`-inf` before any respan,
+    /// so everything routes to the overflow rung).
+    horizon: SimTime,
+    /// Drain cursor: when `wheel_len > 0`, `buckets[cur]` is nonempty
+    /// and sorted descending, and every bucket before it is empty.
+    cur: usize,
+    /// Events currently in the wheel.
+    wheel_len: usize,
+    /// Finite events at or past the horizon, unsorted.
+    overflow: Vec<Scheduled<E>>,
+    /// `+inf` events, FIFO.
+    never: VecDeque<Scheduled<E>>,
     now: SimTime,
     seq: u64,
     fired: u64,
@@ -54,7 +100,19 @@ pub struct EventQueue<E> {
 impl<E> EventQueue<E> {
     /// Empty calendar at t = 0.
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, fired: 0 }
+        EventQueue {
+            buckets: Vec::new(),
+            bucket_start: 0.0,
+            width: 0.0,
+            horizon: f64::NEG_INFINITY,
+            cur: 0,
+            wheel_len: 0,
+            overflow: Vec::new(),
+            never: VecDeque::new(),
+            now: 0.0,
+            seq: 0,
+            fired: 0,
+        }
     }
 
     /// Current simulated time.
@@ -84,8 +142,19 @@ impl<E> EventQueue<E> {
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
         assert!(!at.is_nan(), "schedule_at: NaN event time");
         assert!(at >= 0.0, "schedule_at: negative event time {at}");
-        self.heap.push(Scheduled { at: at.max(self.now), seq: self.seq, event });
+        let at = at.max(self.now);
+        let seq = self.seq;
         self.seq += 1;
+        let s = Scheduled { at, seq, event };
+        if at == f64::INFINITY {
+            // "Never" sentinels: after every finite event, in insertion
+            // order — exactly the (at, seq) order with at = +inf.
+            self.never.push_back(s);
+        } else if at < self.horizon {
+            self.insert_wheel(s);
+        } else {
+            self.overflow.push(s);
+        }
     }
 
     /// Schedule `event` `delay` seconds from now.
@@ -95,7 +164,19 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock to its timestamp.
     pub fn next(&mut self) -> Option<(SimTime, E)> {
-        let s = self.heap.pop()?;
+        if self.wheel_len == 0 && !self.overflow.is_empty() {
+            self.respan();
+        }
+        let s = if self.wheel_len > 0 {
+            let s = self.buckets[self.cur].pop().expect("cursor bucket nonempty");
+            self.wheel_len -= 1;
+            if self.buckets[self.cur].is_empty() && self.wheel_len > 0 {
+                self.advance_cursor();
+            }
+            s
+        } else {
+            self.never.pop_front()?
+        };
         self.now = s.at;
         self.fired += 1;
         Some((s.at, s.event))
@@ -106,17 +187,121 @@ impl<E> EventQueue<E> {
     /// Lets a driver enforce a deadline *before* consuming the event —
     /// `max_time` clamping without pop-and-discard.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|s| s.at)
+        if self.wheel_len > 0 {
+            // Cursor invariant: sorted descending, min at the back.
+            return self.buckets[self.cur].last().map(|s| s.at);
+        }
+        if !self.overflow.is_empty() {
+            // Wheel drained, rung not yet respanned: one O(n) scan at
+            // most per respan (the following `next` rebuilds the wheel
+            // and restores O(1) peeks).
+            return self
+                .overflow
+                .iter()
+                .map(|s| s.at)
+                .min_by(f64::total_cmp);
+        }
+        if !self.never.is_empty() {
+            return Some(f64::INFINITY);
+        }
+        None
     }
 
     /// Whether anything is pending.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.wheel_len + self.overflow.len() + self.never.len()
+    }
+
+    /// Bucket index for a wheel-bound time (`at < horizon`). Monotone
+    /// in `at`; float-edge roundoff is clamped into range, and times at
+    /// or before the cursor's bucket fold into the current bucket,
+    /// where the sort (not the index) orders them.
+    fn bucket_index(&self, at: SimTime) -> usize {
+        // A negative offset (at < bucket_start, possible right after a
+        // respan scheduled from an earlier `now`) saturates to 0.
+        let idx = ((at - self.bucket_start) / self.width) as usize;
+        let idx = idx.min(self.buckets.len() - 1);
+        if self.wheel_len > 0 {
+            idx.max(self.cur)
+        } else {
+            idx
+        }
+    }
+
+    fn insert_wheel(&mut self, s: Scheduled<E>) {
+        let idx = self.bucket_index(s.at);
+        if self.wheel_len == 0 {
+            // Empty wheel: re-aim the cursor; a single event is
+            // trivially sorted.
+            self.cur = idx;
+            self.buckets[idx].push(s);
+        } else if idx == self.cur {
+            // The current bucket is sorted descending; binary-insert.
+            // `seq` is monotone, so among equal times the new event
+            // belongs in front of (= pops after) its elders.
+            let pos = self.buckets[idx]
+                .partition_point(|e| e.at.total_cmp(&s.at) == Ordering::Greater);
+            self.buckets[idx].insert(pos, s);
+        } else {
+            self.buckets[idx].push(s);
+        }
+        self.wheel_len += 1;
+    }
+
+    /// Move the cursor to the next nonempty bucket and sort it. Only
+    /// called with `wheel_len > 0`, so termination is guaranteed.
+    fn advance_cursor(&mut self) {
+        loop {
+            self.cur += 1;
+            if !self.buckets[self.cur].is_empty() {
+                break;
+            }
+        }
+        self.buckets[self.cur].sort_unstable_by(desc);
+    }
+
+    /// Rebuild the wheel over the overflow rung's time range; see the
+    /// module docs for the sizing policy.
+    fn respan(&mut self) {
+        debug_assert!(self.wheel_len == 0 && !self.overflow.is_empty());
+        let m = self.overflow.len();
+        let n = m.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let mut t_min = f64::INFINITY;
+        let mut t_max = f64::NEG_INFINITY;
+        for s in &self.overflow {
+            t_min = t_min.min(s.at);
+            t_max = t_max.max(s.at);
+        }
+        self.bucket_start = t_min;
+        let span = t_max - t_min;
+        self.width = span / n as f64;
+        if !(self.width.is_finite() && self.width > 0.0) {
+            // Point span (or underflow): any positive width works, all
+            // events land in bucket 0.
+            self.width = 1.0;
+        }
+        self.horizon = self.bucket_start + self.width * n as f64;
+        if self.buckets.len() != n {
+            self.buckets.resize_with(n, Vec::new);
+        }
+        let mut ov = std::mem::take(&mut self.overflow);
+        for s in ov.drain(..) {
+            let idx = (((s.at - self.bucket_start) / self.width) as usize).min(n - 1);
+            self.buckets[idx].push(s);
+        }
+        self.overflow = ov; // keep the rung's allocation
+        self.wheel_len = m;
+        self.cur = self
+            .buckets
+            .iter()
+            .position(|b| !b.is_empty())
+            .expect("respan moved events into the wheel");
+        self.buckets[self.cur].sort_unstable_by(desc);
     }
 }
 
@@ -179,7 +364,7 @@ mod tests {
     #[test]
     fn infinite_times_sort_last() {
         // +inf is a legal "never" sentinel; it must sort after every
-        // finite event instead of corrupting the heap.
+        // finite event instead of corrupting the calendar.
         let mut q = EventQueue::new();
         q.schedule_at(f64::INFINITY, "never");
         q.schedule_at(1.0, "a");
@@ -248,5 +433,93 @@ mod tests {
         }
         assert_eq!(seen, 4);
         assert_eq!(q.now(), 4.0);
+    }
+
+    #[test]
+    fn empty_refill_cycles_respan_cleanly() {
+        // Drain the wheel completely, then schedule again: each refill
+        // must respan and keep ordering, across very different scales.
+        let mut q = EventQueue::new();
+        for round in 0..5u32 {
+            let base = q.now();
+            let scale = 10f64.powi(round as i32 * 2) * 1e-3;
+            for i in (0..20).rev() {
+                q.schedule_at(base + i as f64 * scale, (round, i));
+            }
+            for i in 0..20 {
+                let (_, e) = q.next().unwrap();
+                assert_eq!(e, (round, i), "round {round}");
+            }
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn far_future_events_pass_through_the_overflow_rung() {
+        // A bimodal schedule: a near cluster inside the wheel and a far
+        // tail beyond any horizon the first respan could build.
+        let mut q = EventQueue::new();
+        for i in 0..50u64 {
+            q.schedule_at(1e6 + i as f64, 1000 + i); // far tail first
+        }
+        for i in 0..50u64 {
+            q.schedule_at(i as f64 * 0.01, i); // near cluster
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        let expect: Vec<u64> = (0..50).chain(1000..1050).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn interleaved_pops_and_schedules_keep_global_order() {
+        // Steady-state DES shape: every pop schedules a follow-up a
+        // short distance ahead; (time, seq) order must hold throughout.
+        let mut q = EventQueue::new();
+        for i in 0..8u64 {
+            q.schedule_at(i as f64 * 0.125, i);
+        }
+        let mut last_t = 0.0f64;
+        let mut popped = 0u64;
+        let mut scheduled = 8u64;
+        while let Some((t, e)) = q.next() {
+            assert!(t >= last_t, "time went backwards: {t} < {last_t}");
+            last_t = t;
+            popped += 1;
+            if scheduled < 200 {
+                q.schedule_in(0.1 + (e % 7) as f64 * 0.03, e + 8);
+                scheduled += 1;
+            }
+        }
+        assert_eq!(popped, 200);
+        assert_eq!(q.fired(), 200);
+    }
+
+    #[test]
+    fn point_span_respan_handles_identical_times() {
+        // All overflow events at one instant: span = 0 forces the
+        // degenerate-width path; FIFO order must survive.
+        let mut q = EventQueue::new();
+        for i in 0..10u64 {
+            q.schedule_at(42.0, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.next()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+        assert_eq!(q.now(), 42.0);
+    }
+
+    #[test]
+    fn finite_events_scheduled_after_an_infinite_pop_stay_ordered() {
+        // Once a "never" event fires, now == +inf; later schedules
+        // clamp to +inf and drain in insertion order, like the heap did.
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, "first-never");
+        q.schedule_at(1.0, "finite");
+        assert_eq!(q.next().unwrap().1, "finite");
+        assert_eq!(q.next().unwrap().1, "first-never");
+        assert_eq!(q.now(), f64::INFINITY);
+        q.schedule_at(5.0, "late-a");
+        q.schedule_at(7.0, "late-b");
+        assert_eq!(q.next().unwrap().1, "late-a");
+        assert_eq!(q.next().unwrap().1, "late-b");
     }
 }

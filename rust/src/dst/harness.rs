@@ -6,6 +6,7 @@
 
 use crate::cluster::ClusterReport;
 use crate::serving::{Batcher, ServingSim, SimConfig};
+use crate::util::par::parallel_map_jobs;
 
 use super::gen::{gen_case, FuzzCase, RouterKind};
 use super::invariant::InvariantChecker;
@@ -53,21 +54,64 @@ pub fn run_seed(seed: u64) -> CaseOutcome {
 }
 
 /// Fuzz `count` consecutive seeds starting at `start`; returns the
-/// failures, each with a shrunk reproducer.
+/// failures, each with a shrunk reproducer, in ascending seed order.
 pub fn fuzz_range(start: u64, count: u64) -> Vec<FuzzFailure> {
-    let mut failures = Vec::new();
-    for seed in start..start.saturating_add(count) {
+    fuzz_scan(start, count, 1)
+        .into_iter()
+        .filter_map(|s| s.failure)
+        .collect()
+}
+
+/// One fuzzed seed's result: the run's headline counters plus the
+/// failure (with shrunk reproducer) if the seed violated anything.
+#[derive(Debug)]
+pub struct SeedSummary {
+    /// The seed.
+    pub seed: u64,
+    /// Requests offered by the generated case.
+    pub offered: u64,
+    /// Requests the run completed.
+    pub completed: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// DES events the run applied.
+    pub events: u64,
+    /// Present iff the seed failed.
+    pub failure: Option<FuzzFailure>,
+}
+
+/// Fuzz `count` consecutive seeds starting at `start`, sharded over
+/// `jobs` workers ([`parallel_map_jobs`]; `jobs == 1` runs inline).
+///
+/// Each seed is an independent pure function of its own value —
+/// generation, simulation, invariant checking, and shrinking consult
+/// nothing shared — so sharding cannot change any seed's outcome. The
+/// map is order-preserving, so the summaries (and therefore the
+/// failures) come back in ascending seed order for every worker
+/// count: the smallest failing seed wins deterministically.
+pub fn fuzz_scan(start: u64, count: u64, jobs: usize) -> Vec<SeedSummary> {
+    let seeds: Vec<u64> = (start..start.saturating_add(count)).collect();
+    parallel_map_jobs(seeds, jobs, |&seed| {
         let case = gen_case(seed);
         let out = run_case(&case);
-        if !out.violations.is_empty() {
-            failures.push(FuzzFailure {
+        let failure = if out.violations.is_empty() {
+            None
+        } else {
+            Some(FuzzFailure {
                 seed,
                 violations: out.violations,
                 minimized: shrink(&case),
-            });
+            })
+        };
+        SeedSummary {
+            seed,
+            offered: out.report.offered,
+            completed: out.report.cluster.completed,
+            shed: out.report.shed,
+            events: out.report.events,
+            failure,
         }
-    }
-    failures
+    })
 }
 
 /// Relative-plus-absolute float closeness for accounting cross-checks.
@@ -392,6 +436,31 @@ mod tests {
                 }
                 // Constructive proof each candidate builds.
                 let _ = cand.build_sim();
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_scans_match_the_serial_scan_for_every_job_count() {
+        // Seeds are pure functions of their value, so the worker count
+        // must be unobservable: same seeds, same order, same counters.
+        let serial = fuzz_scan(0, 12, 1);
+        assert_eq!(serial.len(), 12);
+        for jobs in [2, 4, 32] {
+            let sharded = fuzz_scan(0, 12, jobs);
+            assert_eq!(sharded.len(), serial.len(), "jobs={jobs}");
+            for (a, b) in serial.iter().zip(&sharded) {
+                assert_eq!(a.seed, b.seed, "jobs={jobs}");
+                assert_eq!(a.offered, b.offered, "jobs={jobs} seed {}", a.seed);
+                assert_eq!(a.completed, b.completed, "jobs={jobs} seed {}", a.seed);
+                assert_eq!(a.shed, b.shed, "jobs={jobs} seed {}", a.seed);
+                assert_eq!(a.events, b.events, "jobs={jobs} seed {}", a.seed);
+                assert_eq!(
+                    a.failure.is_some(),
+                    b.failure.is_some(),
+                    "jobs={jobs} seed {}",
+                    a.seed
+                );
             }
         }
     }

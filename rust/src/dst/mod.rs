@@ -45,6 +45,7 @@ mod invariant;
 
 pub use gen::{gen_case, FuzzCase, FuzzEngine, RouterKind};
 pub use harness::{
-    fuzz_range, run_case, run_seed, shrink, CaseOutcome, FuzzFailure,
+    fuzz_range, fuzz_scan, run_case, run_seed, shrink, CaseOutcome,
+    FuzzFailure, SeedSummary,
 };
 pub use invariant::InvariantChecker;

@@ -14,7 +14,7 @@
 //!               [--instances 4] [--router round-robin|least-tokens|slo]
 //!               [--disagg-prefill 2] [--kv-link-gbps 100]
 //! liminal validate [--artifacts artifacts]
-//! liminal dst [--seeds 50] [--start 0] [--seed N] [--verbose]
+//! liminal dst [--seeds 50] [--start 0] [--jobs N] [--seed N] [--verbose]
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -72,6 +72,7 @@ USAGE:
                [--kv-link-gbps G  (KV shipment bandwidth, gigabits/s; inf = ideal)]
   liminal validate [--artifacts DIR]
   liminal dst [--seeds N  (default 50)] [--start S] [--seed X  (replay one)]
+               [--jobs N  (seed-shard workers; default: available cores)]
                [--verbose]
 ";
 
@@ -390,8 +391,12 @@ fn cmd_serve(args: &Args) -> i32 {
                 println!("{}", report.summary());
                 print!("{}", report.pool_summary());
                 println!("{}", report.slo_summary());
+                // jobs is always 1 here: one serve run is one DES on
+                // one core — the number tracks single-core scheduler
+                // throughput, while grid fan-outs (sweep/perf-report)
+                // report their parallel worker count in the same slot.
                 println!(
-                    "des: {} events in {:.3}s wall -> {:.0} events/s, \
+                    "des: {} events, wall_s {:.3}, jobs 1 -> {:.0} events/s, \
                      {:.1} sim-s/wall-s",
                     report.events,
                     wall,
@@ -458,38 +463,41 @@ fn cmd_dst(args: &Args) -> i32 {
     }
     let seeds = args.get_parsed("seeds", 50u64);
     let start = args.get_parsed("start", 0u64);
+    let jobs = args.get_parsed("jobs", liminal::util::par::default_jobs());
     let verbose = args.flag("verbose");
     let t0 = std::time::Instant::now();
-    let mut failures = Vec::new();
-    for seed in start..start.saturating_add(seeds) {
-        let case = dst::gen_case(seed);
-        let out = dst::run_case(&case);
-        if verbose {
+    // The scan shards seeds across workers; summaries come back in
+    // ascending seed order regardless of `jobs`, so the output (and
+    // which failing seed prints first) is deterministic.
+    let summaries = dst::fuzz_scan(start, seeds, jobs);
+    let wall = t0.elapsed().as_secs_f64();
+    if verbose {
+        for s in &summaries {
             println!(
-                "seed {seed}: {} ({} offered, {} completed, {} events)",
-                if out.violations.is_empty() { "ok" } else { "FAILED" },
-                out.report.offered,
-                out.report.cluster.completed,
-                out.report.events,
+                "seed {}: {} ({} offered, {} completed, {} events)",
+                s.seed,
+                if s.failure.is_none() { "ok" } else { "FAILED" },
+                s.offered,
+                s.completed,
+                s.events,
             );
         }
-        if !out.violations.is_empty() {
-            let minimized = dst::shrink(&case);
-            failures.push((seed, out.violations, minimized));
-        }
     }
-    let wall = t0.elapsed().as_secs_f64();
+    let failures: Vec<_> =
+        summaries.iter().filter_map(|s| s.failure.as_ref()).collect();
     if failures.is_empty() {
-        println!("dst: {seeds} seeds passed (start {start}) in {wall:.2}s");
+        println!(
+            "dst: {seeds} seeds passed (start {start}, jobs {jobs}) in {wall:.2}s"
+        );
         return 0;
     }
-    for (seed, violations, minimized) in &failures {
-        println!("seed {seed} failed:");
-        for v in violations {
+    for f in &failures {
+        println!("seed {} failed:", f.seed);
+        for v in &f.violations {
             println!("  violation: {v}");
         }
-        println!("  replay with: cargo run --release -- dst --seed {seed}");
-        println!("  shrunk case:\n{minimized:#?}");
+        println!("  replay with: cargo run --release -- dst --seed {}", f.seed);
+        println!("  shrunk case:\n{:#?}", f.minimized);
     }
     println!("dst: {}/{seeds} seeds FAILED in {wall:.2}s", failures.len());
     1

@@ -10,6 +10,7 @@
 
 use crate::coordinator::{serve_cluster, ClusterJob, RouterPolicy};
 use crate::util::json::Json;
+use crate::util::par::parallel_map;
 use crate::Result;
 
 /// A cluster sweep: run the base job at every `(instances, router)`
@@ -46,6 +47,8 @@ pub struct ClusterRecord {
     pub shed: u64,
     /// DES events applied by the cell's simulation run.
     pub events: u64,
+    /// Simulated span of the cell's run, seconds.
+    pub span: f64,
     /// Aggregate system tokens/second.
     pub stps: f64,
     /// Scale-out efficiency: tokens/second/instance.
@@ -69,6 +72,7 @@ impl ClusterRecord {
             ("completed", Json::Num(self.completed as f64)),
             ("shed", Json::Num(self.shed as f64)),
             ("events", Json::Num(self.events as f64)),
+            ("span_s", Json::Num(self.span)),
             ("stps", Json::Num(self.stps)),
             ("stps_per_instance", Json::Num(self.stps_per_instance)),
             ("ttft_p99_s", Json::Num(self.ttft_p99)),
@@ -78,12 +82,12 @@ impl ClusterRecord {
     }
 }
 
-/// Run every `(instances, router)` cell of the grid, in declaration
-/// order (instances outer, routers inner). Cells run sequentially: each
-/// is itself a full DES over hundreds of requests, and deterministic
-/// ordering matters more here than wall-clock.
-pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
-    let mut out = Vec::new();
+/// Materialize every `(instances, router)` cell of the grid as a
+/// ready-to-run job, in declaration order (instances outer, routers
+/// inner).
+fn grid_cells(grid: &ClusterGrid) -> Vec<ClusterJob> {
+    let mut cells =
+        Vec::with_capacity(grid.instance_counts.len() * grid.routers.len());
     for &n in &grid.instance_counts {
         for &policy in &grid.routers {
             let mut job = grid.base.clone();
@@ -93,31 +97,67 @@ pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
                 job.workload.arrival_rate *= n as f64;
                 job.workload.n_requests *= n as u64;
             }
-            if job.prefill_instances > 0 {
-                anyhow::ensure!(
-                    job.prefill_instances < n,
-                    "disaggregated grid cell {n} instances cannot host {} prefill",
-                    job.prefill_instances
-                );
-            }
-            let rep = serve_cluster(&job)?;
-            out.push(ClusterRecord {
-                instances: n,
-                router: rep.router.clone(),
-                mode: rep.mode.clone(),
-                rate: job.workload.arrival_rate,
-                completed: rep.cluster.completed,
-                shed: rep.shed,
-                events: rep.events,
-                stps: rep.cluster.stps,
-                stps_per_instance: rep.stps_per_instance(),
-                ttft_p99: rep.cluster.ttft.p99,
-                tpot_p99: rep.cluster.tpot.p99,
-                e2e_p99: rep.cluster.e2e.p99,
-            });
+            cells.push(job);
         }
     }
-    Ok(out)
+    cells
+}
+
+/// Run every `(instances, router)` cell of the grid, in declaration
+/// order (instances outer, routers inner).
+///
+/// The whole grid is validated **before any cell runs**, and every
+/// invalid cell is named in one error — a per-cell check mid-grid
+/// would burn the earlier cells' simulation time only to abort, and
+/// would make the failure depend on cell order. Valid grids fan out
+/// over [`parallel_map`]: cells are independent DES runs (sharing
+/// nothing but the immutable base job), and the map is
+/// order-preserving, so the records come back exactly as the serial
+/// loop produced them.
+pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
+    let cells = grid_cells(grid);
+    let invalid: Vec<String> = cells
+        .iter()
+        .filter_map(|job| {
+            if job.instances == 0 {
+                Some("cell with 0 instances".to_string())
+            } else if job.prefill_instances > 0
+                && job.prefill_instances >= job.instances
+            {
+                Some(format!(
+                    "cell with {} instances cannot host {} dedicated prefill",
+                    job.instances, job.prefill_instances
+                ))
+            } else {
+                None
+            }
+        })
+        .collect();
+    anyhow::ensure!(
+        invalid.is_empty(),
+        "invalid cluster grid: {}",
+        invalid.join("; ")
+    );
+    parallel_map(cells, |job| -> Result<ClusterRecord> {
+        let rep = serve_cluster(job)?;
+        Ok(ClusterRecord {
+            instances: job.instances,
+            router: rep.router.clone(),
+            mode: rep.mode.clone(),
+            rate: job.workload.arrival_rate,
+            completed: rep.cluster.completed,
+            shed: rep.shed,
+            events: rep.events,
+            span: rep.cluster.span,
+            stps: rep.cluster.stps,
+            stps_per_instance: rep.stps_per_instance(),
+            ttft_p99: rep.cluster.ttft.p99,
+            tpot_p99: rep.cluster.tpot.p99,
+            e2e_p99: rep.cluster.e2e.p99,
+        })
+    })
+    .into_iter()
+    .collect()
 }
 
 #[cfg(test)]
@@ -158,6 +198,73 @@ mod tests {
         assert_eq!(recs[2].completed, 20);
         assert!((recs[2].rate - 40.0).abs() < 1e-12);
         assert!(recs.iter().all(|r| r.stps > 0.0));
+    }
+
+    #[test]
+    fn invalid_cells_are_all_reported_before_any_cell_runs() {
+        // A disaggregated base over counts [1, 2, 4] has two invalid
+        // cells (1 and 2 instances cannot host 2 prefill); both must be
+        // named in one error, and nothing may have run (order-dependent
+        // partial failure is exactly the bug this replaces).
+        let mut grid = small_grid();
+        grid.base.prefill_instances = 2;
+        grid.instance_counts = vec![1, 2, 4];
+        grid.routers = vec![RouterPolicy::RoundRobin];
+        let err = run_cluster_grid(&grid).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("invalid cluster grid"), "{msg}");
+        assert!(
+            msg.contains("1 instances cannot host 2"),
+            "first invalid cell missing: {msg}"
+        );
+        assert!(
+            msg.contains("2 instances cannot host 2"),
+            "second invalid cell missing: {msg}"
+        );
+        // Zero-instance cells are caught upfront too.
+        let mut grid = small_grid();
+        grid.instance_counts = vec![0, 1];
+        let err = run_cluster_grid(&grid).unwrap_err();
+        assert!(format!("{err:#}").contains("0 instances"));
+    }
+
+    #[test]
+    fn parallel_fanout_matches_the_serial_loop() {
+        // The fan-out must be observationally identical to running
+        // serve_cluster over the cells one by one, record for record.
+        let grid = small_grid();
+        let par = run_cluster_grid(&grid).unwrap();
+        let serial: Vec<ClusterRecord> = grid_cells(&grid)
+            .iter()
+            .map(|job| {
+                let rep = serve_cluster(job).unwrap();
+                ClusterRecord {
+                    instances: job.instances,
+                    router: rep.router.clone(),
+                    mode: rep.mode.clone(),
+                    rate: job.workload.arrival_rate,
+                    completed: rep.cluster.completed,
+                    shed: rep.shed,
+                    events: rep.events,
+                    span: rep.cluster.span,
+                    stps: rep.cluster.stps,
+                    stps_per_instance: rep.stps_per_instance(),
+                    ttft_p99: rep.cluster.ttft.p99,
+                    tpot_p99: rep.cluster.tpot.p99,
+                    e2e_p99: rep.cluster.e2e.p99,
+                }
+            })
+            .collect();
+        assert_eq!(par.len(), serial.len());
+        for (p, s) in par.iter().zip(&serial) {
+            assert_eq!(p.instances, s.instances);
+            assert_eq!(p.router, s.router);
+            assert_eq!(p.completed, s.completed);
+            assert_eq!(p.events, s.events);
+            assert_eq!(p.stps.to_bits(), s.stps.to_bits());
+            assert_eq!(p.ttft_p99.to_bits(), s.ttft_p99.to_bits());
+            assert_eq!(p.e2e_p99.to_bits(), s.e2e_p99.to_bits());
+        }
     }
 
     #[test]

@@ -8,8 +8,29 @@
 
 use std::num::NonZeroUsize;
 
-/// Parallel, order-preserving map.
+/// The worker count [`parallel_map`] uses: `available_parallelism`,
+/// with a fallback of 1 when the platform cannot say.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Parallel, order-preserving map over `default_jobs()` workers.
 pub fn parallel_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_jobs(items, default_jobs(), f)
+}
+
+/// Parallel, order-preserving map over an explicit worker count
+/// (`jobs == 1` runs inline on the caller's thread; `jobs == 0` is
+/// treated as 1). The output is identical to the sequential map for
+/// every worker count — only wall-clock changes.
+pub fn parallel_map_jobs<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
 where
     T: Send + Sync,
     R: Send,
@@ -19,10 +40,7 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let workers = std::thread::available_parallelism()
-        .map(NonZeroUsize::get)
-        .unwrap_or(1)
-        .min(n);
+    let workers = jobs.max(1).min(n);
     if workers <= 1 || n < 4 {
         return items.iter().map(|t| f(t)).collect();
     }
@@ -121,6 +139,19 @@ mod tests {
             for (i, v) in out.iter().enumerate() {
                 assert_eq!(*v, (i as u32).wrapping_mul(2654435761), "round {round}");
             }
+        }
+    }
+
+    #[test]
+    fn every_job_count_produces_the_sequential_result() {
+        // Sharding is an implementation detail: 1 worker, an odd
+        // worker count, more workers than items, and the default must
+        // all return the same ordered output.
+        let items: Vec<u64> = (0..97).collect();
+        let expect: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        for jobs in [0, 1, 2, 3, 7, 97, 200] {
+            let out = parallel_map_jobs(items.clone(), jobs, |&x| x * 3 + 1);
+            assert_eq!(out, expect, "jobs={jobs}");
         }
     }
 

@@ -1,0 +1,204 @@
+//! Property test pinning the calendar-queue `EventQueue` to a
+//! binary-heap reference implementation.
+//!
+//! The reference is the pre-refactor design verbatim: a max-heap of
+//! `(time, seq)` in reverse `total_cmp` order with the same
+//! clamp-to-now rule. Randomized (seeded, reproducible) schedules
+//! drive both side by side through the shapes a DES actually
+//! produces — same-time FIFO bursts, clamp-to-now past times,
+//! interleaved pop/schedule chains, far-future outliers, and full
+//! empty/refill cycles — asserting identical pop sequences, clocks,
+//! and `fired` counts at every step.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use liminal::des::{EventQueue, SimTime};
+use liminal::util::rng::Pcg32;
+
+/// The pre-refactor binary-heap calendar, kept as the ordering oracle.
+struct RefScheduled {
+    at: SimTime,
+    seq: u64,
+    event: u64,
+}
+
+impl PartialEq for RefScheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for RefScheduled {}
+impl PartialOrd for RefScheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RefScheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct RefQueue {
+    heap: BinaryHeap<RefScheduled>,
+    now: SimTime,
+    seq: u64,
+    fired: u64,
+}
+
+impl RefQueue {
+    fn new() -> RefQueue {
+        RefQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, fired: 0 }
+    }
+
+    fn schedule_at(&mut self, at: SimTime, event: u64) {
+        assert!(!at.is_nan() && at >= 0.0);
+        self.heap.push(RefScheduled {
+            at: at.max(self.now),
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    fn next(&mut self) -> Option<(SimTime, u64)> {
+        let s = self.heap.pop()?;
+        self.now = s.at;
+        self.fired += 1;
+        Some((s.at, s.event))
+    }
+
+    fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+}
+
+/// Drive both queues with one random operation stream and assert they
+/// are indistinguishable at every step.
+fn drive(seed: u64, ops: usize) {
+    let mut rng = Pcg32::seed_from(seed);
+    let mut cal: EventQueue<u64> = EventQueue::new();
+    let mut reference = RefQueue::new();
+    let mut next_event: u64 = 0;
+
+    for op in 0..ops {
+        // Weighted op mix: schedule-heavy early, pop-heavy late, so the
+        // queues cycle through growth, steady state, and full drains.
+        let roll = rng.below(100);
+        let schedule = roll < 55 || cal.is_empty();
+        if schedule {
+            let burst = match rng.below(10) {
+                0 => rng.range(2, 6) as usize, // same-time FIFO burst
+                _ => 1,
+            };
+            let at = random_time(&mut rng, cal.now());
+            for _ in 0..burst {
+                cal.schedule_at(at, next_event);
+                reference.schedule_at(at, next_event);
+                next_event += 1;
+            }
+        } else {
+            assert_eq!(
+                cal.peek_time(),
+                reference.peek_time(),
+                "seed {seed} op {op}: peek diverged"
+            );
+            let got = cal.next();
+            let want = reference.next();
+            match (got, want) {
+                (Some((tc, ec)), Some((tr, er))) => {
+                    assert_eq!(
+                        tc.to_bits(),
+                        tr.to_bits(),
+                        "seed {seed} op {op}: time diverged ({tc} vs {tr})"
+                    );
+                    assert_eq!(
+                        ec, er,
+                        "seed {seed} op {op}: event diverged at t={tc}"
+                    );
+                }
+                (None, None) => {}
+                (got, want) => {
+                    panic!("seed {seed} op {op}: {got:?} vs {want:?}")
+                }
+            }
+        }
+        assert_eq!(cal.len(), reference.heap.len(), "seed {seed} op {op}");
+        assert_eq!(
+            cal.now().to_bits(),
+            reference.now.to_bits(),
+            "seed {seed} op {op}"
+        );
+    }
+
+    // Drain both completely: the tails must match element for element.
+    loop {
+        assert_eq!(cal.peek_time(), reference.peek_time(), "seed {seed} drain");
+        match (cal.next(), reference.next()) {
+            (Some((tc, ec)), Some((tr, er))) => {
+                assert_eq!(tc.to_bits(), tr.to_bits(), "seed {seed} drain");
+                assert_eq!(ec, er, "seed {seed} drain at t={tc}");
+            }
+            (None, None) => break,
+            (got, want) => panic!("seed {seed} drain: {got:?} vs {want:?}"),
+        }
+    }
+    assert_eq!(cal.fired(), reference.fired, "seed {seed}: fired count");
+    assert!(cal.is_empty());
+}
+
+/// Random event times biased toward DES reality: mostly a short hop
+/// past `now`, sometimes exactly `now`, sometimes slightly in the past
+/// (the clamp path), occasionally a far-future outlier that must cross
+/// the overflow rung.
+fn random_time(rng: &mut Pcg32, now: SimTime) -> SimTime {
+    match rng.below(20) {
+        0 => now,                                    // exactly now
+        1 => (now - rng.f64() * 1e-6).max(0.0),      // clamp-to-now path
+        2 | 3 => now + rng.f64() * 1e4,              // far-future outlier
+        4 => now + rng.exp(1000.0),                  // sub-millisecond hop
+        _ => now + rng.f64() * 2.0,                  // typical short hop
+    }
+}
+
+#[test]
+fn calendar_queue_matches_the_heap_reference() {
+    for seed in 0..40u64 {
+        drive(seed, 400);
+    }
+}
+
+#[test]
+fn calendar_queue_matches_the_heap_on_long_runs() {
+    // Fewer seeds, much longer op streams: many full respan cycles and
+    // steady-state cursor advances.
+    for seed in 100..104u64 {
+        drive(seed, 6000);
+    }
+}
+
+#[test]
+fn same_time_bursts_pop_fifo_across_both_queues() {
+    // A degenerate stream: every event at one of two times, in bursts.
+    // This is pure tie-breaking — any instability shows immediately.
+    let mut cal: EventQueue<u64> = EventQueue::new();
+    let mut reference = RefQueue::new();
+    for i in 0..200u64 {
+        let at = if i % 3 == 0 { 1.0 } else { 2.0 };
+        cal.schedule_at(at, i);
+        reference.schedule_at(at, i);
+    }
+    loop {
+        match (cal.next(), reference.next()) {
+            (Some((tc, ec)), Some((tr, er))) => {
+                assert_eq!((tc.to_bits(), ec), (tr.to_bits(), er));
+            }
+            (None, None) => break,
+            (got, want) => panic!("{got:?} vs {want:?}"),
+        }
+    }
+}
