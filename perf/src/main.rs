@@ -7,7 +7,7 @@
 //! across trials (same seed), so trial-to-trial spread is pure
 //! machine noise and the p50 is a stable tracking number.
 //!
-//! Two scenario kinds separate the two things this PR sequence
+//! Three scenario kinds separate the things this PR sequence
 //! optimizes:
 //!
 //! * **Colocated 1/8/64-instance cells** run a single DES on one core —
@@ -20,6 +20,11 @@
 //!   count, and `sim_s_per_wall_s` aggregates across concurrent
 //!   cells, so it exceeds the single-cell ratio when the fan-out is
 //!   actually running cells concurrently).
+//! * **`autoscaled-2to8x`** runs one elastic colocated cell (2
+//!   instances growing toward an 8-instance ceiling under
+//!   ceiling-level load, SLO router) — it tracks the autoscale path:
+//!   per-window scale decisions, warm-up events, and billed
+//!   instance-seconds accounting layered on the same DES.
 //!
 //! Output is the `liminal-perf/v2` JSON schema documented in
 //! `perf/README.md`. Modes:
@@ -33,6 +38,7 @@
 
 use std::time::Instant;
 
+use liminal::cluster::AutoscalePolicy;
 use liminal::coordinator::{default_cluster_job, serve_cluster, ClusterJob, RouterPolicy};
 use liminal::hw::{presets, SystemConfig};
 use liminal::serving::{percentile, WorkloadSpec};
@@ -87,6 +93,11 @@ enum Kind {
     /// A full `run_cluster_grid` sweep through the parallel fan-out:
     /// tracks grid throughput and parallel scaling.
     Grid,
+    /// An elastic colocated fleet (2 instances growing toward an
+    /// 8-instance ceiling under ceiling-level load, SLO router): tracks
+    /// the autoscale path — scale decisions, warm-up events, and
+    /// billed-seconds accounting — on top of the scheduler.
+    Autoscaled,
 }
 
 struct Scenario {
@@ -94,11 +105,12 @@ struct Scenario {
     kind: Kind,
 }
 
-const SCENARIOS: [Scenario; 4] = [
+const SCENARIOS: [Scenario; 5] = [
     Scenario { name: "colocated-1x", kind: Kind::Colocated { instances: 1 } },
     Scenario { name: "colocated-8x", kind: Kind::Colocated { instances: 8 } },
     Scenario { name: "colocated-64x", kind: Kind::Colocated { instances: 64 } },
     Scenario { name: "grid-2r-124x", kind: Kind::Grid },
+    Scenario { name: "autoscaled-2to8x", kind: Kind::Autoscaled },
 ];
 
 /// Instance counts and router count of the grid scenario.
@@ -134,8 +146,25 @@ fn scenario_grid(reqs_per_instance: u64) -> ClusterGrid {
         base: scenario_job(1, reqs_per_instance),
         instance_counts: GRID_COUNTS.to_vec(),
         routers: GRID_ROUTERS.to_vec(),
+        autoscale: vec![None],
         scale_load: true,
     }
+}
+
+/// The autoscale scenario: ceiling-level load offered to a fleet that
+/// starts at 2 instances, so the run exercises growth, warm-up, and
+/// (after the arrival tail) idle shrink on every trial.
+fn scenario_autoscaled(reqs_per_instance: u64) -> ClusterJob {
+    let mut job = scenario_job(8, reqs_per_instance);
+    job.instances = 2;
+    job.router = RouterPolicy::SloAware;
+    job.autoscale = Some(AutoscalePolicy {
+        min_instances: 2,
+        max_instances: 8,
+        warmup_delay: 0.5,
+        ..AutoscalePolicy::default()
+    });
+    job
 }
 
 struct ScenarioResult {
@@ -172,6 +201,18 @@ fn run_scenario(s: &Scenario, trials: usize, reqs_per_instance: u64) -> Scenario
                 res.requests = job.workload.n_requests;
                 let t0 = Instant::now();
                 let rep = serve_cluster(&job).expect("scenario job runs");
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                res.events = rep.events;
+                res.wall_s.push(wall);
+                res.events_per_sec.push(rep.events as f64 / wall);
+                res.sim_s_per_wall_s.push(rep.cluster.span / wall);
+            }
+            Kind::Autoscaled => {
+                let job = scenario_autoscaled(reqs_per_instance);
+                res.instances = job.instances;
+                res.requests = job.workload.n_requests;
+                let t0 = Instant::now();
+                let rep = serve_cluster(&job).expect("autoscale scenario runs");
                 let wall = t0.elapsed().as_secs_f64().max(1e-9);
                 res.events = rep.events;
                 res.wall_s.push(wall);

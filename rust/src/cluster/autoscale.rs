@@ -1,0 +1,153 @@
+//! Autoscaling: elastic pools that grow on SLO pressure and shrink on
+//! sustained idleness, with a warm-up delay so scaling is never free.
+//!
+//! The policy is evaluated inside the cluster's event loop from
+//! *observed simulation state only* — shed/arrival counters, load
+//! snapshots, per-instance idle spans, and the DES clock. No wall
+//! clock, no randomness: a seeded run replays its scale decisions
+//! bit-identically.
+//!
+//! # Lifecycle of a scaled instance
+//!
+//! A scale-up decision mints a fresh engine from the cluster's
+//! [`EngineFactory`] (per-role, so heterogeneous pools can give the
+//! prefill pool compute-heavy engines and the decode pool
+//! bandwidth-heavy ones) and pushes the instance in
+//! [`InstanceState::Warming`]. A warming instance holds no work and is
+//! invisible to placement; it only joins the front door (or decode
+//! placement) when its `WarmupDone` event — scheduled
+//! [`AutoscalePolicy::warmup_delay`] seconds out on the shared
+//! calendar — fires and flips it to [`InstanceState::Active`].
+//! Scale-down only ever retires an instance that is *completely* idle
+//! (no queued or active requests, no step in flight, no KV shipment
+//! inbound), flipping it to [`InstanceState::Retired`] immediately, so
+//! request conservation across pool-size changes is trivial: warming
+//! and retired instances hold zero requests by construction, and the
+//! DST invariant checker audits exactly that.
+
+use super::router::Role;
+use crate::serving::StepEngine;
+
+/// Mints the [`StepEngine`] for a newly spawned instance of the given
+/// role. This is where heterogeneous pools live: the factory can hand
+/// [`Role::Prefill`] a compute-heavy system and [`Role::Decode`] a
+/// bandwidth-heavy one.
+pub type EngineFactory = Box<dyn FnMut(Role) -> Box<dyn StepEngine>>;
+
+/// Membership state of one cluster instance (always `Active` in a
+/// fixed fleet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Spawned but still warming up: holds no work, receives no
+    /// placement, joins the fleet when its `WarmupDone` event fires.
+    Warming,
+    /// Serving member of its pool.
+    Active,
+    /// Scaled down. Retirement only happens to a completely idle
+    /// instance, so a retired instance never holds requests.
+    Retired,
+}
+
+/// When and how the cluster grows or shrinks its pools. All thresholds
+/// are read against simulated state; see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Grow when the shed fraction over the last decision window
+    /// exceeds this (e.g. 0.05 = more than 5% of arrivals shed).
+    pub shed_rate_up: f64,
+    /// Grow when even the *best* front-door instance predicts a TTFT
+    /// above this many seconds — pressure visible before the router
+    /// sheds anything. `f64::INFINITY` disables the headroom trigger.
+    pub ttft_headroom: f64,
+    /// Retire an idle instance only after it has sat completely idle
+    /// (no queued/active work, no step in flight, no inbound KV) for
+    /// this many seconds.
+    pub idle_shrink_after: f64,
+    /// Seconds between a spawn decision and the instance joining
+    /// placement (its `WarmupDone` event on the shared calendar).
+    pub warmup_delay: f64,
+    /// Minimum seconds between consecutive scale actions, so one burst
+    /// does not fire a spawn per event.
+    pub cooldown: f64,
+    /// Arrivals that must accumulate before the shed-rate trigger is
+    /// evaluated (the shed fraction needs a denominator).
+    pub decision_window: u64,
+    /// Per-pool floor: never shrink a pool below this many active
+    /// instances (must be at least 1).
+    pub min_instances: usize,
+    /// Per-pool ceiling: never grow a pool (warming + active) past
+    /// this.
+    pub max_instances: usize,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            shed_rate_up: 0.05,
+            ttft_headroom: 0.5,
+            idle_shrink_after: 2.0,
+            warmup_delay: 5.0,
+            cooldown: 1.0,
+            decision_window: 16,
+            min_instances: 1,
+            max_instances: 8,
+        }
+    }
+}
+
+impl AutoscalePolicy {
+    /// Panics on a self-contradictory policy (called at cluster build).
+    pub(crate) fn validate(&self) {
+        assert!(self.min_instances >= 1, "autoscale min_instances must be >= 1");
+        assert!(
+            self.max_instances >= self.min_instances,
+            "autoscale max_instances {} below min_instances {}",
+            self.max_instances,
+            self.min_instances
+        );
+        assert!(self.decision_window >= 1, "autoscale decision_window must be >= 1");
+        assert!(
+            self.warmup_delay >= 0.0 && self.warmup_delay.is_finite(),
+            "autoscale warmup_delay must be finite and non-negative"
+        );
+        assert!(
+            self.cooldown >= 0.0 && self.cooldown.is_finite(),
+            "autoscale cooldown must be finite and non-negative"
+        );
+        assert!(
+            self.idle_shrink_after > 0.0,
+            "autoscale idle_shrink_after must be positive"
+        );
+        assert!(self.shed_rate_up >= 0.0, "autoscale shed_rate_up must be >= 0");
+        assert!(self.ttft_headroom > 0.0, "autoscale ttft_headroom must be positive");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_validates() {
+        AutoscalePolicy::default().validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "min_instances")]
+    fn zero_min_is_rejected() {
+        AutoscalePolicy { min_instances: 0, ..Default::default() }.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "max_instances")]
+    fn inverted_bounds_are_rejected() {
+        AutoscalePolicy { min_instances: 4, max_instances: 2, ..Default::default() }
+            .validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "warmup_delay")]
+    fn negative_warmup_is_rejected() {
+        AutoscalePolicy { warmup_delay: -1.0, ..Default::default() }.validate();
+    }
+}

@@ -22,6 +22,43 @@
 //! the paper's decode-only pricing. The `cluster-scaling` experiment
 //! measures both sides of that trade.
 //!
+//! # Pools
+//!
+//! Instances are grouped into *pools* by [`Role`]: one colocated pool,
+//! or (disaggregated) a prefill pool feeding a decode pool. Pools are
+//! heterogeneous by construction — [`ClusterSim`] takes per-instance
+//! engines, and an autoscaling cluster carries an `EngineFactory`
+//! minting per-role engines — so the prefill pool can run
+//! compute-heavy systems while the decode pool runs bandwidth-heavy
+//! ones, each at its own roofline.
+//!
+//! # Autoscaling
+//!
+//! With an [`AutoscalePolicy`] in the [`ClusterSpec`]
+//! (built via [`ClusterSim::with_factory`]), pools are *elastic*:
+//!
+//! * **Grow** when the SLO pressure crosses a threshold — the shed
+//!   fraction over the last decision window, or the predicted-TTFT
+//!   headroom of even the best front-door instance.
+//! * **Warm up** before serving: a spawned instance is provisioned
+//!   (and billed) immediately but joins `front_door`/decode placement
+//!   only when its `WarmupDone` event fires on the shared
+//!   [`EventQueue`](crate::des::EventQueue), `warmup_delay` seconds
+//!   later — scaling is never free.
+//! * **Shrink** on sustained idleness: only an instance that is
+//!   completely idle (no queued/active work, no step in flight, no KV
+//!   shipment inbound) past `idle_shrink_after` is retired, so
+//!   request conservation across pool-size changes is trivial and the
+//!   DST invariant checker audits it every event.
+//!
+//! Scale decisions are pure functions of observed simulation state
+//! (counters, load snapshots, the DES clock) — never the wall clock —
+//! so seeded runs replay their scale decisions bit-identically.
+//! Reports bill `instance_seconds` from spawn to retirement; the
+//! `autoscale-fleet` experiment compares a fixed fleet sized for peak
+//! against an elastic fleet on exactly that quantity under a
+//! diurnal+bursty arrival process.
+//!
 //! # Structure
 //!
 //! * [`ClusterSim`] — N [`Instance`](crate::serving::Instance)s (each a
@@ -36,29 +73,36 @@
 //!   [`ReqId`](crate::serving::ReqId) handles, so the hot path moves
 //!   4-byte ids instead of cloning `Request` structs and steady-state
 //!   stepping allocates nothing.
-//! * [`Router`] — pluggable front-door policy: [`RoundRobin`],
-//!   [`LeastOutstandingTokens`], or [`SloAdmission`] (sheds requests
-//!   whose predicted TTFT exceeds the target).
+//! * [`Router`] — pluggable front-door policy: [`RoundRobin`] (cursor
+//!   on the last-picked id, so it stays fair as instances join and
+//!   leave), [`LeastOutstandingTokens`], or [`SloAdmission`] (sheds
+//!   requests whose predicted TTFT exceeds the target; cold instances
+//!   are priced at the warm peers' mean cadence, never at 0).
 //! * [`ClusterMode::Disaggregated`] — dedicated prefill instances
 //!   ingest prompts, then ship each request's KV
 //!   (`context_len * kv_bytes_per_token` bytes) to the least-committed
 //!   decode instance; every output token (including the first) comes
-//!   from the decode pool, so the transfer stall lands in TTFT.
+//!   from the decode pool, so the transfer stall lands in TTFT. Load
+//!   snapshots fold in-transit KV into `outstanding_kv_bytes`, so
+//!   routers and `pick_decode` see the same committed footprint.
 //! * [`ClusterReport`] — per-instance
 //!   [`ServingReport`](crate::serving::ServingReport)s plus a merged
 //!   cluster report whose percentiles are recomputed over the pooled
 //!   per-request samples, per-pool utilization, scale-out efficiency
-//!   (tokens/s/instance), and JSON export for experiment artifacts.
+//!   (tokens/s/instance), billed instance-seconds and scale-action
+//!   counts, and JSON export for experiment artifacts.
 //!
 //! A one-instance colocated cluster behind a pass-through router is
 //! step-for-step identical to [`ServingSim`](crate::serving::ServingSim)
 //! — the equivalence test in `tests/integration_cluster.rs` anchors the
 //! whole layer to the validated single-instance simulator.
 
+mod autoscale;
 mod report;
 mod router;
 mod sim;
 
+pub use autoscale::{AutoscalePolicy, EngineFactory, InstanceState};
 pub use report::{ClusterReport, PoolStats};
 pub use router::{
     InstanceLoad, LeastOutstandingTokens, Role, RoundRobin, Router,

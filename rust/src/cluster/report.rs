@@ -54,6 +54,15 @@ pub struct ClusterReport {
     pub kv_shipped_bytes: f64,
     /// Mean KV shipment latency, seconds (0 when nothing shipped).
     pub kv_transfer_mean: f64,
+    /// Billed capacity: the sum over instances of provisioned seconds
+    /// (spawn — including warm-up — to retirement or run end). A fixed
+    /// fleet's value is `instances * span`; an autoscaled fleet is
+    /// cheaper exactly when this is smaller at equal SLO attainment.
+    pub instance_seconds: f64,
+    /// Instances the autoscaler provisioned during the run.
+    pub scale_ups: u64,
+    /// Instances the autoscaler retired during the run.
+    pub scale_downs: u64,
 }
 
 impl ClusterReport {
@@ -105,6 +114,12 @@ impl ClusterReport {
                 self.kv_transfer_mean * 1e3,
             ));
         }
+        if self.scale_ups + self.scale_downs > 0 {
+            out.push_str(&format!(
+                "autoscale: +{} spawned / -{} retired, {:.1} instance-s billed\n",
+                self.scale_ups, self.scale_downs, self.instance_seconds,
+            ));
+        }
         out
     }
 
@@ -141,6 +156,9 @@ impl ClusterReport {
             ("e2e_s", lat(&self.cluster.e2e)),
             ("kv_shipped_bytes", Json::Num(self.kv_shipped_bytes)),
             ("kv_transfer_mean_s", Json::Num(self.kv_transfer_mean)),
+            ("instance_seconds", Json::Num(self.instance_seconds)),
+            ("scale_ups", Json::Num(self.scale_ups as f64)),
+            ("scale_downs", Json::Num(self.scale_downs as f64)),
             (
                 "pools",
                 Json::Arr(
@@ -191,6 +209,9 @@ mod tests {
             }],
             kv_shipped_bytes: 2.0 * crate::GIB,
             kv_transfer_mean: 0.001,
+            instance_seconds: 20.0,
+            scale_ups: 1,
+            scale_downs: 1,
         }
     }
 
@@ -201,6 +222,7 @@ mod tests {
         assert!(rep.summary().contains("2 shed"));
         assert!(rep.pool_summary().contains("prefill"));
         assert!(rep.pool_summary().contains("kv shipped"));
+        assert!(rep.pool_summary().contains("autoscale: +1"));
         assert!(rep.slo_summary().contains("TTFT"));
         assert_eq!(rep.stps_per_instance(), 0.0);
     }
@@ -217,5 +239,8 @@ mod tests {
         assert_eq!(pools.len(), 1);
         assert_eq!(pools[0].get("label").unwrap().as_str(), Some("prefill"));
         assert!(j.get("ttft_s").unwrap().get("p99").is_some());
+        assert_eq!(j.get("scale_ups").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("scale_downs").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("instance_seconds").unwrap().as_u64(), Some(20));
     }
 }

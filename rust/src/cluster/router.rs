@@ -41,6 +41,12 @@ impl Role {
 pub struct InstanceLoad {
     /// The instance's role.
     pub role: Role,
+    /// Whether the instance currently participates in placement.
+    /// False for instances an autoscaler has spawned but not yet
+    /// warmed up, and for retired ones — policies reading non-candidate
+    /// loads (e.g. decode-pool pressure) must skip those, since they
+    /// hold no work and would fake an idle pool member.
+    pub placeable: bool,
     /// Requests queued at the instance (not yet admitted).
     pub queued: usize,
     /// Requests active on the instance (prefilling or decoding).
@@ -95,6 +101,31 @@ impl InstanceLoad {
     ///   admission control see decode-slot congestion — the dominant
     ///   TTFT contribution at overload — not just prompt backlog.
     pub fn predicted_ttft(&self, context_len: u64) -> f64 {
+        self.predicted_ttft_seeded(context_len, 0.0)
+    }
+
+    /// [`InstanceLoad::predicted_ttft`] with a fallback step cadence
+    /// for cold instances. When this instance has priced no step yet
+    /// (`ewma_step_latency == 0`), the backlog is costed at
+    /// `peer_ewma` — typically the mean cadence of the cluster's warm
+    /// instances — instead of 0. Regression: pricing a cold instance's
+    /// backlog at 0 predicted a 0 TTFT *regardless of backlog*, so a
+    /// freshly scaled-up instance absorbed an unbounded admission
+    /// flood. With no warm peer either (`peer_ewma == 0`), the
+    /// prediction is still 0: a completely cold cluster has to admit
+    /// something to bootstrap its cadence estimate.
+    pub fn predicted_ttft_seeded(&self, context_len: u64, peer_ewma: f64) -> f64 {
+        let cadence = if self.ewma_step_latency > 0.0 {
+            self.ewma_step_latency
+        } else {
+            peer_ewma
+        };
+        cadence * self.ttft_steps(context_len) as f64
+    }
+
+    /// The step-count part of the TTFT prediction (see
+    /// [`InstanceLoad::predicted_ttft`] for the model).
+    fn ttft_steps(&self, context_len: u64) -> u64 {
         let chunk_steps = if self.prefill_chunk > 0 {
             let chunk = self.prefill_chunk;
             self.pending_prefill_tokens
@@ -115,7 +146,22 @@ impl InstanceLoad {
         } else {
             0
         };
-        self.ewma_step_latency * (chunk_steps + slot_steps) as f64
+        chunk_steps + slot_steps
+    }
+}
+
+/// Mean step cadence of the instances that have priced at least one
+/// step — the fallback [`SloAdmission`] seeds cold instances'
+/// predictions with. 0 when the whole cluster is cold.
+pub(crate) fn peer_ewma(loads: &[InstanceLoad]) -> f64 {
+    let (sum, n) = loads
+        .iter()
+        .filter(|l| l.ewma_step_latency > 0.0)
+        .fold((0.0f64, 0u32), |(s, n), l| (s + l.ewma_step_latency, n + 1));
+    if n > 0 {
+        sum / n as f64
+    } else {
+        0.0
     }
 }
 
@@ -154,15 +200,22 @@ pub trait Router {
 /// Cycle through the candidate instances in order. With a single
 /// instance this is the pass-through router (every request goes to
 /// instance 0), which is what the N=1 equivalence test exercises.
+///
+/// The cursor is the *last-picked instance id*, not a raw counter:
+/// each pick takes the first candidate with a larger id, wrapping to
+/// the smallest. Regression: a raw `count % candidates.len()` cursor
+/// desynchronizes whenever the candidate set changes size (inevitable
+/// under autoscaling), double-serving some instances and skipping
+/// others.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
-    next: usize,
+    last: Option<usize>,
 }
 
 impl RoundRobin {
     /// New round-robin router starting at the first candidate.
     pub fn new() -> RoundRobin {
-        RoundRobin { next: 0 }
+        RoundRobin { last: None }
     }
 }
 
@@ -176,8 +229,19 @@ impl Router for RoundRobin {
         if candidates.is_empty() {
             return None;
         }
-        let i = candidates[self.next % candidates.len()];
-        self.next = self.next.wrapping_add(1);
+        // Candidate lists are sorted by instance id (the cluster keeps
+        // the front door sorted as instances join and leave), so "the
+        // first id past the last pick, wrapping" continues the cycle
+        // no matter how membership changed since.
+        let i = match self.last {
+            Some(last) => candidates
+                .iter()
+                .copied()
+                .find(|&c| c > last)
+                .unwrap_or(candidates[0]),
+            None => candidates[0],
+        };
+        self.last = Some(i);
         Some(i)
     }
 
@@ -239,10 +303,15 @@ impl Router for SloAdmission {
         candidates: &[usize],
         loads: &[InstanceLoad],
     ) -> Option<usize> {
+        // Cold instances (no step history yet — freshly autoscaled,
+        // or simply never stepped) predict at the mean cadence of the
+        // warm peers instead of 0, so a huge backlog on a cold
+        // instance is still priced as the wait it is.
+        let peer = peer_ewma(loads);
         let (i, mut predicted) = argmin(
             candidates
                 .iter()
-                .map(|&i| (i, loads[i].predicted_ttft(r.context_len))),
+                .map(|&i| (i, loads[i].predicted_ttft_seeded(r.context_len, peer))),
         )?;
         if loads[i].role == Role::Prefill {
             // Disaggregated front door: the first token comes from the
@@ -252,13 +321,15 @@ impl Router for SloAdmission {
             // the router and is left out; it only tightens admission
             // further when modeled). Ignoring this term let a shallow
             // prefill pool admit into a clogged decode pool and blow
-            // the target unbounded.
+            // the target unbounded. Warming/retired decode instances
+            // are skipped — they take no placement, so their empty
+            // queues would fake an idle pool member.
             if let Some((_, d)) = argmin(
                 loads
                     .iter()
                     .enumerate()
-                    .filter(|(_, l)| l.role == Role::Decode)
-                    .map(|(j, l)| (j, l.predicted_ttft(0))),
+                    .filter(|(_, l)| l.placeable && l.role == Role::Decode)
+                    .map(|(j, l)| (j, l.predicted_ttft_seeded(0, peer))),
             ) {
                 predicted += d;
             }
@@ -287,6 +358,7 @@ mod tests {
     fn load(gen_backlog: u64, pending: u64, ewma: f64) -> InstanceLoad {
         InstanceLoad {
             role: Role::Colocated,
+            placeable: true,
             queued: 0,
             active: 0,
             max_batch: 16,
@@ -311,6 +383,30 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_stays_fair_when_the_candidate_set_changes() {
+        // Regression: the raw `count % len` cursor desynchronized when
+        // the candidate set changed size (instances joining/leaving
+        // under autoscaling), double-serving some instances. The
+        // cursor is the last-picked id, so the cycle continues from
+        // there across any membership change.
+        let mut r = RoundRobin::new();
+        let loads = vec![load(0, 0, 0.0); 4];
+        assert_eq!(r.route(&req(0, 1), &[0, 1, 2], &loads), Some(0));
+        assert_eq!(r.route(&req(1, 1), &[0, 1, 2], &loads), Some(1));
+        // Instance 3 joins: the cycle continues past the last pick.
+        assert_eq!(r.route(&req(2, 1), &[0, 1, 2, 3], &loads), Some(2));
+        // Instances 1 and 3 leave. Instance 2 was just served, so the
+        // cycle must wrap to 0 — the old cursor (3 % 2 = 1) would have
+        // served instance 2 twice in a row.
+        assert_eq!(r.route(&req(3, 1), &[0, 2], &loads), Some(0));
+        assert_eq!(r.route(&req(4, 1), &[0, 2], &loads), Some(2));
+        assert_eq!(r.route(&req(5, 1), &[0, 2], &loads), Some(0));
+        // A shrink below the cursor wraps cleanly too.
+        assert_eq!(r.route(&req(6, 1), &[2, 3], &loads), Some(2));
+        assert_eq!(r.route(&req(7, 1), &[0, 1], &loads), Some(0));
+    }
+
+    #[test]
     fn least_tokens_picks_emptiest_with_deterministic_ties() {
         let mut r = LeastOutstandingTokens;
         // Outstanding work = pending prefill + gen backlog.
@@ -332,9 +428,39 @@ mod tests {
         assert_eq!(r.route(&req(0, 256), &[0], &[busy]), None);
         // An idle candidate absorbs it (1 chunk * 10 ms <= 50 ms).
         assert_eq!(r.route(&req(0, 256), &[0, 1], &[busy, idle]), Some(1));
-        // No step history yet: predictions are 0, always admit.
+        // A completely cold cluster (no step history anywhere) has no
+        // cadence to price with: predictions are 0 and the cluster
+        // bootstraps by admitting.
         let cold = load(0, 99_999, 0.0);
         assert_eq!(r.route(&req(0, 256), &[0], &[cold]), Some(0));
+    }
+
+    #[test]
+    fn slo_admission_prices_cold_instances_at_the_peer_cadence() {
+        // Regression: a cold instance (ewma 0) used to predict a TTFT
+        // of 0 regardless of backlog, so a freshly scaled-up instance
+        // absorbed an unbounded flood. With a warm peer in the
+        // cluster, the cold instance's backlog must be priced at the
+        // peer cadence instead.
+        let mut r = SloAdmission::new(0.050);
+        let cold_backlogged = load(0, 99_999, 0.0);
+        let warm_peer = load(0, 0, 0.010);
+        // The cold instance is the only candidate: ~391 backlog chunks
+        // at the peer's 10 ms cadence blows the 50 ms target -> shed.
+        assert_eq!(
+            r.route(&req(0, 256), &[0], &[cold_backlogged, warm_peer]),
+            None,
+            "cold backlog must be priced at the peer EWMA, not 0"
+        );
+        // With both as candidates the warm idle peer absorbs it.
+        assert_eq!(
+            r.route(&req(0, 256), &[0, 1], &[cold_backlogged, warm_peer]),
+            Some(1)
+        );
+        // A cold *idle* instance among warm peers is still admissible:
+        // one chunk at the peer cadence is within target.
+        let cold_idle = load(0, 0, 0.0);
+        assert_eq!(r.route(&req(0, 256), &[0], &[cold_idle, warm_peer]), Some(0));
     }
 
     #[test]

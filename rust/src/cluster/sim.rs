@@ -36,8 +36,9 @@ use crate::serving::{
     RequestArena, ServingReport, SimConfig, SimObserver, StepEngine, StepStats,
 };
 
+use super::autoscale::{AutoscalePolicy, EngineFactory, InstanceState};
 use super::report::{ClusterReport, PoolStats};
-use super::router::{argmin, InstanceLoad, Role, Router};
+use super::router::{argmin, peer_ewma, InstanceLoad, Role, Router};
 
 /// How the cluster's instances divide the request lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +72,12 @@ pub struct ClusterSpec {
     /// [`crate::hw::DEFAULT_XFER_BW_PER_CHIP`] over the instance's TP
     /// domain.
     pub kv_link_bw: f64,
+    /// Elastic pools: grow on SLO pressure, shrink on sustained idle,
+    /// with a warm-up delay (see [`AutoscalePolicy`]). `None` (the
+    /// default) keeps the fleet fixed. A cluster with a policy must be
+    /// built via [`ClusterSim::with_factory`] so scale-ups can mint
+    /// engines.
+    pub autoscale: Option<AutoscalePolicy>,
     /// Global step/time limits (steps count across all instances).
     pub sim: SimConfig,
 }
@@ -82,6 +89,7 @@ impl Default for ClusterSpec {
             max_batch: 32,
             prefill_chunk: crate::model::DEFAULT_PREFILL_CHUNK,
             kv_link_bw: crate::hw::DEFAULT_XFER_BW_PER_CHIP,
+            autoscale: None,
             sim: SimConfig::default(),
         }
     }
@@ -92,7 +100,14 @@ impl Default for ClusterSpec {
 pub struct ClusterSim {
     instances: Vec<Instance<'static>>,
     roles: Vec<Role>,
-    /// Front-door candidate indices (roles are fixed at construction).
+    /// Membership state per instance (all `Active` in a fixed fleet;
+    /// autoscaled instances pass through `Warming` and may end
+    /// `Retired`).
+    states: Vec<InstanceState>,
+    /// Front-door candidate indices, kept sorted by instance id as
+    /// instances join (post-warm-up) and leave (retirement), so
+    /// id-ordered policies (round-robin, argmin tie-breaks) stay
+    /// deterministic across membership changes.
     front_door: Vec<usize>,
     /// Decode-side KV footprint committed to in-flight shipments, per
     /// instance (so placement sees transfers that have not landed yet).
@@ -118,6 +133,36 @@ pub struct ClusterSim {
     kv_transfer_total: f64,
     /// Number of shipments.
     kv_transfers: u64,
+    /// Per-role engine mint for autoscaled spawns (`None` in a fixed
+    /// fleet).
+    factory: Option<EngineFactory>,
+    /// Prototype KV budget cloned into every spawned instance's
+    /// batcher (the same budget construction-time instances got).
+    kv_proto: KvBudget,
+    /// Sim time each instance was provisioned (0 for the initial
+    /// fleet) — the start of its billed span.
+    spawn_time: Vec<f64>,
+    /// Sim time each instance was retired, if it was.
+    retired_at: Vec<Option<f64>>,
+    /// Sim time since when each instance has been completely idle
+    /// (no queued/active work, no step in flight, no inbound KV);
+    /// `INFINITY` while occupied. Input to the idle-shrink rule.
+    idle_since: Vec<f64>,
+    /// Exact count of KV shipments currently in flight toward each
+    /// instance. `in_transit_kv` tracks *bytes* for placement and can
+    /// accumulate float residue as overlapping transfers settle; the
+    /// shrink rule needs the exact "nothing inbound" predicate so a
+    /// retired instance can never receive a shipment.
+    inbound_shipments: Vec<u32>,
+    /// Scale actions taken, for the report.
+    scale_ups: u64,
+    scale_downs: u64,
+    /// Sim time of the last scale action (cooldown gate).
+    last_scale: f64,
+    /// Arrivals / sheds observed since the last scale-up evaluation
+    /// (the shed-rate trigger's window).
+    arrivals_window: u64,
+    shed_window: u64,
 }
 
 impl ClusterSim {
@@ -127,16 +172,51 @@ impl ClusterSim {
     /// pool (decode instances run with prefill chunk 0: prompts arrive
     /// already in KV, the paper's disaggregated assumption).
     ///
-    /// Panics on an empty engine list, a non-positive `kv_link_bw`, or a
-    /// disaggregated split that leaves either pool empty.
+    /// Panics on an empty engine list, a non-positive `kv_link_bw`, a
+    /// disaggregated split that leaves either pool empty, or a spec
+    /// with an autoscale policy (which needs an engine factory — use
+    /// [`ClusterSim::with_factory`]).
     pub fn new(
         engines: Vec<Box<dyn StepEngine>>,
         kv: KvBudget,
         router: Box<dyn Router>,
         spec: ClusterSpec,
     ) -> Self {
+        assert!(
+            spec.autoscale.is_none(),
+            "an autoscaling cluster needs an engine factory; \
+             build it with ClusterSim::with_factory"
+        );
+        Self::build(engines, kv, router, spec, None)
+    }
+
+    /// [`ClusterSim::new`] plus a per-role [`EngineFactory`] the
+    /// autoscaler mints spawned instances' engines from — the hook for
+    /// heterogeneous pools (compute-heavy prefill engines,
+    /// bandwidth-heavy decode engines). Required when
+    /// [`ClusterSpec::autoscale`] is set.
+    pub fn with_factory(
+        engines: Vec<Box<dyn StepEngine>>,
+        kv: KvBudget,
+        router: Box<dyn Router>,
+        spec: ClusterSpec,
+        factory: EngineFactory,
+    ) -> Self {
+        Self::build(engines, kv, router, spec, Some(factory))
+    }
+
+    fn build(
+        engines: Vec<Box<dyn StepEngine>>,
+        kv: KvBudget,
+        router: Box<dyn Router>,
+        spec: ClusterSpec,
+        factory: Option<EngineFactory>,
+    ) -> Self {
         assert!(!engines.is_empty(), "cluster needs at least one instance");
         assert!(spec.kv_link_bw > 0.0, "kv_link_bw must be positive");
+        if let Some(policy) = &spec.autoscale {
+            policy.validate();
+        }
         if let ClusterMode::Disaggregated { prefill } = spec.mode {
             assert!(
                 prefill >= 1 && prefill < engines.len(),
@@ -186,6 +266,7 @@ impl ClusterSim {
         ClusterSim {
             instances,
             roles,
+            states: vec![InstanceState::Active; n],
             front_door,
             in_transit_kv: vec![0.0; n],
             router,
@@ -197,19 +278,42 @@ impl ClusterSim {
             kv_shipped_bytes: 0.0,
             kv_transfer_total: 0.0,
             kv_transfers: 0,
+            factory,
+            kv_proto: kv,
+            // The initial fleet is provisioned (and idle) from t=0.
+            spawn_time: vec![0.0; n],
+            retired_at: vec![None; n],
+            idle_since: vec![0.0; n],
+            inbound_shipments: vec![0; n],
+            scale_ups: 0,
+            scale_downs: 0,
+            last_scale: f64::NEG_INFINITY,
+            arrivals_window: 0,
+            shed_window: 0,
         }
     }
 
     /// Human-readable mode string, e.g. `colocated x8` or
-    /// `disaggregated 3P+5D`.
+    /// `disaggregated 3P+5D`. Counted from the role table, so an
+    /// autoscaled run reports the fleet it actually provisioned (its
+    /// peak), with an `autoscaled` marker.
     fn mode_label(&self) -> String {
-        match self.spec.mode {
-            ClusterMode::Colocated => format!("colocated x{}", self.instances.len()),
-            ClusterMode::Disaggregated { prefill } => format!(
+        let prefill =
+            self.roles.iter().filter(|&&r| r == Role::Prefill).count();
+        let base = match self.spec.mode {
+            ClusterMode::Colocated => {
+                format!("colocated x{}", self.instances.len())
+            }
+            ClusterMode::Disaggregated { .. } => format!(
                 "disaggregated {}P+{}D",
                 prefill,
                 self.instances.len() - prefill
             ),
+        };
+        if self.spec.autoscale.is_some() {
+            format!("{base} autoscaled")
+        } else {
+            base
         }
     }
 
@@ -218,13 +322,20 @@ impl ClusterSim {
     fn refresh_loads(&mut self) {
         self.loads_buf.clear();
         let arena = &self.arena;
-        for (inst, &role) in self.instances.iter().zip(&self.roles) {
+        for (i, inst) in self.instances.iter().enumerate() {
             self.loads_buf.push(InstanceLoad {
-                role,
+                role: self.roles[i],
+                placeable: self.states[i] == InstanceState::Active,
                 queued: inst.queued_len(),
                 active: inst.active_len(),
                 max_batch: inst.max_batch(),
-                outstanding_kv_bytes: inst.outstanding_kv_bytes(),
+                // Landed + in-transit footprint. Regression: the
+                // snapshot used to omit `in_transit_kv`, so routers
+                // saw less decode-pool load than `pick_decode` did for
+                // the same instant — an in-flight shipment was
+                // invisible to every routing decision.
+                outstanding_kv_bytes: inst.outstanding_kv_bytes()
+                    + self.in_transit_kv[i],
                 outstanding_gen_tokens: inst.outstanding_gen_tokens(),
                 pending_prefill_tokens: inst.pending_prefill_tokens(),
                 pending_prefill_prompts: inst.pending_prefill_prompts(arena),
@@ -273,6 +384,7 @@ impl ClusterSim {
             )
         };
         self.in_transit_kv[i] = (self.in_transit_kv[i] - bytes).max(0.0);
+        self.inbound_shipments[i] = self.inbound_shipments[i].saturating_sub(1);
         if dead {
             return;
         }
@@ -289,13 +401,218 @@ impl ClusterSim {
             self.instances
                 .iter()
                 .enumerate()
-                .filter(|(i, _)| self.roles[*i] == Role::Decode)
+                .filter(|(i, _)| {
+                    self.roles[*i] == Role::Decode
+                        && self.states[*i] == InstanceState::Active
+                })
                 .map(|(i, inst)| {
                     (i, inst.outstanding_kv_bytes() + self.in_transit_kv[i])
                 }),
         )
         .map(|(i, _)| i)
         .expect("disaggregated cluster has a decode pool")
+    }
+
+    // ---- autoscaling ---------------------------------------------------
+
+    /// Update the per-instance idle spans (autoscaled runs only). An
+    /// instance is idle only when it is `Active` with no queued or
+    /// active work, no step in flight, and no KV shipment inbound —
+    /// warming and retired instances are pinned at `INFINITY` so the
+    /// shrink rule never considers them, and an activating instance
+    /// starts its idle clock at its warm-up event.
+    fn track_idle(&mut self, now: f64) {
+        for (i, inst) in self.instances.iter().enumerate() {
+            let idle = self.states[i] == InstanceState::Active
+                && !inst.busy()
+                && inst.queued_len() == 0
+                && inst.active_len() == 0
+                && self.inbound_shipments[i] == 0;
+            if !idle {
+                self.idle_since[i] = f64::INFINITY;
+            } else if self.idle_since[i].is_infinite() {
+                self.idle_since[i] = now;
+            }
+        }
+    }
+
+    /// Pool sizes for `role`: `(provisioned, active)`. Warming
+    /// instances count as provisioned capacity (they gate the ceiling)
+    /// but not as active (they cannot absorb the shrink floor).
+    fn pool_sizes(&self, role: Role) -> (usize, usize) {
+        let mut provisioned = 0;
+        let mut active = 0;
+        for (i, &r) in self.roles.iter().enumerate() {
+            if r != role {
+                continue;
+            }
+            match self.states[i] {
+                InstanceState::Retired => {}
+                InstanceState::Warming => provisioned += 1,
+                InstanceState::Active => {
+                    provisioned += 1;
+                    active += 1;
+                }
+            }
+        }
+        (provisioned, active)
+    }
+
+    /// Which pool a scale-up grows. Colocated clusters have one pool;
+    /// disaggregated clusters grow the pool whose *least-loaded* active
+    /// member predicts the larger TTFT contribution (ties break to
+    /// prefill, deterministically), falling back to the other pool when
+    /// the chosen one is at its ceiling. `None` when nothing can grow.
+    /// Reads the load snapshot the caller just refreshed.
+    fn pick_grow_role(&self, policy: &AutoscalePolicy) -> Option<Role> {
+        let role = match self.spec.mode {
+            ClusterMode::Colocated => Role::Colocated,
+            ClusterMode::Disaggregated { .. } => {
+                let peer = peer_ewma(&self.loads_buf);
+                let pool_pressure = |role: Role| {
+                    self.loads_buf
+                        .iter()
+                        .filter(|l| l.placeable && l.role == role)
+                        .map(|l| l.predicted_ttft_seeded(0, peer))
+                        .fold(f64::INFINITY, f64::min)
+                };
+                if pool_pressure(Role::Decode) > pool_pressure(Role::Prefill) {
+                    Role::Decode
+                } else {
+                    Role::Prefill
+                }
+            }
+        };
+        let (provisioned, _) = self.pool_sizes(role);
+        if provisioned < policy.max_instances {
+            return Some(role);
+        }
+        if let ClusterMode::Disaggregated { .. } = self.spec.mode {
+            let other = if role == Role::Decode {
+                Role::Prefill
+            } else {
+                Role::Decode
+            };
+            let (p, _) = self.pool_sizes(other);
+            if p < policy.max_instances {
+                return Some(other);
+            }
+        }
+        None
+    }
+
+    /// Evaluate the scale policy. Every input is observed simulation
+    /// state — the shed/arrival window, the load snapshot, per-instance
+    /// idle spans, and the DES clock — never the wall clock, so seeded
+    /// runs replay their scale decisions bit-identically. At most one
+    /// scale action per call, and the cooldown gates action frequency.
+    fn maybe_scale<O: SimObserver>(
+        &mut self,
+        now: f64,
+        q: &mut EventQueue<InstanceEvent>,
+        obs: &mut O,
+    ) {
+        let Some(policy) = self.spec.autoscale.clone() else {
+            return;
+        };
+        if now < self.last_scale + policy.cooldown {
+            return;
+        }
+        // Scale up: once a decision window of arrivals has accumulated,
+        // trigger on the window's shed fraction or on predicted-TTFT
+        // headroom (the *best* front-door instance already predicts
+        // past the threshold — pressure visible before anything sheds).
+        if self.arrivals_window >= policy.decision_window {
+            let shed_frac =
+                self.shed_window as f64 / self.arrivals_window as f64;
+            self.arrivals_window = 0;
+            self.shed_window = 0;
+            self.refresh_loads();
+            let peer = peer_ewma(&self.loads_buf);
+            let best_ttft = self
+                .front_door
+                .iter()
+                .map(|&i| self.loads_buf[i].predicted_ttft_seeded(0, peer))
+                .fold(f64::INFINITY, f64::min);
+            if shed_frac > policy.shed_rate_up
+                || best_ttft > policy.ttft_headroom
+            {
+                if let Some(role) = self.pick_grow_role(&policy) {
+                    self.spawn_instance(now, role, policy.warmup_delay, q, obs);
+                    self.last_scale = now;
+                    return;
+                }
+            }
+        }
+        // Scale down: retire the newest active instance that has sat
+        // completely idle past the threshold, honoring the pool floor.
+        // Only a fully idle instance is ever retired, so retirement
+        // never strands work (the conservation invariant the DST
+        // checker audits across pool-size changes).
+        for i in (0..self.instances.len()).rev() {
+            if self.states[i] != InstanceState::Active {
+                continue;
+            }
+            if !(self.idle_since[i].is_finite()
+                && now - self.idle_since[i] >= policy.idle_shrink_after)
+            {
+                continue;
+            }
+            let (_, active) = self.pool_sizes(self.roles[i]);
+            if active <= policy.min_instances {
+                continue;
+            }
+            self.states[i] = InstanceState::Retired;
+            self.retired_at[i] = Some(now);
+            self.idle_since[i] = f64::INFINITY;
+            self.front_door.retain(|&j| j != i);
+            self.scale_downs += 1;
+            self.last_scale = now;
+            obs.on_scale_down(now, i);
+            return;
+        }
+    }
+
+    /// Provision one instance of `role`: mint an engine from the
+    /// factory, push it in [`InstanceState::Warming`] (no placement, no
+    /// work), and schedule its [`InstanceEvent::WarmupDone`] on the
+    /// shared calendar `warmup` seconds out.
+    fn spawn_instance<O: SimObserver>(
+        &mut self,
+        now: f64,
+        role: Role,
+        warmup: f64,
+        q: &mut EventQueue<InstanceEvent>,
+        obs: &mut O,
+    ) {
+        let engine = (self
+            .factory
+            .as_mut()
+            .expect("autoscaling cluster was built without an engine factory"))(
+            role,
+        );
+        let batcher = match role {
+            Role::Decode => {
+                Batcher::new(self.spec.max_batch, self.kv_proto.clone())
+            }
+            _ => Batcher::with_prefill(
+                self.spec.max_batch,
+                self.kv_proto.clone(),
+                self.spec.prefill_chunk,
+            ),
+        };
+        self.instances.push(Instance::new(batcher, engine));
+        self.roles.push(role);
+        self.states.push(InstanceState::Warming);
+        self.in_transit_kv.push(0.0);
+        self.inbound_shipments.push(0);
+        self.spawn_time.push(now);
+        self.retired_at.push(None);
+        self.idle_since.push(f64::INFINITY);
+        self.scale_ups += 1;
+        let i = self.instances.len() - 1;
+        obs.on_scale_up(now, i);
+        q.schedule_in(warmup, InstanceEvent::WarmupDone(i));
     }
 
     /// Run the workload to completion (or a configured limit).
@@ -346,6 +663,7 @@ impl ClusterSim {
                         let r = &self.arena[id];
                         self.router.route(r, &self.front_door, &self.loads_buf)
                     };
+                    self.arrivals_window += 1;
                     match pick {
                         Some(i) => {
                             obs.on_route(now, id, i);
@@ -355,6 +673,7 @@ impl ClusterSim {
                         }
                         None => {
                             obs.on_shed(now, id);
+                            self.shed_window += 1;
                             shed += 1;
                         }
                     }
@@ -375,14 +694,42 @@ impl ClusterSim {
                     }
                 }
                 InstanceEvent::KvArrive(i, id) => self.kv_arrive(i, id),
+                InstanceEvent::WarmupDone(i) => {
+                    if self.states[i] == InstanceState::Warming {
+                        self.states[i] = InstanceState::Active;
+                        if matches!(
+                            self.roles[i],
+                            Role::Colocated | Role::Prefill
+                        ) {
+                            // Keep the front door sorted by id so
+                            // id-ordered policies stay deterministic.
+                            if let Err(pos) = self.front_door.binary_search(&i)
+                            {
+                                self.front_door.insert(pos, i);
+                            }
+                        }
+                        obs.on_warmup_done(now, i);
+                    }
+                }
             }
             if steps_total >= self.spec.sim.max_steps {
                 break;
             }
             for (i, inst) in self.instances.iter_mut().enumerate() {
+                // Warming instances hold no work by construction and
+                // retired ones drained before retirement; skipping
+                // them keeps the no-op kick off the scaled fleet's
+                // hot path.
+                if self.states[i] != InstanceState::Active {
+                    continue;
+                }
                 if let Some(dt) = inst.kick(now, &mut self.arena) {
                     q.schedule_in(dt, InstanceEvent::StepDone(i));
                 }
+            }
+            if self.spec.autoscale.is_some() {
+                self.track_idle(now);
+                self.maybe_scale(now, &mut q, obs);
             }
             obs.post_event(now, &ev, &self.instances, &self.arena);
         }
@@ -430,6 +777,7 @@ impl ClusterSim {
         let dest = self.pick_decode();
         self.in_transit_kv[dest] +=
             (ctx + full_gen) as f64 * self.kv_bytes_per_token;
+        self.inbound_shipments[dest] += 1;
         let dt = ship_bytes / self.spec.kv_link_bw;
         self.kv_shipped_bytes += ship_bytes;
         self.kv_transfer_total += dt;
@@ -468,6 +816,18 @@ impl ClusterSim {
             &agg,
         );
         let pools = self.pool_stats(end_time);
+        // Billed capacity: every instance costs from the moment it is
+        // provisioned (warm-up time is paid for, not free) until it is
+        // retired or the run ends. The fixed-vs-autoscaled experiment
+        // compares fleets on exactly this quantity.
+        let instance_seconds: f64 = self
+            .spawn_time
+            .iter()
+            .zip(&self.retired_at)
+            .map(|(&spawned, &retired)| {
+                (retired.unwrap_or(end_time) - spawned).max(0.0)
+            })
+            .sum();
 
         ClusterReport {
             router: router_name,
@@ -484,6 +844,9 @@ impl ClusterSim {
             } else {
                 0.0
             },
+            instance_seconds,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
         }
     }
 
@@ -857,5 +1220,238 @@ mod tests {
         sim.ship(sub, &mut q);
         assert_eq!(sim.origin[sub.index()], None, "stale origin entry leaks");
         assert_eq!(q.len(), 1, "exactly one KvArrive scheduled");
+    }
+
+    /// Test-only router: least committed KV bytes, lowest index on
+    /// ties. Exists to observe exactly what the load snapshot reports.
+    #[derive(Debug)]
+    struct LeastKv;
+
+    impl Router for LeastKv {
+        fn route(
+            &mut self,
+            _r: &Request,
+            candidates: &[usize],
+            loads: &[InstanceLoad],
+        ) -> Option<usize> {
+            argmin(
+                candidates
+                    .iter()
+                    .map(|&i| (i, loads[i].outstanding_kv_bytes)),
+            )
+            .map(|(i, _)| i)
+        }
+
+        fn name(&self) -> String {
+            "least-kv".into()
+        }
+    }
+
+    #[test]
+    fn in_flight_shipments_change_routing_decisions() {
+        // Regression: `refresh_loads` used to report only *landed* KV
+        // (`inst.outstanding_kv_bytes()`), omitting `in_transit_kv` —
+        // so a router balancing on KV footprint couldn't see bytes
+        // already committed to an instance by an in-flight shipment,
+        // and kept routing toward the instance a transfer was about to
+        // fill. With the fix, the same snapshot `pick_decode` uses
+        // reaches the router.
+        let mut sim = ClusterSim::new(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(LeastKv),
+            colo_spec(4, 0),
+        );
+        sim.in_transit_kv[0] = 64.0;
+        sim.refresh_loads();
+        assert_eq!(sim.loads_buf[0].outstanding_kv_bytes, 64.0);
+        assert_eq!(sim.loads_buf[1].outstanding_kv_bytes, 0.0);
+        let r = mk_req(0, 0.0, 8, 2);
+        let pick = sim.router.route(&r, &[0, 1], &sim.loads_buf);
+        // Old snapshots showed 0 KV on both instances and the tie broke
+        // to instance 0 — straight into the in-flight shipment.
+        assert_eq!(pick, Some(1));
+    }
+
+    // ---- autoscaling ---------------------------------------------------
+
+    /// Records every scale-lifecycle hook with its firing time.
+    #[derive(Default)]
+    struct ScaleLog {
+        routed: Vec<(f64, usize)>,
+        scaled_up: Vec<(f64, usize)>,
+        warmed: Vec<(f64, usize)>,
+        scaled_down: Vec<(f64, usize)>,
+    }
+
+    impl SimObserver for ScaleLog {
+        fn on_route(&mut self, now: f64, _id: ReqId, instance: usize) {
+            self.routed.push((now, instance));
+        }
+        fn on_scale_up(&mut self, now: f64, instance: usize) {
+            self.scaled_up.push((now, instance));
+        }
+        fn on_warmup_done(&mut self, now: f64, instance: usize) {
+            self.warmed.push((now, instance));
+        }
+        fn on_scale_down(&mut self, now: f64, instance: usize) {
+            self.scaled_down.push((now, instance));
+        }
+    }
+
+    fn fixed_factory(dt: f64) -> EngineFactory {
+        Box::new(move |_role| Box::new(FixedEngine(dt)) as Box<dyn StepEngine>)
+    }
+
+    #[test]
+    #[should_panic(expected = "engine factory")]
+    fn autoscaling_spec_requires_a_factory() {
+        let spec = ClusterSpec {
+            autoscale: Some(AutoscalePolicy::default()),
+            ..colo_spec(4, 0)
+        };
+        ClusterSim::new(
+            engines(1, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            spec,
+        );
+    }
+
+    #[test]
+    fn overload_spawns_an_instance_that_serves_only_after_warmup() {
+        // One overloaded instance (max_batch 1), arrivals every 50 ms.
+        // The predicted-TTFT trigger fires once the decision window
+        // fills; the spawned instance warms for 0.5 s and must receive
+        // zero requests before its warm-up event, then share the load.
+        let policy = AutoscalePolicy {
+            decision_window: 4,
+            ttft_headroom: 0.05,
+            warmup_delay: 0.5,
+            cooldown: 10.0,
+            idle_shrink_after: 1000.0,
+            max_instances: 2,
+            ..Default::default()
+        };
+        let spec =
+            ClusterSpec { autoscale: Some(policy), ..colo_spec(1, 0) };
+        let sim = ClusterSim::with_factory(
+            engines(1, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            spec,
+            fixed_factory(0.1),
+        );
+        let wl: Vec<Request> =
+            (0..40).map(|i| mk_req(i, 0.05 * i as f64, 0, 5)).collect();
+        let mut log = ScaleLog::default();
+        let rep = sim.run_with(wl, &mut log);
+        assert_eq!(rep.cluster.completed, 40);
+        assert_eq!(rep.scale_ups, 1, "ceiling caps the fleet at 2");
+        assert_eq!(rep.scale_downs, 0);
+        assert_eq!(rep.per_instance.len(), 2);
+        assert!(rep.mode.contains("autoscaled"), "{}", rep.mode);
+        let (spawned_at, spawned) = log.scaled_up[0];
+        let (warm_at, warmed) = log.warmed[0];
+        assert_eq!(spawned, 1);
+        assert_eq!(warmed, 1);
+        assert!((warm_at - (spawned_at + 0.5)).abs() < 1e-9);
+        // Warming instances take no placement...
+        assert!(
+            log.routed.iter().all(|&(t, i)| i != 1 || t >= warm_at),
+            "routed to instance 1 before its warm-up completed"
+        );
+        // ...but serve once active.
+        assert!(log.routed.iter().any(|&(_, i)| i == 1));
+        // Billed from spawn (warm-up included), not from t=0.
+        assert!(rep.instance_seconds > rep.cluster.span);
+        assert!(rep.instance_seconds < 2.0 * rep.cluster.span);
+    }
+
+    #[test]
+    fn warmup_event_at_exactly_max_time_still_applies() {
+        // Exact binary arithmetic throughout (steps of 0.125 s): one
+        // request at t=0 seeds the EWMA, a burst at t=0.5 fills the
+        // decision window at its third arrival, so the spawn lands at
+        // exactly 0.5 and the warm-up event at exactly 1.0 == max_time.
+        // The deadline clamp is peek-first (`t > max_time` breaks), so
+        // the boundary event must apply — a `>=` off-by-one would drop
+        // the activation and this test's warm log would be empty.
+        let policy = AutoscalePolicy {
+            decision_window: 4,
+            ttft_headroom: 0.05,
+            warmup_delay: 0.5,
+            cooldown: 10.0,
+            idle_shrink_after: 1000.0,
+            max_instances: 2,
+            ..Default::default()
+        };
+        let spec = ClusterSpec {
+            autoscale: Some(policy),
+            sim: SimConfig { max_time: 1.0, ..Default::default() },
+            ..colo_spec(1, 0)
+        };
+        let sim = ClusterSim::with_factory(
+            engines(1, 0.125),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            spec,
+            fixed_factory(0.125),
+        );
+        let mut wl = vec![mk_req(0, 0.0, 0, 1)];
+        wl.extend((1..=4).map(|i| mk_req(i, 0.5, 0, 20)));
+        let mut log = ScaleLog::default();
+        let rep = sim.run_with(wl, &mut log);
+        assert_eq!(log.scaled_up.len(), 1);
+        assert!((log.scaled_up[0].0 - 0.5).abs() < 1e-12);
+        assert_eq!(log.warmed.len(), 1, "boundary warm-up event dropped");
+        assert!((log.warmed[0].0 - 1.0).abs() < 1e-12);
+        assert_eq!(log.warmed[0].1, 1);
+        assert!((rep.cluster.span - 1.0).abs() < 1e-12);
+        // Billing: instance 0 the whole second, instance 1 from 0.5.
+        assert!((rep.instance_seconds - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sustained_idle_shrinks_to_the_pool_floor_and_no_further() {
+        // Two instances, one early request: the idle peer retires once
+        // its idle span crosses the threshold, but the last instance
+        // never does (min_instances floor) — it must still be there to
+        // serve the late arrival.
+        let policy = AutoscalePolicy {
+            idle_shrink_after: 0.2,
+            cooldown: 0.0,
+            min_instances: 1,
+            ..Default::default()
+        };
+        let spec =
+            ClusterSpec { autoscale: Some(policy), ..colo_spec(1, 0) };
+        let sim = ClusterSim::with_factory(
+            engines(2, 0.1),
+            open_budget(),
+            Box::new(RoundRobin::new()),
+            spec,
+            fixed_factory(0.1),
+        );
+        let wl = vec![mk_req(0, 0.0, 0, 2), mk_req(1, 2.0, 0, 2)];
+        let mut log = ScaleLog::default();
+        let rep = sim.run_with(wl, &mut log);
+        assert_eq!(rep.cluster.completed, 2);
+        assert_eq!(rep.scale_ups, 0);
+        assert_eq!(rep.scale_downs, 1);
+        // Instance 1 is idle from t=0; the r0 step event at t=0.2
+        // crosses the threshold and retires it. Instance 0 survives on
+        // the floor despite idling from 0.2 to 2.0.
+        assert_eq!(log.scaled_down.len(), 1);
+        let (retired_at, retired) = log.scaled_down[0];
+        assert_eq!(retired, 1);
+        assert!((retired_at - 0.2).abs() < 1e-9);
+        // Nothing ever routed to the retired instance (round-robin
+        // starts at candidates[0] and instance 1 left the front door).
+        assert!(log.routed.iter().all(|&(_, i)| i == 0));
+        // Billing: instance 0 for the full span (2.2 s), instance 1
+        // until retirement (0.2 s).
+        assert!((rep.cluster.span - 2.2).abs() < 1e-9);
+        assert!((rep.instance_seconds - 2.4).abs() < 1e-9);
     }
 }

@@ -15,8 +15,8 @@ use anyhow::Context;
 
 use crate::apps::Registry;
 use crate::cluster::{
-    ClusterMode, ClusterReport, ClusterSim, ClusterSpec, LeastOutstandingTokens,
-    RoundRobin, Router, SloAdmission,
+    AutoscalePolicy, ClusterMode, ClusterReport, ClusterSim, ClusterSpec,
+    LeastOutstandingTokens, Role, RoundRobin, Router, SloAdmission,
 };
 use crate::hw::SystemConfig;
 use crate::serving::{
@@ -195,6 +195,17 @@ pub struct ClusterJob {
     /// per-instance system's [`SystemConfig::interconnect_bw`];
     /// `f64::INFINITY` models an ideal link).
     pub kv_link_bw: Option<f64>,
+    /// Dedicated hardware for the prefill pool (heterogeneous pools);
+    /// `None` serves both pools on `sys`. Only meaningful when
+    /// `prefill_instances > 0` — prefill is compute-bound while decode
+    /// is bandwidth-bound, so the pools often want different chips.
+    pub prefill_sys: Option<SystemConfig>,
+    /// Elastic fleet policy; `None` runs the fixed fleet. When set, the
+    /// cluster grows toward `max_instances` on shed pressure or TTFT
+    /// headroom exhaustion and shrinks idle instances toward
+    /// `min_instances`; spawned instances serve only after the warm-up
+    /// delay elapses on the simulated clock.
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 /// Convenience builder for cluster jobs: 4 colocated instances,
@@ -212,6 +223,8 @@ pub fn default_cluster_job(model: &str, sys: SystemConfig) -> ClusterJob {
         router: RouterPolicy::RoundRobin,
         ttft_target: 0.5,
         kv_link_bw: None,
+        prefill_sys: None,
+        autoscale: None,
     }
 }
 
@@ -237,15 +250,42 @@ pub fn build_cluster_sim(job: &ClusterJob) -> Result<ClusterSim> {
         job.prefill_instances == 0 || job.prefill_chunk > 0,
         "disaggregated mode needs a nonzero prefill chunk"
     );
+    anyhow::ensure!(
+        job.prefill_sys.is_none() || job.prefill_instances > 0,
+        "a dedicated prefill system needs a prefill pool (prefill_instances > 0)"
+    );
+    if let Some(p) = &job.autoscale {
+        anyhow::ensure!(
+            p.min_instances >= 1 && p.min_instances <= p.max_instances,
+            "autoscale bounds must satisfy 1 <= min ({}) <= max ({})",
+            p.min_instances,
+            p.max_instances
+        );
+    }
     let kv_link_bw = job.kv_link_bw.unwrap_or_else(|| job.sys.interconnect_bw());
     anyhow::ensure!(
         kv_link_bw > 0.0,
         "kv link bandwidth must be positive (got {kv_link_bw})"
     );
 
+    // Heterogeneous pools: the first `prefill_instances` engines (the
+    // prefill pool) price on `prefill_sys` when one is set; everything
+    // else — and the KV budget, which lives decode-side — on `sys`.
+    let sys_for = |role: Role| match (role, &job.prefill_sys) {
+        (Role::Prefill, Some(p)) => p.clone(),
+        _ => job.sys.clone(),
+    };
     let engines: Vec<Box<dyn StepEngine>> = (0..job.instances)
-        .map(|_| {
-            Box::new(AnalyticEngine::new(Arc::clone(&app), job.sys.clone()))
+        .map(|i| {
+            let role = if job.prefill_instances > 0 && i < job.prefill_instances
+            {
+                Role::Prefill
+            } else if job.prefill_instances > 0 {
+                Role::Decode
+            } else {
+                Role::Colocated
+            };
+            Box::new(AnalyticEngine::new(Arc::clone(&app), sys_for(role)))
                 as Box<dyn StepEngine>
         })
         .collect();
@@ -265,9 +305,27 @@ pub fn build_cluster_sim(job: &ClusterJob) -> Result<ClusterSim> {
         prefill_chunk: job.prefill_chunk,
         kv_link_bw,
         sim: SimConfig::default(),
+        autoscale: job.autoscale.clone(),
     };
     let router = job.router.build(job.ttft_target);
-    Ok(ClusterSim::new(engines, kv, router, spec))
+    if job.autoscale.is_some() {
+        // Spawned instances get the same role-matched analytic pricing
+        // as the initial fleet.
+        let app = Arc::clone(&app);
+        let sys = job.sys.clone();
+        let prefill_sys = job.prefill_sys.clone();
+        let factory = Box::new(move |role: Role| {
+            let s = match (role, &prefill_sys) {
+                (Role::Prefill, Some(p)) => p.clone(),
+                _ => sys.clone(),
+            };
+            Box::new(AnalyticEngine::new(Arc::clone(&app), s))
+                as Box<dyn StepEngine>
+        });
+        Ok(ClusterSim::with_factory(engines, kv, router, spec, factory))
+    } else {
+        Ok(ClusterSim::new(engines, kv, router, spec))
+    }
 }
 
 /// Run a cluster job to completion and return its merged report.
@@ -379,6 +437,68 @@ mod tests {
         job.prefill_instances = 1;
         job.prefill_chunk = 0; // CLI-reachable: --prefill-chunk 0
         assert!(serve_cluster(&job).is_err());
+    }
+
+    #[test]
+    fn autoscaled_cluster_job_runs_end_to_end() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 1;
+        job.router = RouterPolicy::SloAware;
+        job.workload.n_requests = 30;
+        job.workload.arrival_rate = 50.0;
+        job.autoscale = Some(AutoscalePolicy {
+            min_instances: 1,
+            max_instances: 4,
+            ..AutoscalePolicy::default()
+        });
+        let rep = serve_cluster(&job).unwrap();
+        assert!(rep.mode.contains("autoscaled"), "{}", rep.mode);
+        assert_eq!(rep.cluster.completed + rep.shed, 30);
+        assert!(rep.instance_seconds > 0.0);
+        // The fleet never exceeds the policy ceiling.
+        assert!(rep.per_instance.len() <= 4);
+    }
+
+    #[test]
+    fn autoscale_bounds_are_validated() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.autoscale = Some(AutoscalePolicy {
+            min_instances: 5,
+            max_instances: 2,
+            ..AutoscalePolicy::default()
+        });
+        let err = serve_cluster(&job).unwrap_err().to_string();
+        assert!(err.contains("min"), "{err}");
+    }
+
+    #[test]
+    fn heterogeneous_prefill_pool_serves_on_its_own_hardware() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut homo = default_cluster_job("llama3-70b", sys.clone());
+        homo.instances = 2;
+        homo.prefill_instances = 1;
+        homo.workload.n_requests = 20;
+        homo.workload.arrival_rate = 20.0;
+        let mut hetero = homo.clone();
+        // A prefill pool with 4x the chips ingests prompts faster;
+        // decode pricing and the KV budget stay on the decode system.
+        hetero.prefill_sys = Some(SystemConfig::new(presets::hbm3(), 32, 1));
+        let rep_homo = serve_cluster(&homo).unwrap();
+        let rep_hetero = serve_cluster(&hetero).unwrap();
+        assert_eq!(rep_hetero.cluster.completed, 20);
+        assert!(rep_hetero.cluster.ttft.p50 > 0.0);
+        assert!(rep_hetero.cluster.ttft.p50 <= rep_homo.cluster.ttft.p50);
+    }
+
+    #[test]
+    fn prefill_sys_without_a_prefill_pool_is_an_error() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys.clone());
+        job.prefill_sys = Some(sys); // colocated: no pool to serve it
+        let err = serve_cluster(&job).unwrap_err().to_string();
+        assert!(err.contains("prefill pool"), "{err}");
     }
 
     #[test]

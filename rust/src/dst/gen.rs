@@ -13,12 +13,13 @@
 //! bugs — a deadline landing before the first arrival (zero
 //! completions), near-full KV budgets (head-of-line blocking),
 //! disaggregated pools over finite and ideal links, exact `max_steps`
-//! truncation, mid-run deadline clamps, and an SLO router tight enough
-//! to shed — rather than sampling them by luck.
+//! truncation, mid-run deadline clamps, an SLO router tight enough to
+//! shed, and autoscaled fleets (warm-up, scale transitions, retirement
+//! mid-run) — rather than sampling them by luck.
 
 use crate::cluster::{
-    ClusterMode, ClusterSim, ClusterSpec, LeastOutstandingTokens, RoundRobin,
-    Router, SloAdmission,
+    AutoscalePolicy, ClusterMode, ClusterSim, ClusterSpec,
+    LeastOutstandingTokens, RoundRobin, Router, SloAdmission,
 };
 use crate::serving::{
     KvBudget, Request, SimConfig, StepBatch, StepEngine, WorkloadGen,
@@ -107,6 +108,9 @@ pub struct FuzzCase {
     pub kv_budget_tokens: f64,
     /// Step pricing.
     pub engine: FuzzEngine,
+    /// Elastic-fleet policy (`None` = fixed fleet). Family 7 cases set
+    /// this, exercising warm-up and scale transitions under fuzz.
+    pub autoscale: Option<AutoscalePolicy>,
     /// Deadline clamp, seconds (`f64::INFINITY` to drain).
     pub max_time: f64,
     /// Global step limit.
@@ -133,6 +137,7 @@ impl FuzzCase {
         self.instances == 1
             && self.prefill_instances == 0
             && self.router != RouterKind::SloAware
+            && self.autoscale.is_none()
     }
 
     /// The per-instance KV budget (one byte per token).
@@ -151,6 +156,7 @@ impl FuzzCase {
             max_batch: self.max_batch,
             prefill_chunk: self.prefill_chunk,
             kv_link_bw: self.kv_link_bw,
+            autoscale: self.autoscale.clone(),
             sim: SimConfig { max_time: self.max_time, max_steps: self.max_steps },
         }
     }
@@ -160,12 +166,28 @@ impl FuzzCase {
         let engines: Vec<Box<dyn StepEngine>> = (0..self.instances)
             .map(|_| Box::new(self.engine.clone()) as Box<dyn StepEngine>)
             .collect();
-        ClusterSim::new(
-            engines,
-            self.kv_budget(),
-            self.router.build(self.ttft_target),
-            self.spec(),
-        )
+        if self.autoscale.is_some() {
+            // Spawned instances price steps exactly like the initial
+            // fleet, so scale transitions change membership, never
+            // step economics — failures isolate to the autoscaler.
+            let proto = self.engine.clone();
+            ClusterSim::with_factory(
+                engines,
+                self.kv_budget(),
+                self.router.build(self.ttft_target),
+                self.spec(),
+                Box::new(move |_role| {
+                    Box::new(proto.clone()) as Box<dyn StepEngine>
+                }),
+            )
+        } else {
+            ClusterSim::new(
+                engines,
+                self.kv_budget(),
+                self.router.build(self.ttft_target),
+                self.spec(),
+            )
+        }
     }
 }
 
@@ -221,6 +243,7 @@ pub fn gen_case(seed: u64) -> FuzzCase {
         per_prefill_token: rng.f64() * 0.001,
     };
     let mut ttft_target = 0.05 + rng.f64() * 1.95;
+    let mut autoscale: Option<AutoscalePolicy> = None;
     let mut max_time = f64::INFINITY;
     let mut max_steps = 10_000_000u64;
 
@@ -263,7 +286,23 @@ pub fn gen_case(seed: u64) -> FuzzCase {
             router = RouterKind::SloAware;
             ttft_target = 0.01 + rng.f64() * 0.19;
         }
-        _ => {}
+        _ => {
+            // Autoscaled fleet: aggressive thresholds and short
+            // warm-ups/cooldowns so real workloads trigger scale
+            // transitions inside the (short) fuzz runs — warm-up
+            // events, retirements, and membership churn under every
+            // router and both cluster modes.
+            autoscale = Some(AutoscalePolicy {
+                shed_rate_up: rng.f64() * 0.2,
+                ttft_headroom: 0.02 + rng.f64() * 0.48,
+                idle_shrink_after: 0.05 + rng.f64() * 0.95,
+                warmup_delay: rng.f64() * 0.5,
+                cooldown: rng.f64() * 0.2,
+                decision_window: 2 + rng.below(11) as u64,
+                min_instances: 1,
+                max_instances: instances + rng.range(1, 5) as usize,
+            });
+        }
     }
     if prefill_instances > 0 && prefill_chunk == 0 {
         // Disaggregation requires chunked prefill.
@@ -282,6 +321,7 @@ pub fn gen_case(seed: u64) -> FuzzCase {
         kv_link_bw,
         kv_budget_tokens,
         engine,
+        autoscale,
         max_time,
         max_steps,
     }
@@ -342,6 +382,29 @@ mod tests {
                     assert!(case.kv_link_bw.is_finite());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn autoscale_family_emits_valid_elastic_policies() {
+        for k in 0..5u64 {
+            let case = gen_case(k * 8 + 7);
+            let policy = case.autoscale.as_ref().expect("family 7 autoscales");
+            policy.validate();
+            assert!(
+                policy.max_instances > case.instances,
+                "seed {}: ceiling {} leaves no room to grow past {}",
+                k * 8 + 7,
+                policy.max_instances,
+                case.instances
+            );
+            assert!(!case.oracle_eligible(), "the single-instance oracle cannot scale");
+            assert_eq!(case.spec().autoscale, case.autoscale);
+            let _ = case.build_sim();
+        }
+        // Every other family keeps a fixed fleet.
+        for fam in 0..7u64 {
+            assert!(gen_case(fam).autoscale.is_none(), "family {fam}");
         }
     }
 

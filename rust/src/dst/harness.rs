@@ -173,6 +173,14 @@ fn report_checks(
     }
     check_finite("kv_shipped_bytes", report.kv_shipped_bytes, out);
     check_finite("kv_transfer_mean", report.kv_transfer_mean, out);
+    check_finite("instance_seconds", report.instance_seconds, out);
+    if case.autoscale.is_none() && (report.scale_ups | report.scale_downs) != 0
+    {
+        out.push(format!(
+            "fixed fleet reported scale actions (+{} / -{})",
+            report.scale_ups, report.scale_downs
+        ));
+    }
 
     if report.offered != case.requests.len() as u64 {
         out.push(format!(
@@ -377,6 +385,14 @@ fn shrink_candidates(c: &FuzzCase) -> Vec<FuzzCase> {
     if c.router != RouterKind::RoundRobin {
         let mut cand = c.clone();
         cand.router = RouterKind::RoundRobin;
+        out.push(cand);
+    }
+    if c.autoscale.is_some() {
+        // A fixed fleet is structurally simpler than an elastic one:
+        // if the failure survives without scale transitions, the
+        // autoscaler is exonerated from the reproducer.
+        let mut cand = c.clone();
+        cand.autoscale = None;
         out.push(cand);
     }
     if c.kv_link_bw.is_finite() {

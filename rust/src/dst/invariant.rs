@@ -15,12 +15,17 @@
 //!   (`generated == gen_len`, `prefilled == context_len`) and the
 //!   lifecycle stamps are ordered
 //!   (`arrival <= admitted <= first_token <= completed == now`);
+//! * scale lifecycles are ordered (spawn -> warm-up -> retire, each
+//!   phase entered exactly once) and a warming or retired instance
+//!   never holds work — conservation stays auditable across pool-size
+//!   changes;
 //! * after a fully drained run, every queue is empty, no KV is
 //!   reserved, and the arena reconciles against routed + subs + shed.
 //!
 //! Violations are collected as human-readable strings (never panics),
 //! so the harness can report all of them alongside the seed.
 
+use crate::cluster::InstanceState;
 use crate::serving::{
     Instance, InstanceEvent, LatencyStats, ReqId, RequestArena, SimObserver,
 };
@@ -72,6 +77,10 @@ pub struct InvariantChecker {
     /// Prompt tokens of lifecycle-finished requests.
     ctx_finished: u64,
     events: u64,
+    /// Per-instance membership phase, mirrored from the scale hooks.
+    /// Grown lazily (construction-time instances default to `Active`),
+    /// so fixed fleets never touch it.
+    fleet: Vec<InstanceState>,
     ttft: Vec<f64>,
     tpot: Vec<f64>,
     e2e: Vec<f64>,
@@ -167,6 +176,15 @@ impl InvariantChecker {
     fn set_slot(&mut self, id: ReqId, s: SlotState) {
         self.grow(id);
         self.state[id.index()] = s;
+    }
+
+    /// Grow the fleet books to cover instance `i`; slots the scale
+    /// hooks never announced are construction-time instances, `Active`
+    /// from t=0.
+    fn grow_fleet(&mut self, i: usize) {
+        if self.fleet.len() <= i {
+            self.fleet.resize(i + 1, InstanceState::Active);
+        }
     }
 
     /// Audit a lifecycle retirement's request state.
@@ -313,6 +331,46 @@ impl SimObserver for InvariantChecker {
         }
     }
 
+    fn on_scale_up(&mut self, now: f64, instance: usize) {
+        let existed = instance < self.fleet.len();
+        self.grow_fleet(instance);
+        if existed {
+            self.violate(format!(
+                "instance {instance}: scale-up into an already-tracked \
+                 slot ({:?}) at t={now}",
+                self.fleet[instance]
+            ));
+        } else {
+            self.fleet[instance] = InstanceState::Warming;
+        }
+    }
+
+    fn on_warmup_done(&mut self, now: f64, instance: usize) {
+        self.grow_fleet(instance);
+        if self.fleet[instance] != InstanceState::Warming {
+            self.violate(format!(
+                "instance {instance}: warm-up completed while {:?} \
+                 (not warming) at t={now}",
+                self.fleet[instance]
+            ));
+        } else {
+            self.fleet[instance] = InstanceState::Active;
+        }
+    }
+
+    fn on_scale_down(&mut self, now: f64, instance: usize) {
+        self.grow_fleet(instance);
+        if self.fleet[instance] != InstanceState::Active {
+            self.violate(format!(
+                "instance {instance}: retired while {:?} (not active) \
+                 at t={now}",
+                self.fleet[instance]
+            ));
+        } else {
+            self.fleet[instance] = InstanceState::Retired;
+        }
+    }
+
     fn post_event(
         &mut self,
         now: f64,
@@ -363,6 +421,26 @@ impl SimObserver for InvariantChecker {
                 self.violate(format!(
                     "instance {i}: busy time {busy} exceeds clock {now}"
                 ));
+            }
+            // A warming instance holds no work yet and a retired one
+            // never holds work again — the property that makes
+            // conservation trivial across pool-size changes.
+            if i < self.fleet.len() && self.fleet[i] != InstanceState::Active {
+                let phase = self.fleet[i];
+                if inst.queued_len() != 0 || inst.active_len() != 0 {
+                    self.violate(format!(
+                        "instance {i}: {phase:?} but holds {} queued / \
+                         {} active at t={now}",
+                        inst.queued_len(),
+                        inst.active_len()
+                    ));
+                }
+                if inst.busy() {
+                    self.violate(format!(
+                        "instance {i}: {phase:?} but has a step in \
+                         flight at t={now}"
+                    ));
+                }
             }
         }
         let in_instances: u64 = instances
@@ -508,6 +586,49 @@ mod tests {
         chk.post_event(0.5, &InstanceEvent::StepDone(0), &inst, &a);
         assert!(chk.violations().iter().any(|v| v.contains("backwards")));
         assert_eq!(chk.events(), 2);
+    }
+
+    #[test]
+    fn scale_lifecycle_transitions_are_audited() {
+        // Proper spawn -> warm-up -> retire sequence: clean books.
+        let mut chk = InvariantChecker::new(false);
+        chk.on_scale_up(0.0, 1);
+        chk.on_warmup_done(0.5, 1);
+        chk.on_scale_down(3.0, 1);
+        assert!(chk.violations().is_empty(), "{:?}", chk.violations());
+
+        // Warm-up for an instance that was never spawned (slot 0 is a
+        // construction-time, already-active instance).
+        let mut chk = InvariantChecker::new(false);
+        chk.on_warmup_done(0.5, 0);
+        assert!(chk.violations().iter().any(|v| v.contains("not warming")));
+
+        // Retiring an instance that never finished warming.
+        let mut chk = InvariantChecker::new(false);
+        chk.on_scale_up(0.0, 1);
+        chk.on_scale_down(0.5, 1);
+        assert!(chk.violations().iter().any(|v| v.contains("not active")));
+    }
+
+    #[test]
+    fn work_on_a_warming_instance_is_a_violation() {
+        let mut a = RequestArena::new();
+        let id = a.alloc(mk_req(0, 0.0, 8, 2));
+        let mut inst = crate::serving::Instance::new(
+            Batcher::new(1, open_budget()),
+            Box::new(FixedEngine(0.1)),
+        );
+        let mut chk = InvariantChecker::new(false);
+        chk.on_scale_up(0.0, 0);
+        chk.on_route(0.0, id, 0);
+        inst.enqueue(id, &a);
+        let insts = [inst];
+        chk.post_event(0.0, &InstanceEvent::Arrival(id), &insts, &a);
+        assert!(
+            chk.violations().iter().any(|v| v.contains("Warming")),
+            "{:?}",
+            chk.violations()
+        );
     }
 
     #[test]

@@ -7,15 +7,18 @@
 //!
 //! One `u64` seed names one complete scenario ([`gen_case`]): a Poisson
 //! workload, a cluster topology (instance count, colocated or
-//! disaggregated split, router policy, KV link bandwidth), engine step
-//! costs, KV budget, and run limits. The case runs through the real
-//! [`ClusterSim`](crate::cluster::ClusterSim) event loop with an
-//! [`InvariantChecker`] — a [`SimObserver`](crate::serving::SimObserver)
+//! disaggregated split, router policy, KV link bandwidth, optionally an
+//! autoscale policy — family `seed % 8 == 7` runs an elastic fleet),
+//! engine step costs, KV budget, and run limits. The case runs through
+//! the real [`ClusterSim`](crate::cluster::ClusterSim) event loop with
+//! an [`InvariantChecker`] — a
+//! [`SimObserver`](crate::serving::SimObserver)
 //! — auditing every applied event: monotonic clock, KV budget never
 //! exceeded, busy time never exceeding the clock, request conservation
-//! across queues/batches/transit, exact token accounting and ordered
-//! lifecycle stamps at every retirement, and closed books after a
-//! drained run. The final [`ClusterReport`](crate::cluster::ClusterReport)
+//! across queues/batches/transit (including across pool-size changes:
+//! scale lifecycles must be ordered and warming/retired instances must
+//! hold no work), exact token accounting and ordered lifecycle stamps
+//! at every retirement, and closed books after a drained run. The final [`ClusterReport`](crate::cluster::ClusterReport)
 //! is then reconciled against the checker's independent counts (and the
 //! pooled latency percentiles against a bit-identical re-aggregation);
 //! one-instance colocated cases are additionally diffed field-by-field

@@ -1,0 +1,240 @@
+//! Autoscaled-fleet study: fixed-for-peak vs. SLO-driven elastic
+//! provisioning under a diurnal + bursty workload.
+//!
+//! A fixed fleet must be sized for the worst minute it will ever see;
+//! every off-peak second of that provisioning is billed but idle. The
+//! autoscaler instead tracks the load signal the SLO router already
+//! computes — shed pressure and predicted-TTFT headroom — growing the
+//! pool when either crosses its threshold and retiring instances that
+//! sit fully idle, with spawned instances joining the front door only
+//! after a warm-up delay. This experiment prices both strategies on the
+//! same non-homogeneous Poisson workload ([`DiurnalGen`]: sinusoidal
+//! diurnal swing plus burst episodes) and reports the billed
+//! instance-seconds each needed to hold the TTFT SLO.
+//!
+//! Artifacts land in `<artifacts>/autoscale/`: the full cluster report
+//! for each fleet (`fixed.json`, `autoscaled.json`) and a side-by-side
+//! `summary.json` with the instance-hour savings.
+
+use std::path::Path;
+
+use crate::cluster::AutoscalePolicy;
+use crate::coordinator::{build_cluster_sim, default_cluster_job, ClusterJob, RouterPolicy};
+use crate::hw::{presets, SystemConfig};
+use crate::report::{Report, Table};
+use crate::serving::{DiurnalGen, DiurnalSpec, Request};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Admission TTFT target both fleets serve under (SLO-aware router).
+const TTFT_TARGET: f64 = 0.5;
+
+/// Peak provisioning: the fixed fleet's size, and the elastic fleet's
+/// ceiling.
+const PEAK_INSTANCES: usize = 6;
+
+/// The elastic fleet's floor (and starting size).
+const MIN_INSTANCES: usize = 2;
+
+/// The diurnal + bursty workload both fleets serve: full-swing
+/// sinusoid (the trough is quiet enough to drain the pool idle) with
+/// 2.5x burst episodes layered on top.
+fn diurnal_workload() -> Vec<Request> {
+    DiurnalGen::new(DiurnalSpec {
+        base_rate: 30.0,
+        amplitude: 1.0,
+        period: 12.0,
+        burst_every: 10.0,
+        burst_duration: 1.5,
+        burst_boost: 2.5,
+        n_requests: 800,
+        context: (512, 4096),
+        gen: (32, 256),
+        seed: 11,
+    })
+    .generate()
+}
+
+/// Study job: llama3-70b on HBM3-TP8 instances behind the SLO router.
+fn base_job(instances: usize) -> ClusterJob {
+    let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+    let mut job = default_cluster_job("llama3-70b", sys);
+    job.instances = instances;
+    job.max_batch = 16;
+    job.prefill_chunk = 512;
+    job.router = RouterPolicy::SloAware;
+    job.ttft_target = TTFT_TARGET;
+    job
+}
+
+/// The elastic policy under study: grow on shed pressure or once the
+/// best predicted TTFT eats half the admission budget; retire after a
+/// sustained idle spell; 1 s warm-up before a spawn serves.
+fn elastic_policy() -> AutoscalePolicy {
+    AutoscalePolicy {
+        shed_rate_up: 0.05,
+        ttft_headroom: TTFT_TARGET / 2.0,
+        idle_shrink_after: 1.5,
+        warmup_delay: 1.0,
+        cooldown: 1.0,
+        decision_window: 16,
+        min_instances: MIN_INSTANCES,
+        max_instances: PEAK_INSTANCES,
+    }
+}
+
+/// Run both fleets on the shared workload; returns
+/// `(fixed, autoscaled)` reports. Public so the acceptance test pins
+/// the instance-hour savings without re-deriving the configuration.
+pub fn fleet_comparison(
+) -> Result<(crate::cluster::ClusterReport, crate::cluster::ClusterReport)> {
+    let workload = diurnal_workload();
+    let fixed = build_cluster_sim(&base_job(PEAK_INSTANCES))?.run(workload.clone());
+    let mut job = base_job(MIN_INSTANCES);
+    job.autoscale = Some(elastic_policy());
+    let auto = build_cluster_sim(&job)?.run(workload);
+    Ok((fixed, auto))
+}
+
+/// One comparison row: fleet label + its report.
+fn fleet_row(label: &str, rep: &crate::cluster::ClusterReport) -> Vec<String> {
+    vec![
+        label.to_string(),
+        rep.per_instance.len().to_string(),
+        format!("+{} / -{}", rep.scale_ups, rep.scale_downs),
+        format!("{:.1}", rep.instance_seconds),
+        format!("{:.3} s", rep.cluster.ttft.p50),
+        format!("{:.3} s", rep.cluster.ttft.p99),
+        rep.shed.to_string(),
+        format!("{:.0}", rep.cluster.stps),
+    ]
+}
+
+/// JSON summary of one fleet for the artifact.
+fn fleet_json(rep: &crate::cluster::ClusterReport) -> Json {
+    Json::obj(vec![
+        ("instances_provisioned", Json::Num(rep.per_instance.len() as f64)),
+        ("instance_seconds", Json::Num(rep.instance_seconds)),
+        ("scale_ups", Json::Num(rep.scale_ups as f64)),
+        ("scale_downs", Json::Num(rep.scale_downs as f64)),
+        ("completed", Json::Num(rep.cluster.completed as f64)),
+        ("shed", Json::Num(rep.shed as f64)),
+        ("ttft_p50_s", Json::Num(rep.cluster.ttft.p50)),
+        ("ttft_p99_s", Json::Num(rep.cluster.ttft.p99)),
+        ("span_s", Json::Num(rep.cluster.span)),
+        ("stps", Json::Num(rep.cluster.stps)),
+    ])
+}
+
+/// Run the autoscaled-fleet experiment; artifacts land in
+/// `<artifact_dir>/autoscale/`.
+pub fn run(artifact_dir: &Path) -> Result<Report> {
+    let mut report = Report::new(
+        "autoscale-fleet",
+        "Fixed-for-peak vs. SLO-driven autoscaled fleet on a diurnal + bursty workload",
+    );
+    report.notes.push(format!(
+        "Study cluster: llama3-70b on xPU-HBM3 TP8, SLO router at a \
+         {TTFT_TARGET} s TTFT target. Fixed fleet: {PEAK_INSTANCES} \
+         instances. Elastic fleet: {MIN_INSTANCES}..{PEAK_INSTANCES} \
+         instances, 1 s warm-up (billed), grow on shed pressure or \
+         predicted-TTFT headroom, shrink after 1.5 s fully idle."
+    ));
+
+    let (fixed, auto) = fleet_comparison()?;
+    let mut t = Table::new(
+        "Fleet provisioning under the diurnal + bursty workload",
+        &[
+            "fleet",
+            "instances",
+            "scale +/-",
+            "instance-s billed",
+            "TTFT p50",
+            "TTFT p99",
+            "shed",
+            "STPS",
+        ],
+    );
+    t.push_row(fleet_row("fixed-for-peak", &fixed));
+    t.push_row(fleet_row("autoscaled", &auto));
+    report.tables.push(t);
+
+    let saved = 1.0 - auto.instance_seconds / fixed.instance_seconds;
+    report.notes.push(format!(
+        "Autoscaling held the TTFT SLO on {:.1} instance-s vs {:.1} \
+         fixed ({:.0}% fewer instance-hours).",
+        auto.instance_seconds,
+        fixed.instance_seconds,
+        saved * 100.0
+    ));
+
+    let out_dir = artifact_dir.join("autoscale");
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(out_dir.join("fixed.json"), fixed.to_json().to_string())?;
+    std::fs::write(
+        out_dir.join("autoscaled.json"),
+        auto.to_json().to_string(),
+    )?;
+    let summary = Json::obj(vec![
+        ("ttft_target_s", Json::Num(TTFT_TARGET)),
+        ("fixed", fleet_json(&fixed)),
+        ("autoscaled", fleet_json(&auto)),
+        ("instance_seconds_saved_frac", Json::Num(saved)),
+    ]);
+    let path = out_dir.join("summary.json");
+    std::fs::write(&path, summary.to_string())?;
+    report.notes.push(format!("wrote fleet artifact {}", path.display()));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autoscaled_fleet_bills_fewer_instance_seconds_at_the_slo() {
+        let (fixed, auto) = fleet_comparison().unwrap();
+        // The fixed fleet is provisioned (and billed) for peak the
+        // whole run; the elastic one starts at the floor and pays for
+        // capacity only after demand shows up.
+        assert!(auto.scale_ups > 0, "diurnal peak must trigger growth");
+        assert!(
+            auto.instance_seconds < fixed.instance_seconds,
+            "autoscaled {} vs fixed {}",
+            auto.instance_seconds,
+            fixed.instance_seconds
+        );
+        assert!(auto.per_instance.len() <= PEAK_INSTANCES);
+        // Both fleets hold the admission SLO for what they serve.
+        assert!(fixed.cluster.ttft.p50 <= TTFT_TARGET);
+        assert!(auto.cluster.ttft.p50 <= TTFT_TARGET);
+        // Conservation on both sides of the comparison.
+        assert_eq!(fixed.cluster.completed + fixed.shed, fixed.offered);
+        assert_eq!(auto.cluster.completed + auto.shed, auto.offered);
+    }
+
+    #[test]
+    fn report_renders_and_emits_the_fleet_artifacts() {
+        let dir = std::env::temp_dir()
+            .join(format!("liminal-autoscale-{}", std::process::id()));
+        let r = run(&dir).unwrap();
+        assert_eq!(r.tables.len(), 1);
+        assert!(r.to_markdown().contains("autoscaled"));
+        let text =
+            std::fs::read_to_string(dir.join("autoscale").join("summary.json"))
+                .unwrap();
+        let j = Json::parse(&text).unwrap();
+        let fixed = j.get("fixed").unwrap();
+        let auto = j.get("autoscaled").unwrap();
+        assert!(
+            auto.get("instance_seconds").unwrap().as_f64().unwrap()
+                < fixed.get("instance_seconds").unwrap().as_f64().unwrap()
+        );
+        assert!(auto.get("scale_ups").unwrap().as_f64().unwrap() > 0.0);
+        for stem in ["fixed", "autoscaled"] {
+            let p = dir.join("autoscale").join(format!("{stem}.json"));
+            assert!(p.exists(), "missing artifact {}", p.display());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

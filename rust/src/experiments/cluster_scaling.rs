@@ -122,6 +122,7 @@ pub fn run(artifact_dir: &Path) -> Result<Report> {
         base,
         instance_counts: vec![1, 2, 4, 8],
         routers: vec![RouterPolicy::RoundRobin],
+        autoscale: vec![None],
         scale_load: true,
     };
     let mut eff = Table::new(

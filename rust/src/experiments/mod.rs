@@ -2,6 +2,7 @@
 //! evaluation section, each regenerating its artifact from the
 //! analytical core (see DESIGN.md "Per-experiment index").
 
+mod autoscale;
 mod cent;
 mod cluster_scaling;
 mod compute_role;
@@ -18,6 +19,7 @@ mod table4;
 mod tables56;
 mod validation;
 
+pub use autoscale::{fleet_comparison, run as run_autoscale};
 pub use cent::{cent_pp_record, cent_tp_record};
 pub use cluster_scaling::{
     router_comparison, run as run_cluster_scaling, OVERLOAD_RATE,
@@ -35,7 +37,7 @@ use crate::Result;
 pub const ALL: &[&str] = &[
     "table1", "table2", "table4", "table5", "table6", "table7",
     "fig2", "fig3", "fig4", "fig5", "fig6", "findings", "moe-imbalance",
-    "compute-role", "software-gap", "cluster-scaling",
+    "compute-role", "software-gap", "cluster-scaling", "autoscale-fleet",
 ];
 
 /// Run one experiment by id. `artifact_dir` is used by experiments that
@@ -62,6 +64,7 @@ pub fn run(id: &str, artifact_dir: &std::path::Path) -> Result<Report> {
         "findings" => findings::run_findings(),
         "software-gap" => software_gap::run(),
         "cluster-scaling" => cluster_scaling::run(artifact_dir),
+        "autoscale-fleet" => autoscale::run(artifact_dir),
         "moe-imbalance" => moe_imbalance(),
         _ => anyhow::bail!(
             "unknown experiment '{id}' (known: {})",

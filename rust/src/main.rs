@@ -13,6 +13,7 @@
 //!               [--prefill-chunk 1024] [--trace requests.jsonl]
 //!               [--instances 4] [--router round-robin|least-tokens|slo]
 //!               [--disagg-prefill 2] [--kv-link-gbps 100]
+//!               [--autoscale --scale-max 8 --warmup 5] [--prefill-chip sram]
 //! liminal validate [--artifacts artifacts]
 //! liminal dst [--seeds 50] [--start 0] [--jobs N] [--seed N] [--verbose]
 //! ```
@@ -20,6 +21,7 @@
 use std::path::{Path, PathBuf};
 
 use liminal::apps::DecodePoint;
+use liminal::cluster::AutoscalePolicy;
 use liminal::config::ConfigFile;
 use liminal::coordinator::{self, Backend};
 use liminal::hw::{presets, SystemConfig};
@@ -59,7 +61,8 @@ USAGE:
                [--contexts 4096,...] [--max-batch] [--fit-pp] [--csv FILE]
   liminal experiment <table1|table2|table4|table5|table6|table7|
                       fig2|fig3|fig4|fig5|fig6|findings|moe-imbalance|
-                      compute-role|all>
+                      compute-role|software-gap|cluster-scaling|
+                      autoscale-fleet|all>
                [--out DIR] [--artifacts DIR]
   liminal findings
   liminal serve <model> [--chip hbm3] [--tp N] [--backend analytic|pjrt]
@@ -70,6 +73,18 @@ USAGE:
                [--router round-robin|least-tokens|slo] [--ttft-target SECONDS]
                [--disagg-prefill P  (dedicated prefill instances; 0 = colocated)]
                [--kv-link-gbps G  (KV shipment bandwidth, gigabits/s; inf = ideal)]
+               [--prefill-chip NAME] [--prefill-tp N  (heterogeneous pools: the
+                prefill pool serves on its own hardware; decode stays on --chip)]
+               [--autoscale  (elastic fleet; --instances is the starting size)]
+               [--scale-min N] [--scale-max N  (fleet size bounds; 1..8 default)]
+               [--warmup SECONDS  (a spawned instance joins routing only after
+                its warm-up elapses on the simulated clock; warm-up is billed)]
+               [--scale-up-shed FRAC  (grow when the shed fraction over the
+                decision window exceeds FRAC)]
+               [--scale-up-ttft SECONDS  (grow when the best predicted TTFT
+                across the front door exceeds SECONDS)]
+               [--scale-idle SECONDS  (retire an instance idle this long)]
+               [--scale-cooldown SECONDS] [--scale-window ARRIVALS]
   liminal validate [--artifacts DIR]
   liminal dst [--seeds N  (default 50)] [--start S] [--seed X  (replay one)]
                [--jobs N  (seed-shard workers; default: available cores)]
@@ -332,10 +347,28 @@ fn cmd_serve(args: &Args) -> i32 {
     let cfg = load_config(args);
     let chip = resolve_chip(&cfg, args);
     let tp = args.get_parsed("tp", 128u64);
-    let sys = SystemConfig::new(chip, tp, args.get_parsed("pp", 1u64));
+    let pp = args.get_parsed("pp", 1u64);
+    let sys = SystemConfig::new(chip.clone(), tp, pp);
     let instances = args.get_parsed("instances", 1usize);
     let disagg_prefill = args.get_parsed("disagg-prefill", 0usize);
     let trace = args.get("trace").map(PathBuf::from);
+
+    // Any scale knob implies an elastic fleet; the bare --autoscale
+    // flag runs the policy defaults.
+    const SCALE_KNOBS: [&str; 8] = [
+        "scale-min",
+        "scale-max",
+        "warmup",
+        "scale-up-shed",
+        "scale-up-ttft",
+        "scale-idle",
+        "scale-cooldown",
+        "scale-window",
+    ];
+    let autoscale_on = args.flag("autoscale")
+        || SCALE_KNOBS.iter().any(|k| args.get(k).is_some());
+    let hetero_prefill =
+        args.get("prefill-chip").is_some() || args.get("prefill-tp").is_some();
 
     // Any cluster-only flag routes through the cluster simulator — a
     // one-instance cluster is behavior-identical to the plain
@@ -347,7 +380,9 @@ fn cmd_serve(args: &Args) -> i32 {
         || disagg_prefill > 0
         || args.get("router").is_some()
         || args.get("ttft-target").is_some()
-        || args.get("kv-link-gbps").is_some();
+        || args.get("kv-link-gbps").is_some()
+        || autoscale_on
+        || hetero_prefill;
     if cluster_requested {
         let mut job = coordinator::default_cluster_job(model, sys);
         job.instances = instances;
@@ -379,6 +414,43 @@ fn cmd_serve(args: &Args) -> i32 {
                     return 2;
                 }
             }
+        }
+        if hetero_prefill {
+            let pchip = match args.get("prefill-chip") {
+                Some(name) => match cfg.chip(name) {
+                    Some(c) => c,
+                    None => {
+                        eprintln!(
+                            "error: unknown prefill chip '{name}' (try hbm3, hbm4, 3d-dram, sram, cows, cent)"
+                        );
+                        return 2;
+                    }
+                },
+                None => chip,
+            };
+            job.prefill_sys = Some(SystemConfig::new(
+                pchip,
+                args.get_parsed("prefill-tp", tp),
+                pp,
+            ));
+        }
+        if autoscale_on {
+            let d = AutoscalePolicy::default();
+            job.autoscale = Some(AutoscalePolicy {
+                min_instances: args.get_parsed("scale-min", d.min_instances),
+                // The fleet can always hold its starting size.
+                max_instances: args
+                    .get_parsed("scale-max", d.max_instances.max(instances)),
+                warmup_delay: args.get_parsed("warmup", d.warmup_delay),
+                shed_rate_up: args.get_parsed("scale-up-shed", d.shed_rate_up),
+                ttft_headroom: args
+                    .get_parsed("scale-up-ttft", d.ttft_headroom),
+                idle_shrink_after: args
+                    .get_parsed("scale-idle", d.idle_shrink_after),
+                cooldown: args.get_parsed("scale-cooldown", d.cooldown),
+                decision_window: args
+                    .get_parsed("scale-window", d.decision_window),
+            });
         }
         if args.get("backend") == Some("pjrt") {
             eprintln!("error: cluster serving supports the analytic backend only");
@@ -528,6 +600,25 @@ mod tests {
             ["list", "eval", "sweep", "experiment", "findings", "serve", "validate", "dst"]
         {
             assert!(super::USAGE.contains(sub), "usage missing {sub}");
+        }
+    }
+
+    #[test]
+    fn usage_documents_the_autoscale_and_pool_knobs() {
+        for flag in [
+            "--autoscale",
+            "--scale-min",
+            "--scale-max",
+            "--warmup",
+            "--scale-up-shed",
+            "--scale-up-ttft",
+            "--scale-idle",
+            "--scale-cooldown",
+            "--scale-window",
+            "--prefill-chip",
+            "--prefill-tp",
+        ] {
+            assert!(super::USAGE.contains(flag), "usage missing {flag}");
         }
     }
 

@@ -43,6 +43,11 @@ pub enum InstanceEvent {
     /// A prefilled request's KV cache finished its interconnect
     /// transfer and lands at decode instance `id` (disaggregated mode).
     KvArrive(usize, ReqId),
+    /// Instance `id`, spawned by the cluster's autoscaler, finished
+    /// warming up and joins placement (cluster only). Scheduled
+    /// `warmup_delay` seconds after the spawn decision, so scaling is
+    /// never free.
+    WarmupDone(usize),
 }
 
 /// One model instance: a [`Batcher`] + [`StepEngine`] pair plus its

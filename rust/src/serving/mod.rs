@@ -70,9 +70,11 @@
 //! # Workloads
 //!
 //! [`WorkloadGen`] synthesizes Poisson arrivals with uniform
-//! prompt/generation lengths; [`WorkloadTrace`] replays recorded
-//! JSONL/CSV traces (`arrival, context_len, gen_len` per record) for
-//! trace-driven studies (`serve --trace`).
+//! prompt/generation lengths; [`DiurnalGen`] synthesizes a
+//! non-homogeneous Poisson process (sinusoidal diurnal swing plus burst
+//! episodes, by thinning) for elastic-fleet studies; [`WorkloadTrace`]
+//! replays recorded JSONL/CSV traces (`arrival, context_len, gen_len`
+//! per record) for trace-driven studies (`serve --trace`).
 
 mod arena;
 mod batcher;
@@ -94,6 +96,6 @@ pub use instance::{Instance, InstanceEvent};
 pub use metrics::{percentile, LatencyStats, ServingReport, StepStats};
 pub use observe::{NoopObserver, SimObserver};
 pub use pjrt_engine::PjrtEngine;
-pub use request::{Request, WorkloadGen, WorkloadSpec};
+pub use request::{DiurnalGen, DiurnalSpec, Request, WorkloadGen, WorkloadSpec};
 pub use sim::{ServingSim, SimConfig};
 pub use trace::WorkloadTrace;

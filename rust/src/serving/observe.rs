@@ -65,6 +65,21 @@ pub trait SimObserver {
     ) {
     }
 
+    /// The cluster's autoscaler spawned `instance` (cluster only). The
+    /// instance is warming: it holds no work and takes no placement
+    /// until [`SimObserver::on_warmup_done`] fires for it.
+    fn on_scale_up(&mut self, _now: f64, _instance: usize) {}
+
+    /// A spawned instance's warm-up completed and it joined placement
+    /// (cluster only; the matching calendar event is
+    /// [`InstanceEvent::WarmupDone`]).
+    fn on_warmup_done(&mut self, _now: f64, _instance: usize) {}
+
+    /// The autoscaler retired `instance` (cluster only). Retirement
+    /// only happens to a completely idle instance, so from this hook
+    /// on it must never hold work again.
+    fn on_scale_down(&mut self, _now: f64, _instance: usize) {}
+
     /// The run ended (drain, `max_steps`, or the `max_time` clamp) and
     /// `end_time` is the span the report will use.
     fn on_done(

@@ -152,6 +152,147 @@ impl WorkloadGen {
     }
 }
 
+/// Non-homogeneous Poisson workload: a sinusoidal diurnal swing around
+/// a baseline rate, with exponentially spaced burst episodes
+/// superimposed. This is the canonical stress for elastic fleets — a
+/// fixed fleet must be provisioned for the peak, while an autoscaled
+/// one can track the swing (see the `autoscale-fleet` experiment).
+#[derive(Debug, Clone)]
+pub struct DiurnalSpec {
+    /// Baseline mean arrival rate, requests/second.
+    pub base_rate: f64,
+    /// Relative swing of the diurnal sinusoid, in `[0, 1]`: the
+    /// instantaneous rate oscillates between `base_rate * (1 - a)` and
+    /// `base_rate * (1 + a)`.
+    pub amplitude: f64,
+    /// Diurnal period, seconds (the sinusoid starts rising at t = 0).
+    pub period: f64,
+    /// Mean quiet time between burst episodes, seconds (exponential);
+    /// `f64::INFINITY` disables bursts.
+    pub burst_every: f64,
+    /// Length of each burst episode, seconds.
+    pub burst_duration: f64,
+    /// Rate multiplier while a burst episode is active (>= 1).
+    pub burst_boost: f64,
+    /// Number of requests to generate.
+    pub n_requests: u64,
+    /// Context length range `[lo, hi)` (uniform).
+    pub context: (u64, u64),
+    /// Generation length range `[lo, hi)` (uniform).
+    pub gen: (u64, u64),
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for DiurnalSpec {
+    fn default() -> Self {
+        DiurnalSpec {
+            base_rate: 10.0,
+            amplitude: 0.6,
+            period: 60.0,
+            burst_every: 20.0,
+            burst_duration: 2.0,
+            burst_boost: 3.0,
+            n_requests: 100,
+            context: (1024, 8192),
+            gen: (64, 256),
+            seed: 7,
+        }
+    }
+}
+
+/// Deterministic non-homogeneous Poisson generator for [`DiurnalSpec`],
+/// via thinning: candidate arrivals are drawn at the envelope rate
+/// `base * (1 + amplitude) * burst_boost` and accepted with probability
+/// `lambda(t) / envelope`, which yields exactly the target
+/// time-varying intensity.
+pub struct DiurnalGen {
+    spec: DiurnalSpec,
+    rng: Pcg32,
+}
+
+impl DiurnalGen {
+    /// New generator for a spec (validates the rate shape).
+    pub fn new(spec: DiurnalSpec) -> Self {
+        assert!(spec.base_rate > 0.0, "base_rate must be positive");
+        assert!(
+            (0.0..=1.0).contains(&spec.amplitude),
+            "amplitude must be in [0, 1]"
+        );
+        assert!(spec.period > 0.0, "period must be positive");
+        assert!(spec.burst_boost >= 1.0, "burst_boost must be >= 1");
+        assert!(spec.burst_duration >= 0.0, "burst_duration must be >= 0");
+        let rng = Pcg32::seed_from(spec.seed);
+        DiurnalGen { spec, rng }
+    }
+
+    /// Instantaneous arrival rate at time `t`.
+    fn rate_at(&self, t: f64, in_burst: bool) -> f64 {
+        let phase = t / self.spec.period * std::f64::consts::TAU;
+        let diurnal =
+            self.spec.base_rate * (1.0 + self.spec.amplitude * phase.sin());
+        if in_burst {
+            diurnal * self.spec.burst_boost
+        } else {
+            diurnal
+        }
+    }
+
+    /// Generate all requests up front (arrival times strictly
+    /// non-decreasing; lengths uniform in their ranges).
+    pub fn generate(mut self) -> Vec<Request> {
+        let envelope = self.spec.base_rate
+            * (1.0 + self.spec.amplitude)
+            * self.spec.burst_boost;
+        let bursty = self.spec.burst_every.is_finite();
+        // The next burst episode's window [start, end); re-drawn lazily
+        // once the clock passes it, so the draw order is deterministic.
+        let (mut burst_start, mut burst_end) = if bursty {
+            let s = self.rng.exp(1.0 / self.spec.burst_every);
+            (s, s + self.spec.burst_duration)
+        } else {
+            (f64::INFINITY, f64::INFINITY)
+        };
+        let mut out = Vec::with_capacity(self.spec.n_requests as usize);
+        let mut t = 0.0;
+        while (out.len() as u64) < self.spec.n_requests {
+            t += self.rng.exp(envelope);
+            while bursty && t >= burst_end {
+                burst_start = burst_end + self.rng.exp(1.0 / self.spec.burst_every);
+                burst_end = burst_start + self.spec.burst_duration;
+            }
+            let in_burst = t >= burst_start && t < burst_end;
+            // Thinning: accept with probability lambda(t) / envelope.
+            if self.rng.f64() * envelope > self.rate_at(t, in_burst) {
+                continue;
+            }
+            let (clo, chi) = self.spec.context;
+            let (glo, ghi) = self.spec.gen;
+            out.push(Request {
+                id: out.len() as u64,
+                arrival: t,
+                context_len: if chi > clo {
+                    clo + self.rng.below((chi - clo) as u32) as u64
+                } else {
+                    clo
+                },
+                gen_len: if ghi > glo {
+                    (glo + self.rng.below((ghi - glo) as u32) as u64).max(1)
+                } else {
+                    glo.max(1)
+                },
+                generated: 0,
+                prefilled: 0,
+                scheduled_prefill: 0,
+                admitted_at: None,
+                first_token_at: None,
+                completed_at: None,
+            });
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +346,74 @@ mod tests {
         assert!(mid.in_prefill());
         assert_eq!(mid.prefill_remaining(), 60);
         assert!(mid.ttft().is_none());
+    }
+
+    #[test]
+    fn diurnal_generation_is_deterministic_and_ordered() {
+        let a = DiurnalGen::new(DiurnalSpec::default()).generate();
+        let b = DiurnalGen::new(DiurnalSpec::default()).generate();
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.context_len, y.context_len);
+            assert_eq!(x.gen_len, y.gen_len);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for r in &a {
+            assert!((1024..8192).contains(&r.context_len));
+            assert!((64..256).contains(&r.gen_len));
+        }
+    }
+
+    #[test]
+    fn diurnal_peak_half_outpaces_the_trough_half() {
+        let spec = DiurnalSpec {
+            base_rate: 50.0,
+            amplitude: 1.0,
+            period: 10.0,
+            burst_every: f64::INFINITY,
+            n_requests: 4000,
+            ..Default::default()
+        };
+        let period = spec.period;
+        let reqs = DiurnalGen::new(spec).generate();
+        // sin is positive over the first half of each period: arrivals
+        // should pile up there.
+        let peak = reqs
+            .iter()
+            .filter(|r| (r.arrival % period) < period / 2.0)
+            .count();
+        let trough = reqs.len() - peak;
+        assert!(peak > 2 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn bursts_raise_the_realized_rate_above_baseline() {
+        let quiet = DiurnalSpec {
+            base_rate: 50.0,
+            amplitude: 0.0,
+            burst_every: f64::INFINITY,
+            n_requests: 4000,
+            ..Default::default()
+        };
+        let reqs = DiurnalGen::new(quiet.clone()).generate();
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
+        // No swing, no bursts: an ordinary Poisson process at base_rate.
+        assert!((rate - 50.0).abs() / 50.0 < 0.1, "rate {rate}");
+
+        let bursty = DiurnalSpec {
+            burst_every: 1.0,
+            burst_duration: 1.0,
+            burst_boost: 4.0,
+            ..quiet
+        };
+        let reqs = DiurnalGen::new(bursty).generate();
+        let rate = reqs.len() as f64 / reqs.last().unwrap().arrival;
+        // Roughly half the span runs 4x: the realized mean rate must
+        // land well above baseline.
+        assert!(rate > 75.0, "bursty rate {rate}");
     }
 
     #[test]

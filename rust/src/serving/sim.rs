@@ -115,6 +115,8 @@ impl<'a> ServingSim<'a> {
                     inst.enqueue(id, &arena);
                 }
                 InstanceEvent::KvArrive(_, id) => inst.enqueue(id, &arena),
+                // The lone instance never autoscales.
+                InstanceEvent::WarmupDone(_) => {}
                 InstanceEvent::StepDone(_) => {
                     let retired = inst.step_done(now, &mut arena);
                     for &id in retired {

@@ -8,21 +8,27 @@
 //! only the event-driven simulator can produce. The `cluster-scaling`
 //! experiment and the `sweep` CLI both drive this.
 
+use crate::cluster::AutoscalePolicy;
 use crate::coordinator::{serve_cluster, ClusterJob, RouterPolicy};
 use crate::util::json::Json;
 use crate::util::par::parallel_map;
 use crate::Result;
 
-/// A cluster sweep: run the base job at every `(instances, router)`
-/// combination.
+/// A cluster sweep: run the base job at every
+/// `(instances, router, autoscale)` combination.
 #[derive(Debug, Clone)]
 pub struct ClusterGrid {
-    /// Base job; `instances` and `router` are overridden per cell.
+    /// Base job; `instances`, `router`, and `autoscale` are overridden
+    /// per cell.
     pub base: ClusterJob,
     /// Instance counts to sweep (e.g. `[1, 2, 4, 8]`).
     pub instance_counts: Vec<usize>,
     /// Router policies to sweep.
     pub routers: Vec<RouterPolicy>,
+    /// Fleet elasticity axis: `None` cells run the fixed fleet,
+    /// `Some(policy)` cells autoscale from the cell's instance count
+    /// (use `vec![None]` for a classic fixed-fleet sweep).
+    pub autoscale: Vec<Option<AutoscalePolicy>>,
     /// Scale the offered load with the instance count (arrival rate and
     /// request count multiply by `n`), so each cell sees the same
     /// per-instance pressure — the configuration that isolates scale-out
@@ -59,6 +65,11 @@ pub struct ClusterRecord {
     pub tpot_p99: f64,
     /// E2E p99, seconds.
     pub e2e_p99: f64,
+    /// Whether the cell ran an elastic fleet.
+    pub autoscaled: bool,
+    /// Billed instance-seconds (spawn through retirement/end of run,
+    /// warm-up included).
+    pub instance_seconds: f64,
 }
 
 impl ClusterRecord {
@@ -78,26 +89,34 @@ impl ClusterRecord {
             ("ttft_p99_s", Json::Num(self.ttft_p99)),
             ("tpot_p99_s", Json::Num(self.tpot_p99)),
             ("e2e_p99_s", Json::Num(self.e2e_p99)),
+            ("autoscaled", Json::Bool(self.autoscaled)),
+            ("instance_seconds", Json::Num(self.instance_seconds)),
         ])
     }
 }
 
-/// Materialize every `(instances, router)` cell of the grid as a
-/// ready-to-run job, in declaration order (instances outer, routers
-/// inner).
+/// Materialize every `(instances, router, autoscale)` cell of the grid
+/// as a ready-to-run job, in declaration order (instances outer, then
+/// routers, then the autoscale axis innermost).
 fn grid_cells(grid: &ClusterGrid) -> Vec<ClusterJob> {
-    let mut cells =
-        Vec::with_capacity(grid.instance_counts.len() * grid.routers.len());
+    let mut cells = Vec::with_capacity(
+        grid.instance_counts.len()
+            * grid.routers.len()
+            * grid.autoscale.len(),
+    );
     for &n in &grid.instance_counts {
         for &policy in &grid.routers {
-            let mut job = grid.base.clone();
-            job.instances = n;
-            job.router = policy;
-            if grid.scale_load {
-                job.workload.arrival_rate *= n as f64;
-                job.workload.n_requests *= n as u64;
+            for elastic in &grid.autoscale {
+                let mut job = grid.base.clone();
+                job.instances = n;
+                job.router = policy;
+                job.autoscale = elastic.clone();
+                if grid.scale_load {
+                    job.workload.arrival_rate *= n as f64;
+                    job.workload.n_requests *= n as u64;
+                }
+                cells.push(job);
             }
-            cells.push(job);
         }
     }
     cells
@@ -128,6 +147,15 @@ pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
                     "cell with {} instances cannot host {} dedicated prefill",
                     job.instances, job.prefill_instances
                 ))
+            } else if let Some(p) = job
+                .autoscale
+                .as_ref()
+                .filter(|p| p.min_instances == 0 || p.min_instances > p.max_instances)
+            {
+                Some(format!(
+                    "cell with autoscale bounds {}..{} (need 1 <= min <= max)",
+                    p.min_instances, p.max_instances
+                ))
             } else {
                 None
             }
@@ -154,6 +182,8 @@ pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
             ttft_p99: rep.cluster.ttft.p99,
             tpot_p99: rep.cluster.tpot.p99,
             e2e_p99: rep.cluster.e2e.p99,
+            autoscaled: job.autoscale.is_some(),
+            instance_seconds: rep.instance_seconds,
         })
     })
     .into_iter()
@@ -179,6 +209,7 @@ mod tests {
             base,
             instance_counts: vec![1, 2],
             routers: vec![RouterPolicy::RoundRobin, RouterPolicy::LeastTokens],
+            autoscale: vec![None],
             scale_load: true,
         }
     }
@@ -252,6 +283,8 @@ mod tests {
                     ttft_p99: rep.cluster.ttft.p99,
                     tpot_p99: rep.cluster.tpot.p99,
                     e2e_p99: rep.cluster.e2e.p99,
+                    autoscaled: job.autoscale.is_some(),
+                    instance_seconds: rep.instance_seconds,
                 }
             })
             .collect();
@@ -279,5 +312,56 @@ mod tests {
         assert_eq!(j.get("instances").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("router").unwrap().as_str(), Some("round-robin"));
         assert!(j.get("ttft_p99_s").unwrap().as_f64().is_some());
+        assert_eq!(j.get("autoscaled"), Some(&Json::Bool(false)));
+        assert!(j.get("instance_seconds").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn autoscale_axis_fans_out_fixed_and_elastic_cells() {
+        let grid = ClusterGrid {
+            instance_counts: vec![1],
+            routers: vec![RouterPolicy::RoundRobin],
+            autoscale: vec![
+                None,
+                Some(AutoscalePolicy {
+                    max_instances: 4,
+                    ..AutoscalePolicy::default()
+                }),
+            ],
+            ..small_grid()
+        };
+        let recs = run_cluster_grid(&grid).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(!recs[0].autoscaled);
+        assert!(recs[1].autoscaled);
+        // The fixed cell bills its one instance from t = 0 through the
+        // end of the run, which covers at least the first-arrival ->
+        // last-completion span; both cells serve the same 10-request
+        // workload.
+        assert!(
+            recs[0].instance_seconds >= recs[0].span,
+            "fixed 1-instance cell: {} vs span {}",
+            recs[0].instance_seconds,
+            recs[0].span
+        );
+        assert!(recs[1].instance_seconds > 0.0);
+        assert_eq!(recs[0].completed, 10);
+        assert_eq!(recs[1].completed, 10);
+        assert!(recs[1].mode.contains("autoscaled"), "{}", recs[1].mode);
+    }
+
+    #[test]
+    fn invalid_autoscale_bounds_are_caught_before_any_cell_runs() {
+        let grid = ClusterGrid {
+            autoscale: vec![Some(AutoscalePolicy {
+                min_instances: 4,
+                max_instances: 2,
+                ..AutoscalePolicy::default()
+            })],
+            ..small_grid()
+        };
+        let err = run_cluster_grid(&grid).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("autoscale bounds 4..2"), "{msg}");
     }
 }

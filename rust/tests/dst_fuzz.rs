@@ -233,6 +233,88 @@ fn arena_churn_never_aliases_live_ids() {
     }
 }
 
+/// The autoscale family (`seed % 8 == 7`): elastic fleets must pass
+/// every invariant and replay bit-identically — scale decisions are
+/// pure functions of observed simulation state, so the same seed must
+/// spawn and retire the same instances at the same times.
+#[test]
+fn autoscale_family_passes_and_replays_bit_identically() {
+    for k in 0..6u64 {
+        let seed = k * 8 + 7;
+        let case = gen_case(seed);
+        assert!(case.autoscale.is_some(), "seed {seed} must autoscale");
+        let a = run_case(&case);
+        assert!(
+            a.violations.is_empty(),
+            "seed {seed} violated:\n{}",
+            a.violations.join("\n")
+        );
+        let b = run_case(&case);
+        assert_eq!(a.report.scale_ups, b.report.scale_ups, "seed {seed}");
+        assert_eq!(a.report.scale_downs, b.report.scale_downs, "seed {seed}");
+        assert_eq!(a.report.events, b.report.events, "seed {seed}");
+        assert_eq!(
+            a.report.instance_seconds.to_bits(),
+            b.report.instance_seconds.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(
+            a.report.cluster.span.to_bits(),
+            b.report.cluster.span.to_bits(),
+            "seed {seed}"
+        );
+    }
+}
+
+/// A hand-built elastic case guaranteed to scale: one slow instance
+/// (max_batch 1), a dense arrival train, an aggressive TTFT trigger,
+/// and a short warm-up. The fleet must grow, every invariant must hold
+/// across the membership changes, and the drained run must close its
+/// books (conservation across scale transitions).
+#[test]
+fn scale_transitions_keep_conservation_through_a_drain() {
+    let mut case = gen_case(7);
+    case.requests = (0..30).map(|i| req(i, 0.02 * i as f64, 0, 4)).collect();
+    case.instances = 1;
+    case.prefill_instances = 0;
+    case.router = liminal::dst::RouterKind::RoundRobin;
+    case.max_batch = 1;
+    case.prefill_chunk = 0;
+    case.kv_link_bw = f64::INFINITY;
+    case.kv_budget_tokens = 1000.0;
+    case.engine =
+        FuzzEngine { base: 0.05, per_lane: 0.0, per_prefill_token: 0.0 };
+    case.autoscale = Some(liminal::cluster::AutoscalePolicy {
+        shed_rate_up: 0.05,
+        ttft_headroom: 0.01,
+        idle_shrink_after: 0.3,
+        warmup_delay: 0.1,
+        cooldown: 0.0,
+        decision_window: 2,
+        min_instances: 1,
+        max_instances: 4,
+    });
+    case.max_time = f64::INFINITY;
+    case.max_steps = 10_000_000;
+    assert!(case.expect_drained());
+    let out = run_case(&case);
+    assert!(
+        out.violations.is_empty(),
+        "elastic drain violated:\n{}",
+        out.violations.join("\n")
+    );
+    assert!(out.report.scale_ups >= 1, "the overload never triggered a spawn");
+    assert!(out.report.scale_ups <= 3, "ceiling of 4 caps spawns at 3");
+    assert_eq!(out.report.cluster.completed, 30);
+    assert_eq!(out.report.cluster.tokens, 120);
+    assert!(out.report.mode.contains("autoscaled"));
+    // Billing covers the initial instance for the whole span plus each
+    // spawned instance from its (later) spawn time.
+    let n = out.report.per_instance.len() as f64;
+    assert!(out.report.instance_seconds > out.report.cluster.span);
+    assert!(out.report.instance_seconds <= n * out.report.cluster.span + 1e-9);
+}
+
 /// A truncation family case (`max_steps`) cannot satisfy the drained
 /// expectations, and the harness must not demand them: the case still
 /// passes every always-on invariant.

@@ -64,6 +64,7 @@ fn one_instance_cluster_matches_serving_sim() {
         prefill_chunk: chunk,
         kv_link_bw: sys.interconnect_bw(),
         sim: SimConfig::default(),
+        autoscale: None,
     };
     let clustered = ClusterSim::new(
         engines,
@@ -233,6 +234,7 @@ fn slo_admission_conserves_requests() {
         prefill_chunk: 512,
         kv_link_bw: sys.interconnect_bw(),
         sim: SimConfig::default(),
+        autoscale: None,
     };
     // 5 ms TTFT target on 2 instances at 400 req/s: must shed.
     let rep = ClusterSim::new(
