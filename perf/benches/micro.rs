@@ -94,6 +94,7 @@ fn req(id: u64, ctx: u64, gen: u64) -> Request {
         arrival: 0.0,
         context_len: ctx,
         gen_len: gen,
+        priority: 0,
         generated: 0,
         prefilled: 0,
         scheduled_prefill: 0,

@@ -38,10 +38,17 @@
 
 use std::time::Instant;
 
-use liminal::cluster::AutoscalePolicy;
+use liminal::apps::Registry;
+use liminal::cluster::{
+    AutoscalePolicy, ClusterMode, ClusterReport, ClusterSim, ClusterSpec,
+    RoundRobin,
+};
 use liminal::coordinator::{default_cluster_job, serve_cluster, ClusterJob, RouterPolicy};
 use liminal::hw::{presets, SystemConfig};
-use liminal::serving::{percentile, WorkloadSpec};
+use liminal::serving::{
+    percentile, AnalyticEngine, KvBudget, PreemptionConfig, SimConfig,
+    StepEngine, WorkloadGen, WorkloadSpec,
+};
 use liminal::sweep::{run_cluster_grid, ClusterGrid};
 use liminal::util::json::Json;
 use liminal::util::par::default_jobs;
@@ -98,6 +105,11 @@ enum Kind {
     /// the autoscale path — scale decisions, warm-up events, and
     /// billed-seconds accounting — on top of the scheduler.
     Autoscaled,
+    /// A KV-starved 2-instance cell with a mixed-priority stream and
+    /// preemption enabled: tracks the priority admission queue plus the
+    /// evict/restore machinery under sustained KV pressure (the budget
+    /// is clamped so evictions actually fire every trial).
+    PreemptMix,
 }
 
 struct Scenario {
@@ -105,12 +117,13 @@ struct Scenario {
     kind: Kind,
 }
 
-const SCENARIOS: [Scenario; 5] = [
+const SCENARIOS: [Scenario; 6] = [
     Scenario { name: "colocated-1x", kind: Kind::Colocated { instances: 1 } },
     Scenario { name: "colocated-8x", kind: Kind::Colocated { instances: 8 } },
     Scenario { name: "colocated-64x", kind: Kind::Colocated { instances: 64 } },
     Scenario { name: "grid-2r-124x", kind: Kind::Grid },
     Scenario { name: "autoscaled-2to8x", kind: Kind::Autoscaled },
+    Scenario { name: "preempt-mix", kind: Kind::PreemptMix },
 ];
 
 /// Instance counts and router count of the grid scenario.
@@ -134,6 +147,7 @@ fn scenario_job(instances: usize, reqs_per_instance: u64) -> ClusterJob {
         n_requests: reqs_per_instance * instances as u64,
         context: (256, 1024),
         gen: (64, 192),
+        priority_mix: Vec::new(),
         seed: 7,
     };
     job
@@ -147,8 +161,59 @@ fn scenario_grid(reqs_per_instance: u64) -> ClusterGrid {
         instance_counts: GRID_COUNTS.to_vec(),
         routers: GRID_ROUTERS.to_vec(),
         autoscale: vec![None],
+        priority_mixes: vec![Vec::new()],
         scale_load: true,
     }
+}
+
+/// The preempt-mix scenario: a 2-instance colocated cell whose KV
+/// budget holds only a couple of concurrent requests per instance,
+/// offered a mixed-priority stream with preemption enabled. The
+/// coordinator path keeps the model's real (never-binding) KV budget,
+/// so this scenario builds the sim directly with a clamped budget —
+/// urgent arrivals hit a full budget every trial and the evict/restore
+/// path runs inside the measured loop, not just the priority queue.
+fn scenario_preempt(reqs_per_instance: u64) -> (ClusterReport, u64) {
+    let registry = Registry::builtin();
+    let app = registry.app("llama3-70b").expect("registry model");
+    let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+    let bpt = app.kv_bytes_per_token();
+    let instances = 2usize;
+    let engines: Vec<Box<dyn StepEngine>> = (0..instances)
+        .map(|_| {
+            Box::new(AnalyticEngine::new(app.clone(), sys.clone()))
+                as Box<dyn StepEngine>
+        })
+        .collect();
+    let mut sim = ClusterSim::new(
+        engines,
+        KvBudget::new(4096.0 * bpt, 0.0, bpt),
+        Box::new(RoundRobin::new()),
+        ClusterSpec {
+            mode: ClusterMode::Colocated,
+            max_batch: 16,
+            prefill_chunk: 512,
+            kv_link_bw: f64::INFINITY,
+            autoscale: None,
+            sim: SimConfig::default(),
+        },
+    );
+    sim.set_preemption(PreemptionConfig {
+        enabled: true,
+        evict_cost: 0.002,
+        restore_cost: 0.005,
+    });
+    let n = reqs_per_instance * instances as u64;
+    let workload = WorkloadGen::new(WorkloadSpec {
+        arrival_rate: 8.0 * instances as f64,
+        n_requests: n,
+        context: (512, 2048),
+        gen: (32, 128),
+        priority_mix: vec![(0, 4.0), (2, 1.0)],
+        seed: 23,
+    })
+    .generate();
+    (sim.run(workload), n)
 }
 
 /// The autoscale scenario: ceiling-level load offered to a fleet that
@@ -214,6 +279,22 @@ fn run_scenario(s: &Scenario, trials: usize, reqs_per_instance: u64) -> Scenario
                 let t0 = Instant::now();
                 let rep = serve_cluster(&job).expect("autoscale scenario runs");
                 let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                res.events = rep.events;
+                res.wall_s.push(wall);
+                res.events_per_sec.push(rep.events as f64 / wall);
+                res.sim_s_per_wall_s.push(rep.cluster.span / wall);
+            }
+            Kind::PreemptMix => {
+                let t0 = Instant::now();
+                let (rep, n) = scenario_preempt(reqs_per_instance);
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                assert!(
+                    rep.cluster.preemptions > 0,
+                    "preempt-mix scenario ran without a single eviction; \
+                     it is no longer measuring the preemption path"
+                );
+                res.instances = 2;
+                res.requests = n;
                 res.events = rep.events;
                 res.wall_s.push(wall);
                 res.events_per_sec.push(rep.events as f64 / wall);

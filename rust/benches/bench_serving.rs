@@ -31,6 +31,7 @@ fn main() {
             n_requests: 200,
             context: (1024, 8192),
             gen: (16, 64),
+            priority_mix: Vec::new(),
             seed: 3,
         })
         .generate();
@@ -53,6 +54,7 @@ fn main() {
             n_requests: 200,
             context: (1024, 8192),
             gen: (16, 64),
+            priority_mix: Vec::new(),
             seed: 3,
         })
         .generate();

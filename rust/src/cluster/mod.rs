@@ -32,6 +32,36 @@
 //! compute-heavy systems while the decode pool runs bandwidth-heavy
 //! ones, each at its own roofline.
 //!
+//! # Priority and preemption
+//!
+//! Requests carry a scheduling class
+//! ([`Request::priority`](crate::serving::Request::priority), higher =
+//! more urgent) end to end: workload generators and traces tag them,
+//! the router sees them, and every instance's batcher admits by class
+//! (FIFO within a class — single-class workloads reproduce the FIFO
+//! cluster bit for bit, which is what keeps the N=1 equivalence test
+//! passing unmodified). The pieces:
+//!
+//! * **Admission** ([`SloAdmission`]) sheds the best-effort class
+//!   first: class `p` is admitted up to `(p + 1) *` the TTFT target,
+//!   so under pressure low classes absorb the shedding while urgent
+//!   traffic keeps flowing.
+//! * **Preemption**
+//!   ([`ClusterSim::set_preemption`],
+//!   [`PreemptionConfig`](crate::serving::PreemptionConfig)): under KV
+//!   pressure a higher-class arrival may evict the lowest-class active
+//!   request on its instance. The victim's KV is released immediately
+//!   (budget freed for the newcomer), it resumes from the queue front
+//!   once capacity frees, and the configured evict/restore costs are
+//!   priced into engine-step time — the stall lands in TTFT/TPOT, it
+//!   is never free. Autoscale-spawned instances inherit the policy.
+//! * **Auditing**: evict/restore actions flow to
+//!   [`SimObserver::on_preempt`](crate::serving::SimObserver::on_preempt)
+//!   / `on_restore`; the DST preemption family checks the evicted
+//!   lifecycle (zero reserved KV while evicted, never double-evicted,
+//!   exact KV conservation through evict/restore) on every event, and
+//!   [`ClusterReport`] carries cluster-wide eviction/restore counters.
+//!
 //! # Autoscaling
 //!
 //! With an [`AutoscalePolicy`] in the [`ClusterSpec`]

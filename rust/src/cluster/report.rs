@@ -114,6 +114,12 @@ impl ClusterReport {
                 self.kv_transfer_mean * 1e3,
             ));
         }
+        if self.cluster.preemptions > 0 {
+            out.push_str(&format!(
+                "preemption: {} evictions / {} restores\n",
+                self.cluster.preemptions, self.cluster.restores,
+            ));
+        }
         if self.scale_ups + self.scale_downs > 0 {
             out.push_str(&format!(
                 "autoscale: +{} spawned / -{} retired, {:.1} instance-s billed\n",
@@ -151,6 +157,8 @@ impl ClusterReport {
             ("stps", Json::Num(self.cluster.stps)),
             ("stps_per_instance", Json::Num(self.stps_per_instance())),
             ("instances", Json::Num(self.per_instance.len() as f64)),
+            ("preemptions", Json::Num(self.cluster.preemptions as f64)),
+            ("restores", Json::Num(self.cluster.restores as f64)),
             ("ttft_s", lat(&self.cluster.ttft)),
             ("tpot_s", lat(&self.cluster.tpot)),
             ("e2e_s", lat(&self.cluster.e2e)),
@@ -239,6 +247,8 @@ mod tests {
         assert_eq!(pools.len(), 1);
         assert_eq!(pools[0].get("label").unwrap().as_str(), Some("prefill"));
         assert!(j.get("ttft_s").unwrap().get("p99").is_some());
+        assert_eq!(j.get("preemptions").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("restores").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("scale_ups").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("scale_downs").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("instance_seconds").unwrap().as_u64(), Some(20));

@@ -283,9 +283,16 @@ impl Router for LeastOutstandingTokens {
 /// even that best prediction exceeds the target — bounding the TTFT tail
 /// by refusing work the cluster cannot serve in time instead of queueing
 /// it into a violation.
+///
+/// Shedding is priority-aware: a request of class `p` is held to an
+/// effective target of `ttft_target * (p + 1)`, so under pressure the
+/// best-effort class sheds first while urgent classes keep flowing.
+/// Class 0 sees exactly `ttft_target` — single-class workloads behave
+/// identically to the pre-priority router.
 #[derive(Debug)]
 pub struct SloAdmission {
-    /// Admission threshold on predicted TTFT, seconds.
+    /// Admission threshold on predicted TTFT for class-0 requests,
+    /// seconds (class `p` is admitted up to `(p + 1)` times this).
     pub ttft_target: f64,
 }
 
@@ -334,7 +341,9 @@ impl Router for SloAdmission {
                 predicted += d;
             }
         }
-        if predicted > self.ttft_target {
+        // Higher classes tolerate proportionally more predicted wait
+        // before shedding; class 0 keeps the exact base target.
+        if predicted > self.ttft_target * (r.priority as f64 + 1.0) {
             None
         } else {
             Some(i)
@@ -433,6 +442,23 @@ mod tests {
         // bootstraps by admitting.
         let cold = load(0, 99_999, 0.0);
         assert_eq!(r.route(&req(0, 256), &[0], &[cold]), Some(0));
+    }
+
+    #[test]
+    fn slo_admission_sheds_low_priority_first() {
+        let mut r = SloAdmission::new(0.050);
+        // 6 pending chunks + own chunk at 10 ms/step: predicted TTFT
+        // 70 ms — past the class-0 target but inside class 1's
+        // doubled allowance.
+        let busy = load(0, 1400, 0.010);
+        let lo = req(0, 256);
+        let mut hi = req(1, 256);
+        hi.priority = 1;
+        assert_eq!(r.route(&lo, &[0], &[busy]), None, "class 0 sheds");
+        assert_eq!(r.route(&hi, &[0], &[busy]), Some(0), "class 1 rides");
+        // Far enough past every allowance, both shed.
+        let slammed = load(0, 25_600, 0.010);
+        assert_eq!(r.route(&hi, &[0], &[slammed]), None);
     }
 
     #[test]

@@ -32,8 +32,9 @@
 
 use crate::des::EventQueue;
 use crate::serving::{
-    Batcher, Instance, InstanceEvent, KvBudget, NoopObserver, ReqId, Request,
-    RequestArena, ServingReport, SimConfig, SimObserver, StepEngine, StepStats,
+    Batcher, Instance, InstanceEvent, KvBudget, NoopObserver, PreemptionConfig,
+    ReqId, Request, RequestArena, SchedAction, ServingReport, SimConfig,
+    SimObserver, StepEngine, StepStats,
 };
 
 use super::autoscale::{AutoscalePolicy, EngineFactory, InstanceState};
@@ -154,6 +155,9 @@ pub struct ClusterSim {
     /// shrink rule needs the exact "nothing inbound" predicate so a
     /// retired instance can never receive a shipment.
     inbound_shipments: Vec<u32>,
+    /// Preemption policy applied to every instance's batcher (existing
+    /// and autoscale-spawned). Default disabled: the FIFO-exact path.
+    preempt: PreemptionConfig,
     /// Scale actions taken, for the report.
     scale_ups: u64,
     scale_downs: u64,
@@ -285,11 +289,23 @@ impl ClusterSim {
             retired_at: vec![None; n],
             idle_since: vec![0.0; n],
             inbound_shipments: vec![0; n],
+            preempt: PreemptionConfig::default(),
             scale_ups: 0,
             scale_downs: 0,
             last_scale: f64::NEG_INFINITY,
             arrivals_window: 0,
             shed_window: 0,
+        }
+    }
+
+    /// Set the preemption policy on every instance in the fleet;
+    /// instances the autoscaler spawns later inherit it too. Call
+    /// before [`ClusterSim::run`] — the default (disabled) keeps the
+    /// batchers on the FIFO-exact path.
+    pub fn set_preemption(&mut self, cfg: PreemptionConfig) {
+        self.preempt = cfg;
+        for inst in &mut self.instances {
+            inst.set_preemption(cfg);
         }
     }
 
@@ -591,7 +607,7 @@ impl ClusterSim {
             .expect("autoscaling cluster was built without an engine factory"))(
             role,
         );
-        let batcher = match role {
+        let mut batcher = match role {
             Role::Decode => {
                 Batcher::new(self.spec.max_batch, self.kv_proto.clone())
             }
@@ -601,6 +617,7 @@ impl ClusterSim {
                 self.spec.prefill_chunk,
             ),
         };
+        batcher.set_preemption(self.preempt);
         self.instances.push(Instance::new(batcher, engine));
         self.roles.push(role);
         self.states.push(InstanceState::Warming);
@@ -648,6 +665,9 @@ impl ClusterSim {
         let mut retired_scratch: Vec<ReqId> = Vec::new();
         let mut shed: u64 = 0;
         let mut steps_total: u64 = 0;
+        // Reusable buffer for preempt/restore actions logged by each
+        // batcher during admission; drained after every kick.
+        let mut sched: Vec<(ReqId, SchedAction)> = Vec::new();
         let mut deadline_hit = false;
 
         while let Some(t) = q.peek_time() {
@@ -725,6 +745,13 @@ impl ClusterSim {
                 }
                 if let Some(dt) = inst.kick(now, &mut self.arena) {
                     q.schedule_in(dt, InstanceEvent::StepDone(i));
+                }
+                inst.drain_sched_log(&mut sched);
+                for &(id, act) in &sched {
+                    match act {
+                        SchedAction::Preempt => obs.on_preempt(now, i, id),
+                        SchedAction::Restore => obs.on_restore(now, i, id),
+                    }
                 }
             }
             if self.spec.autoscale.is_some() {
@@ -806,6 +833,8 @@ impl ClusterSim {
             agg.batch_time_integral += st.batch_time_integral;
             agg.busy_time += st.busy_time;
             agg.prefill_tokens += st.prefill_tokens;
+            agg.preemptions += st.preemptions;
+            agg.restores += st.restores;
             let name =
                 format!("i{i}:{}:{}", self.roles[i].tag(), inst.engine_name());
             per_instance.push(inst.report(name, end_time, &self.arena));
@@ -1410,6 +1439,37 @@ mod tests {
         assert!((rep.cluster.span - 1.0).abs() < 1e-12);
         // Billing: instance 0 the whole second, instance 1 from 0.5.
         assert!((rep.instance_seconds - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_preemption_evicts_restores_and_reports_counters() {
+        use crate::serving::testutil::budget;
+
+        // One instance whose KV (55 tokens) is hogged by a long class-0
+        // request; the class-1 arrival must evict it, finish first, and
+        // the evicted request must still complete. Both counters land
+        // in the merged cluster report.
+        let mut sim = ClusterSim::new(
+            engines(1, 0.05),
+            budget(55),
+            Box::new(RoundRobin::new()),
+            colo_spec(4, 0),
+        );
+        sim.set_preemption(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.01,
+            restore_cost: 0.01,
+        });
+        let lo = mk_req(0, 0.0, 10, 40); // 50 KV tokens
+        let mut hi = mk_req(1, 0.1, 10, 5); // 15 KV tokens
+        hi.priority = 1;
+        let rep = sim.run(vec![lo, hi]);
+        assert_eq!(rep.cluster.completed, 2);
+        assert_eq!(rep.cluster.tokens, 45);
+        assert_eq!(rep.cluster.preemptions, 1);
+        assert_eq!(rep.cluster.restores, 1);
+        assert_eq!(rep.per_instance[0].preemptions, 1);
+        assert_eq!(rep.per_instance[0].restores, 1);
     }
 
     #[test]

@@ -20,8 +20,9 @@ use crate::cluster::{
 };
 use crate::hw::SystemConfig;
 use crate::serving::{
-    AnalyticEngine, Batcher, KvBudget, PjrtEngine, Request, ServingReport,
-    ServingSim, SimConfig, StepEngine, WorkloadGen, WorkloadSpec, WorkloadTrace,
+    AnalyticEngine, Batcher, KvBudget, PjrtEngine, PreemptionConfig, Request,
+    ServingReport, ServingSim, SimConfig, StepEngine, WorkloadGen,
+    WorkloadSpec, WorkloadTrace,
 };
 use crate::Result;
 
@@ -55,6 +56,9 @@ pub struct ServeJob {
     pub backend: Backend,
     /// Artifact directory (PJRT backend).
     pub artifact_dir: std::path::PathBuf,
+    /// Priority-preemption policy for the instance's batcher (disabled
+    /// by default, which is bit-identical to FIFO run-to-completion).
+    pub preempt: PreemptionConfig,
 }
 
 /// Resolve a job's request stream: replay the trace if one is set, else
@@ -78,8 +82,11 @@ pub fn serve(job: &ServeJob) -> Result<ServingReport> {
 
     let workload = resolve_workload(&job.workload, &job.trace)?;
     // prefill_chunk = 0 degrades to the decode-only batcher.
-    let make_batcher =
-        |max_batch: usize, kv: KvBudget| Batcher::with_prefill(max_batch, kv, job.prefill_chunk);
+    let make_batcher = |max_batch: usize, kv: KvBudget| {
+        let mut b = Batcher::with_prefill(max_batch, kv, job.prefill_chunk);
+        b.set_preemption(job.preempt);
+        b
+    };
     match job.backend {
         Backend::Analytic => {
             let kv = KvBudget::new(
@@ -129,6 +136,7 @@ pub fn default_job(model: &str, sys: SystemConfig) -> ServeJob {
         prefill_chunk: crate::model::DEFAULT_PREFILL_CHUNK,
         backend: Backend::Analytic,
         artifact_dir: std::path::PathBuf::from("artifacts"),
+        preempt: PreemptionConfig::default(),
     }
 }
 
@@ -206,6 +214,10 @@ pub struct ClusterJob {
     /// `min_instances`; spawned instances serve only after the warm-up
     /// delay elapses on the simulated clock.
     pub autoscale: Option<AutoscalePolicy>,
+    /// Priority-preemption policy applied to every instance's batcher
+    /// (autoscale-spawned instances inherit it). Disabled by default —
+    /// bit-identical to the FIFO run-to-completion cluster.
+    pub preempt: PreemptionConfig,
 }
 
 /// Convenience builder for cluster jobs: 4 colocated instances,
@@ -225,6 +237,7 @@ pub fn default_cluster_job(model: &str, sys: SystemConfig) -> ClusterJob {
         kv_link_bw: None,
         prefill_sys: None,
         autoscale: None,
+        preempt: PreemptionConfig::default(),
     }
 }
 
@@ -308,7 +321,7 @@ pub fn build_cluster_sim(job: &ClusterJob) -> Result<ClusterSim> {
         autoscale: job.autoscale.clone(),
     };
     let router = job.router.build(job.ttft_target);
-    if job.autoscale.is_some() {
+    let mut sim = if job.autoscale.is_some() {
         // Spawned instances get the same role-matched analytic pricing
         // as the initial fleet.
         let app = Arc::clone(&app);
@@ -322,10 +335,12 @@ pub fn build_cluster_sim(job: &ClusterJob) -> Result<ClusterSim> {
             Box::new(AnalyticEngine::new(Arc::clone(&app), s))
                 as Box<dyn StepEngine>
         });
-        Ok(ClusterSim::with_factory(engines, kv, router, spec, factory))
+        ClusterSim::with_factory(engines, kv, router, spec, factory)
     } else {
-        Ok(ClusterSim::new(engines, kv, router, spec))
-    }
+        ClusterSim::new(engines, kv, router, spec)
+    };
+    sim.set_preemption(job.preempt);
+    Ok(sim)
 }
 
 /// Run a cluster job to completion and return its merged report.
@@ -499,6 +514,27 @@ mod tests {
         job.prefill_sys = Some(sys); // colocated: no pool to serve it
         let err = serve_cluster(&job).unwrap_err().to_string();
         assert!(err.contains("prefill pool"), "{err}");
+    }
+
+    #[test]
+    fn cluster_job_threads_priority_and_preemption() {
+        let sys = SystemConfig::new(presets::hbm3(), 8, 1);
+        let mut job = default_cluster_job("llama3-70b", sys);
+        job.instances = 2;
+        job.workload.n_requests = 30;
+        job.workload.arrival_rate = 100.0;
+        job.workload.priority_mix = vec![(0, 3.0), (2, 1.0)];
+        job.preempt = PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.001,
+            restore_cost: 0.001,
+        };
+        let rep = serve_cluster(&job).unwrap();
+        // The run drains, so every request completes regardless of how
+        // many evict/restore cycles it took, and the preemption books
+        // close: every eviction was eventually restored.
+        assert_eq!(rep.cluster.completed, 30);
+        assert_eq!(rep.cluster.preemptions, rep.cluster.restores);
     }
 
     #[test]

@@ -16,14 +16,20 @@
 //! truncation, mid-run deadline clamps, an SLO router tight enough to
 //! shed, and autoscaled fleets (warm-up, scale transitions, retirement
 //! mid-run) — rather than sampling them by luck.
+//!
+//! A second generator, [`gen_preempt_case`], overlays any base seed
+//! with a mixed-priority stream, a near-full KV budget, and preemption
+//! enabled — the regime where priority scheduling must evict and
+//! restore under pressure. The overlay draws from its own
+//! seed-transformed RNG, so the base family replays unchanged.
 
 use crate::cluster::{
     AutoscalePolicy, ClusterMode, ClusterSim, ClusterSpec,
     LeastOutstandingTokens, RoundRobin, Router, SloAdmission,
 };
 use crate::serving::{
-    KvBudget, Request, SimConfig, StepBatch, StepEngine, WorkloadGen,
-    WorkloadSpec,
+    KvBudget, PreemptionConfig, Request, SimConfig, StepBatch, StepEngine,
+    WorkloadGen, WorkloadSpec,
 };
 use crate::util::rng::Pcg32;
 
@@ -108,6 +114,10 @@ pub struct FuzzCase {
     pub kv_budget_tokens: f64,
     /// Step pricing.
     pub engine: FuzzEngine,
+    /// Priority-preemption policy applied to every instance (disabled
+    /// by default; [`gen_preempt_case`] enables it over a near-full
+    /// budget and a mixed-priority stream).
+    pub preempt: PreemptionConfig,
     /// Elastic-fleet policy (`None` = fixed fleet). Family 7 cases set
     /// this, exercising warm-up and scale transitions under fuzz.
     pub autoscale: Option<AutoscalePolicy>,
@@ -166,7 +176,7 @@ impl FuzzCase {
         let engines: Vec<Box<dyn StepEngine>> = (0..self.instances)
             .map(|_| Box::new(self.engine.clone()) as Box<dyn StepEngine>)
             .collect();
-        if self.autoscale.is_some() {
+        let mut sim = if self.autoscale.is_some() {
             // Spawned instances price steps exactly like the initial
             // fleet, so scale transitions change membership, never
             // step economics — failures isolate to the autoscaler.
@@ -187,7 +197,9 @@ impl FuzzCase {
                 self.router.build(self.ttft_target),
                 self.spec(),
             )
-        }
+        };
+        sim.set_preemption(self.preempt);
+        sim
     }
 }
 
@@ -206,6 +218,7 @@ pub fn gen_case(seed: u64) -> FuzzCase {
         n_requests,
         context: (clo, chi),
         gen: (glo, ghi),
+        priority_mix: Vec::new(),
         seed: rng.next_u64(),
     })
     .generate();
@@ -321,10 +334,60 @@ pub fn gen_case(seed: u64) -> FuzzCase {
         kv_link_bw,
         kv_budget_tokens,
         engine,
+        preempt: PreemptionConfig::default(),
         autoscale,
         max_time,
         max_steps,
     }
+}
+
+/// Generate the preemption-family case a seed names: the base
+/// [`gen_case`] scenario overlaid with a mixed-priority request stream,
+/// a near-full KV budget, and preemption enabled — the regime where
+/// priority scheduling must actually evict and restore under pressure.
+///
+/// The overlay draws from a fresh, seed-transformed RNG and re-tags the
+/// base case's requests in place, so `gen_case(seed)` itself stays a
+/// byte-identical pure function and both families replay from the same
+/// seed number. Pure like the base generator: same seed, same case.
+pub fn gen_preempt_case(seed: u64) -> FuzzCase {
+    let mut case = gen_case(seed);
+    let mut rng = Pcg32::seed_from(seed ^ 0x9e37_79b9_7f4a_7c15);
+
+    // 2..=4 priority classes with random positive weights; every
+    // request redraws its class, arrivals and lengths untouched.
+    let classes = 2 + rng.below(3) as u8;
+    let mix: Vec<(u8, f64)> =
+        (0..classes).map(|c| (c, 0.2 + rng.f64())).collect();
+    let total: f64 = mix.iter().map(|&(_, w)| w).sum();
+    for r in &mut case.requests {
+        let mut x = rng.f64() * total;
+        r.priority = mix.last().unwrap().0;
+        for &(class, w) in &mix {
+            x -= w;
+            if x < 0.0 {
+                r.priority = class;
+                break;
+            }
+        }
+    }
+
+    // Near-full budget (still fitting the largest single request, so
+    // drain-mode cases really drain) forces eviction decisions instead
+    // of leaving preemption latent.
+    let max_footprint = case
+        .requests
+        .iter()
+        .map(|r| r.context_len + r.gen_len)
+        .max()
+        .unwrap_or(1) as f64;
+    case.kv_budget_tokens = max_footprint * (1.0 + rng.f64() * 0.5);
+    case.preempt = PreemptionConfig {
+        enabled: true,
+        evict_cost: rng.f64() * 0.05,
+        restore_cost: rng.f64() * 0.05,
+    };
+    case
 }
 
 #[cfg(test)]
@@ -405,6 +468,60 @@ mod tests {
         // Every other family keeps a fixed fleet.
         for fam in 0..7u64 {
             assert!(gen_case(fam).autoscale.is_none(), "family {fam}");
+        }
+    }
+
+    #[test]
+    fn preempt_generation_is_a_pure_function_of_the_seed() {
+        for seed in [0u64, 3, 9, 1088] {
+            let a = gen_preempt_case(seed);
+            let b = gen_preempt_case(seed);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn preempt_overlay_enables_eviction_without_touching_the_base() {
+        for seed in 0..16u64 {
+            let base = gen_case(seed);
+            let over = gen_preempt_case(seed);
+            // The overlay only re-tags: arrivals and lengths are the
+            // base case's, bit for bit.
+            assert_eq!(base.requests.len(), over.requests.len());
+            for (b, o) in base.requests.iter().zip(&over.requests) {
+                assert_eq!(b.arrival.to_bits(), o.arrival.to_bits());
+                assert_eq!(b.context_len, o.context_len);
+                assert_eq!(b.gen_len, o.gen_len);
+                assert_eq!(b.priority, 0, "base stays single-class");
+            }
+            assert!(over.preempt.enabled, "seed {seed}");
+            assert!(over.preempt.evict_cost >= 0.0);
+            assert!(over.preempt.restore_cost >= 0.0);
+            // Near-full but still admitting the largest request.
+            let max_foot = over
+                .requests
+                .iter()
+                .map(|r| r.context_len + r.gen_len)
+                .max()
+                .unwrap_or(1) as f64;
+            assert!(over.kv_budget_tokens >= max_foot, "seed {seed}");
+            assert!(over.kv_budget_tokens <= max_foot * 1.5 + 1e-9);
+            let _ = over.build_sim();
+        }
+        // Across a seed batch the mix really is mixed: at least one
+        // request lands outside class 0.
+        let any_tagged = (0..16u64).any(|s| {
+            gen_preempt_case(s).requests.iter().any(|r| r.priority > 0)
+        });
+        assert!(any_tagged);
+    }
+
+    #[test]
+    fn base_cases_keep_preemption_disabled() {
+        for seed in 0..8u64 {
+            let case = gen_case(seed);
+            assert!(!case.preempt.enabled, "seed {seed}");
+            assert_eq!(case.preempt, PreemptionConfig::default());
         }
     }
 

@@ -8,7 +8,7 @@ use crate::cluster::ClusterReport;
 use crate::serving::{Batcher, ServingSim, SimConfig};
 use crate::util::par::parallel_map_jobs;
 
-use super::gen::{gen_case, FuzzCase, RouterKind};
+use super::gen::{gen_case, gen_preempt_case, FuzzCase, RouterKind};
 use super::invariant::InvariantChecker;
 
 /// Everything one case run produced: the report and any violations
@@ -53,6 +53,11 @@ pub fn run_seed(seed: u64) -> CaseOutcome {
     run_case(&gen_case(seed))
 }
 
+/// Generate and run the preemption-family case a seed names.
+pub fn run_preempt_seed(seed: u64) -> CaseOutcome {
+    run_case(&gen_preempt_case(seed))
+}
+
 /// Fuzz `count` consecutive seeds starting at `start`; returns the
 /// failures, each with a shrunk reproducer, in ascending seed order.
 pub fn fuzz_range(start: u64, count: u64) -> Vec<FuzzFailure> {
@@ -90,9 +95,20 @@ pub struct SeedSummary {
 /// failures) come back in ascending seed order for every worker
 /// count: the smallest failing seed wins deterministically.
 pub fn fuzz_scan(start: u64, count: u64, jobs: usize) -> Vec<SeedSummary> {
+    fuzz_scan_with(start, count, jobs, gen_case)
+}
+
+/// [`fuzz_scan`] over an arbitrary seed-to-case generator — the
+/// preemption family runs the same harness with [`gen_preempt_case`].
+pub fn fuzz_scan_with(
+    start: u64,
+    count: u64,
+    jobs: usize,
+    gen: fn(u64) -> FuzzCase,
+) -> Vec<SeedSummary> {
     let seeds: Vec<u64> = (start..start.saturating_add(count)).collect();
     parallel_map_jobs(seeds, jobs, |&seed| {
-        let case = gen_case(seed);
+        let case = gen(seed);
         let out = run_case(&case);
         let failure = if out.violations.is_empty() {
             None
@@ -210,6 +226,29 @@ fn report_checks(
             chk.tokens_out()
         ));
     }
+    if report.cluster.preemptions != chk.preemptions() {
+        out.push(format!(
+            "report preemptions {} != checker preemptions {}",
+            report.cluster.preemptions,
+            chk.preemptions()
+        ));
+    }
+    if report.cluster.restores != chk.restores() {
+        out.push(format!(
+            "report restores {} != checker restores {}",
+            report.cluster.restores,
+            chk.restores()
+        ));
+    }
+    if !case.preempt.enabled
+        && (report.cluster.preemptions | report.cluster.restores) != 0
+    {
+        out.push(format!(
+            "preemption disabled but report counts {} evictions / {} \
+             restores",
+            report.cluster.preemptions, report.cluster.restores
+        ));
+    }
     let instance_steps: u64 = report.per_instance.iter().map(|r| r.steps).sum();
     if report.cluster.steps != instance_steps {
         out.push(format!(
@@ -282,8 +321,11 @@ fn report_checks(
 /// same engine, same limits must give the same report.
 fn oracle_check(case: &FuzzCase, report: &ClusterReport, out: &mut Vec<String>) {
     let mut engine = case.engine.clone();
+    let mut batcher =
+        Batcher::with_prefill(case.max_batch, case.kv_budget(), case.prefill_chunk);
+    batcher.set_preemption(case.preempt);
     let sim = ServingSim::new(
-        Batcher::with_prefill(case.max_batch, case.kv_budget(), case.prefill_chunk),
+        batcher,
         &mut engine,
         SimConfig { max_time: case.max_time, max_steps: case.max_steps },
     );
@@ -294,6 +336,8 @@ fn oracle_check(case: &FuzzCase, report: &ClusterReport, out: &mut Vec<String>) 
         ("tokens", cl.tokens, single.tokens),
         ("prefill_tokens", cl.prefill_tokens, single.prefill_tokens),
         ("steps", cl.steps, single.steps),
+        ("preemptions", cl.preemptions, single.preemptions),
+        ("restores", cl.restores, single.restores),
     ];
     for (name, a, b) in exact {
         if a != b {
@@ -410,6 +454,23 @@ fn shrink_candidates(c: &FuzzCase) -> Vec<FuzzCase> {
         cand.max_batch = 1;
         out.push(cand);
     }
+    if c.preempt.enabled {
+        // The FIFO run-to-completion batcher is structurally simpler:
+        // if the failure survives with preemption off, eviction and
+        // restore are exonerated from the reproducer.
+        let mut cand = c.clone();
+        cand.preempt = Default::default();
+        out.push(cand);
+    }
+    if c.requests.iter().any(|r| r.priority != 0) {
+        // Likewise a single-class stream: priority admission
+        // degenerates to FIFO.
+        let mut cand = c.clone();
+        for r in &mut cand.requests {
+            r.priority = 0;
+        }
+        out.push(cand);
+    }
     out
 }
 
@@ -426,6 +487,53 @@ mod tests {
                 "seed {seed} violated:\n{}",
                 out.violations.join("\n")
             );
+        }
+    }
+
+    #[test]
+    fn the_first_seed_of_every_preempt_family_passes() {
+        // The preempt overlay keeps the base family stratification
+        // (seed % 8), so 0..8 covers every regime with preemption
+        // armed over a near-full budget.
+        for seed in 0..8u64 {
+            let out = run_preempt_seed(seed);
+            assert!(
+                out.violations.is_empty(),
+                "preempt seed {seed} violated:\n{}",
+                out.violations.join("\n")
+            );
+        }
+    }
+
+    #[test]
+    fn preempt_shrink_candidates_include_disabling_preemption() {
+        let case = gen_preempt_case(1);
+        let cands = shrink_candidates(&case);
+        assert!(
+            cands.iter().any(|c| !c.preempt.enabled),
+            "no candidate disables preemption"
+        );
+        assert!(
+            cands
+                .iter()
+                .any(|c| c.requests.iter().all(|r| r.priority == 0)),
+            "no candidate collapses to a single class"
+        );
+        for cand in cands {
+            let _ = cand.build_sim();
+        }
+    }
+
+    #[test]
+    fn preempt_scans_shard_deterministically() {
+        let serial = fuzz_scan_with(0, 8, 1, gen_preempt_case);
+        let sharded = fuzz_scan_with(0, 8, 4, gen_preempt_case);
+        assert_eq!(serial.len(), sharded.len());
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.failure.is_some(), b.failure.is_some());
         }
     }
 

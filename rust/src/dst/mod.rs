@@ -39,16 +39,20 @@
 //! runs exactly the case that failed (CI prints the seed on failure),
 //! re-checks every invariant, and prints the violations plus the
 //! shrunk case. `cargo run --release -- dst --seeds 200` sweeps a seed
-//! range; see `rust/src/dst/README.md` for the workflow and the bug
-//! catalog this harness has flushed out.
+//! range, and `--family preempt` sweeps the preemption overlay
+//! ([`gen_preempt_case`]: mixed priorities, near-full KV, preemption
+//! enabled — the checker additionally audits the evicted lifecycle and
+//! exact KV conservation through evict/restore); see
+//! `rust/src/dst/README.md` for the workflow and the bug catalog this
+//! harness has flushed out.
 
 mod gen;
 mod harness;
 mod invariant;
 
-pub use gen::{gen_case, FuzzCase, FuzzEngine, RouterKind};
+pub use gen::{gen_case, gen_preempt_case, FuzzCase, FuzzEngine, RouterKind};
 pub use harness::{
-    fuzz_range, fuzz_scan, run_case, run_seed, shrink, CaseOutcome,
-    FuzzFailure, SeedSummary,
+    fuzz_range, fuzz_scan, fuzz_scan_with, run_case, run_preempt_seed,
+    run_seed, shrink, CaseOutcome, FuzzFailure, SeedSummary,
 };
 pub use invariant::InvariantChecker;

@@ -50,6 +50,7 @@ fn diurnal_workload() -> Vec<Request> {
         n_requests: 800,
         context: (512, 4096),
         gen: (32, 256),
+        priority_mix: Vec::new(),
         seed: 11,
     })
     .generate()

@@ -56,6 +56,7 @@ fn skewed_workload(rate: f64, n_requests: u64, seed: u64) -> WorkloadSpec {
         n_requests,
         context: (256, 8192),
         gen: (16, 512),
+        priority_mix: Vec::new(),
         seed,
     }
 }
@@ -123,6 +124,7 @@ pub fn run(artifact_dir: &Path) -> Result<Report> {
         instance_counts: vec![1, 2, 4, 8],
         routers: vec![RouterPolicy::RoundRobin],
         autoscale: vec![None],
+        priority_mixes: vec![Vec::new()],
         scale_load: true,
     };
     let mut eff = Table::new(

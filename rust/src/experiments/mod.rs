@@ -12,6 +12,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod findings;
+mod preemption;
 mod software_gap;
 mod table1;
 mod table2;
@@ -25,6 +26,7 @@ pub use cluster_scaling::{
     router_comparison, run as run_cluster_scaling, OVERLOAD_RATE,
 };
 pub use findings::run_findings;
+pub use preemption::{policy_comparison, run as run_preemption, PolicyComparison};
 pub use software_gap::{
     run as run_software_gap, PAPER_COMMERCIAL_GAP, PAPER_H100_GEMV_GAP,
 };
@@ -38,6 +40,7 @@ pub const ALL: &[&str] = &[
     "table1", "table2", "table4", "table5", "table6", "table7",
     "fig2", "fig3", "fig4", "fig5", "fig6", "findings", "moe-imbalance",
     "compute-role", "software-gap", "cluster-scaling", "autoscale-fleet",
+    "preemption",
 ];
 
 /// Run one experiment by id. `artifact_dir` is used by experiments that
@@ -65,6 +68,7 @@ pub fn run(id: &str, artifact_dir: &std::path::Path) -> Result<Report> {
         "software-gap" => software_gap::run(),
         "cluster-scaling" => cluster_scaling::run(artifact_dir),
         "autoscale-fleet" => autoscale::run(artifact_dir),
+        "preemption" => preemption::run(artifact_dir),
         "moe-imbalance" => moe_imbalance(),
         _ => anyhow::bail!(
             "unknown experiment '{id}' (known: {})",

@@ -52,6 +52,7 @@ fn run_sim(overhead: f64, prefill_chunk: u64) -> ServingReport {
         n_requests: 20,
         context: (4096, 4097),
         gen: (64, 65),
+        priority_mix: Vec::new(),
         seed: 11,
     })
     .generate();

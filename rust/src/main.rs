@@ -14,8 +14,10 @@
 //!               [--instances 4] [--router round-robin|least-tokens|slo]
 //!               [--disagg-prefill 2] [--kv-link-gbps 100]
 //!               [--autoscale --scale-max 8 --warmup 5] [--prefill-chip sram]
+//!               [--priority-mix 0:4,2:1] [--preempt]
 //! liminal validate [--artifacts artifacts]
-//! liminal dst [--seeds 50] [--start 0] [--jobs N] [--seed N] [--verbose]
+//! liminal dst [--seeds 50] [--start 0] [--jobs N] [--seed N]
+//!             [--family preempt] [--verbose]
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -62,7 +64,7 @@ USAGE:
   liminal experiment <table1|table2|table4|table5|table6|table7|
                       fig2|fig3|fig4|fig5|fig6|findings|moe-imbalance|
                       compute-role|software-gap|cluster-scaling|
-                      autoscale-fleet|all>
+                      autoscale-fleet|preemption|all>
                [--out DIR] [--artifacts DIR]
   liminal findings
   liminal serve <model> [--chip hbm3] [--tp N] [--backend analytic|pjrt]
@@ -85,9 +87,18 @@ USAGE:
                 across the front door exceeds SECONDS)]
                [--scale-idle SECONDS  (retire an instance idle this long)]
                [--scale-cooldown SECONDS] [--scale-window ARRIVALS]
+               [--priority-mix CLASS:WEIGHT,...  (tag synthetic requests with
+                priority classes, e.g. 0:4,2:1; higher class = more urgent)]
+               [--preempt  (priority admission + KV preemption: an urgent
+                arrival may evict the lowest-class active request)]
+               [--preempt-evict SECONDS] [--preempt-restore SECONDS
+                (step-time cost of dropping / re-materializing evicted KV;
+                 either implies --preempt)]
   liminal validate [--artifacts DIR]
   liminal dst [--seeds N  (default 50)] [--start S] [--seed X  (replay one)]
                [--jobs N  (seed-shard workers; default: available cores)]
+               [--family preempt  (overlay every scenario with a mixed-priority
+                stream, a near-full KV budget, and preemption enabled)]
                [--verbose]
 ";
 
@@ -339,6 +350,23 @@ fn cmd_findings() -> i32 {
     }
 }
 
+/// Parse a `CLASS:WEIGHT,...` priority-mix spec (e.g. `0:4,2:1`).
+/// Returns `None` on malformed entries, non-finite/non-positive
+/// weights, or classes outside `u8`.
+fn parse_priority_mix(s: &str) -> Option<Vec<(u8, f64)>> {
+    let mut mix = Vec::new();
+    for entry in s.split(',') {
+        let (class, weight) = entry.trim().split_once(':')?;
+        let class: u8 = class.trim().parse().ok()?;
+        let weight: f64 = weight.trim().parse().ok()?;
+        if !weight.is_finite() || weight <= 0.0 {
+            return None;
+        }
+        mix.push((class, weight));
+    }
+    if mix.is_empty() { None } else { Some(mix) }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let Some(model) = args.positional.get(1) else {
         eprintln!("usage: liminal serve <model> [options]");
@@ -370,6 +398,30 @@ fn cmd_serve(args: &Args) -> i32 {
     let hetero_prefill =
         args.get("prefill-chip").is_some() || args.get("prefill-tp").is_some();
 
+    // A cost knob implies --preempt, the way a scale knob implies
+    // --autoscale.
+    let preempt_on = args.flag("preempt")
+        || args.get("preempt-evict").is_some()
+        || args.get("preempt-restore").is_some();
+    let preempt = liminal::serving::PreemptionConfig {
+        enabled: preempt_on,
+        evict_cost: args.get_parsed("preempt-evict", 0.0f64),
+        restore_cost: args.get_parsed("preempt-restore", 0.0f64),
+    };
+    let priority_mix = match args.get("priority-mix") {
+        Some(s) => match parse_priority_mix(s) {
+            Some(mix) => mix,
+            None => {
+                eprintln!(
+                    "error: --priority-mix expects CLASS:WEIGHT,... with \
+                     positive weights (e.g. 0:4,2:1)"
+                );
+                return 2;
+            }
+        },
+        None => Vec::new(),
+    };
+
     // Any cluster-only flag routes through the cluster simulator — a
     // one-instance cluster is behavior-identical to the plain
     // simulator (pinned by the equivalence test), and silently
@@ -392,6 +444,8 @@ fn cmd_serve(args: &Args) -> i32 {
         job.ttft_target = args.get_parsed("ttft-target", job.ttft_target);
         job.workload.n_requests = args.get_parsed("requests", 100u64);
         job.workload.arrival_rate = args.get_parsed("rate", 10.0f64);
+        job.workload.priority_mix = priority_mix;
+        job.preempt = preempt;
         job.trace = trace;
         if let Some(gbps) = args.get("kv-link-gbps") {
             match gbps.parse::<f64>() {
@@ -489,6 +543,8 @@ fn cmd_serve(args: &Args) -> i32 {
     job.prefill_chunk = args.get_parsed("prefill-chunk", job.prefill_chunk);
     job.workload.n_requests = args.get_parsed("requests", 100u64);
     job.workload.arrival_rate = args.get_parsed("rate", 10.0f64);
+    job.workload.priority_mix = priority_mix;
+    job.preempt = preempt;
     job.trace = trace;
     job.artifact_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     job.backend = match args.get("backend").unwrap_or("analytic") {
@@ -510,10 +566,21 @@ fn cmd_serve(args: &Args) -> i32 {
 
 fn cmd_dst(args: &Args) -> i32 {
     use liminal::dst;
+    // `--family preempt` swaps the generator: same seed numbers, each
+    // base scenario overlaid with mixed priorities, a near-full KV
+    // budget, and preemption enabled.
+    let gen: fn(u64) -> dst::FuzzCase = match args.get("family") {
+        None | Some("base") => dst::gen_case,
+        Some("preempt") => dst::gen_preempt_case,
+        Some(other) => {
+            eprintln!("error: unknown family '{other}' (try base, preempt)");
+            return 2;
+        }
+    };
     if args.get("seed").is_some() {
         // Replay a single seed (the CI-failure reproduction path).
         let seed = args.get_parsed("seed", 0u64);
-        let case = dst::gen_case(seed);
+        let case = gen(seed);
         let out = dst::run_case(&case);
         if out.violations.is_empty() {
             println!(
@@ -541,7 +608,7 @@ fn cmd_dst(args: &Args) -> i32 {
     // The scan shards seeds across workers; summaries come back in
     // ascending seed order regardless of `jobs`, so the output (and
     // which failing seed prints first) is deterministic.
-    let summaries = dst::fuzz_scan(start, seeds, jobs);
+    let summaries = dst::fuzz_scan_with(start, seeds, jobs, gen);
     let wall = t0.elapsed().as_secs_f64();
     if verbose {
         for s in &summaries {
@@ -563,12 +630,19 @@ fn cmd_dst(args: &Args) -> i32 {
         );
         return 0;
     }
+    let family_flag = match args.get("family") {
+        Some("preempt") => " --family preempt",
+        _ => "",
+    };
     for f in &failures {
         println!("seed {} failed:", f.seed);
         for v in &f.violations {
             println!("  violation: {v}");
         }
-        println!("  replay with: cargo run --release -- dst --seed {}", f.seed);
+        println!(
+            "  replay with: cargo run --release -- dst --seed {}{}",
+            f.seed, family_flag
+        );
         println!("  shrunk case:\n{:#?}", f.minimized);
     }
     println!("dst: {}/{seeds} seeds FAILED in {wall:.2}s", failures.len());
@@ -625,5 +699,34 @@ mod tests {
     #[test]
     fn parse_list_handles_spaces() {
         assert_eq!(super::parse_list("8, 32 ,128"), vec![8, 32, 128]);
+    }
+
+    #[test]
+    fn usage_documents_the_priority_and_preemption_knobs() {
+        for flag in [
+            "--priority-mix",
+            "--preempt",
+            "--preempt-evict",
+            "--preempt-restore",
+            "--family preempt",
+            "preemption",
+        ] {
+            assert!(super::USAGE.contains(flag), "usage missing {flag}");
+        }
+    }
+
+    #[test]
+    fn priority_mix_specs_parse_or_reject() {
+        assert_eq!(
+            super::parse_priority_mix("0:4,2:1"),
+            Some(vec![(0, 4.0), (2, 1.0)])
+        );
+        assert_eq!(
+            super::parse_priority_mix(" 1 : 2.5 "),
+            Some(vec![(1, 2.5)])
+        );
+        for bad in ["", "0", "0:", ":1", "0:0", "0:-1", "0:inf", "300:1", "0:1,"] {
+            assert_eq!(super::parse_priority_mix(bad), None, "accepted {bad:?}");
+        }
     }
 }

@@ -1,11 +1,30 @@
-//! Continuous batcher: admission queue, KV-capacity gate, and the
-//! prefill-chunk planner.
+//! Continuous batcher: priority admission queue, KV-capacity gate,
+//! preemption under capacity pressure, and the prefill-chunk planner.
 //!
 //! The admission policy mirrors the paper's capacity story: a request is
 //! admitted only if its KV cache (context + full generation budget) fits
 //! in the remaining memory after weights, and the active batch stays
-//! under the configured cap. FIFO order; no preemption (requests run to
-//! completion, as in the paper's steady-state analysis).
+//! under the configured cap. Admission is by **priority class**
+//! ([`Request::priority`], higher first), with FIFO order inside a
+//! class; a single-class workload therefore degrades to exactly the
+//! historical FIFO batcher (the regression pins rely on this). Head-of-
+//! line semantics are preserved per selection: if the chosen request's
+//! KV does not fit, admission stalls — the batcher never skips past it
+//! to a smaller request.
+//!
+//! With preemption enabled ([`PreemptionConfig`]), a selected request
+//! whose KV does not fit may instead **evict** active victims of a
+//! strictly lower class: the victim's KV reservation is released
+//! immediately (its decode/prefill progress is kept), it re-enters the
+//! queue at the front, and the configured evict cost is charged to the
+//! next engine step. When an evicted request is later re-admitted, its
+//! KV must be re-materialized, charging the restore cost the same way.
+//! Victims are the lowest class first, most recently admitted first
+//! within a class, and eviction only proceeds when enough strictly-
+//! lower-class KV exists to actually fit the candidate (no fruitless
+//! churn). With a single class — or preemption disabled, the default —
+//! no eviction can ever trigger and the step-time penalty is exactly
+//! `0.0`, so the disabled path is bit-identical to the FIFO batcher.
 //!
 //! With a prefill chunk configured ([`Batcher::with_prefill`]), an
 //! admitted request first has its prompt ingested in chunks of at most
@@ -91,7 +110,43 @@ impl KvBudget {
     }
 }
 
-/// FIFO continuous batcher over arena-resident requests.
+/// Preemption policy for a [`Batcher`]: whether a higher-priority
+/// request may evict a lower one's KV under capacity pressure, and
+/// what the KV traffic costs in engine-step seconds. The default is
+/// disabled with zero costs, which is bit-identical to the
+/// run-to-completion batcher.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptionConfig {
+    /// Allow KV eviction of strictly-lower-priority active requests.
+    pub enabled: bool,
+    /// Seconds of step time charged per eviction (writing the victim's
+    /// KV out / dropping and bookkeeping it).
+    pub evict_cost: f64,
+    /// Seconds of step time charged when an evicted request is
+    /// re-admitted (re-materializing its KV).
+    pub restore_cost: f64,
+}
+
+impl Default for PreemptionConfig {
+    fn default() -> Self {
+        PreemptionConfig { enabled: false, evict_cost: 0.0, restore_cost: 0.0 }
+    }
+}
+
+/// A scheduling action the batcher logged during admission, drained by
+/// the simulator after each step boundary and forwarded to its
+/// [`SimObserver`](super::SimObserver) — the DST invariant checker
+/// audits the preempted lifecycle through these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedAction {
+    /// The request's KV was evicted; it re-entered the queue.
+    Preempt,
+    /// A previously evicted request was re-admitted.
+    Restore,
+}
+
+/// Priority continuous batcher over arena-resident requests (FIFO
+/// within a class; single-class workloads degrade to exact FIFO).
 pub struct Batcher {
     /// Maximum concurrent sequences (compiled bucket size or policy cap).
     pub max_batch: usize,
@@ -106,6 +161,26 @@ pub struct Batcher {
     /// Retirement buffer, reused across steps so completing a step
     /// allocates nothing in steady state.
     retired: Vec<ReqId>,
+    /// Preemption policy (default: disabled, the FIFO-exact path).
+    preempt: PreemptionConfig,
+    /// Queued requests with a non-zero priority class. While 0 the
+    /// selection fast path is the plain FIFO front, so all-class-0
+    /// workloads pay no scan.
+    queued_hi: usize,
+    /// Requests whose KV was evicted and not yet re-admitted. Small by
+    /// construction (bounded by evictions in flight), so membership is
+    /// a linear scan.
+    evicted_pending: Vec<ReqId>,
+    /// Step-time penalty accumulated by evictions/restores since the
+    /// last priced step; [`Batcher::take_step_penalty`] drains it into
+    /// the next step's latency. Exactly 0.0 unless preemption fired.
+    step_penalty: f64,
+    /// Total evictions.
+    preemptions: u64,
+    /// Total re-admissions of evicted requests.
+    restores: u64,
+    /// Preempt/restore actions since the simulator last drained them.
+    sched_log: Vec<(ReqId, SchedAction)>,
 }
 
 impl Batcher {
@@ -121,6 +196,13 @@ impl Batcher {
             prefill_chunk: 0,
             prefill_processed: 0,
             retired: Vec::new(),
+            preempt: PreemptionConfig::default(),
+            queued_hi: 0,
+            evicted_pending: Vec::new(),
+            step_penalty: 0.0,
+            preemptions: 0,
+            restores: 0,
+            sched_log: Vec::new(),
         }
     }
 
@@ -135,15 +217,125 @@ impl Batcher {
         b
     }
 
-    /// Enqueue an arriving request by id.
-    pub fn enqueue(&mut self, id: ReqId) {
+    /// Set the preemption policy (builder-style; see
+    /// [`PreemptionConfig`]). The cluster simulator threads one config
+    /// to every instance it builds or spawns.
+    pub fn set_preemption(&mut self, cfg: PreemptionConfig) {
+        self.preempt = cfg;
+    }
+
+    /// The active preemption policy.
+    pub fn preemption(&self) -> PreemptionConfig {
+        self.preempt
+    }
+
+    /// Enqueue an arriving request by id. The arena reference lets the
+    /// batcher note the request's priority class, keeping the all-
+    /// class-0 selection on the O(1) FIFO fast path.
+    pub fn enqueue(&mut self, id: ReqId, arena: &RequestArena) {
+        if arena[id].priority > 0 {
+            self.queued_hi += 1;
+        }
         self.queue.push_back(id);
     }
 
-    /// Admit as many queued requests as fit. The simulator calls this
+    /// The queue position the next admission should take: the highest
+    /// priority class, earliest-queued within the class. With no
+    /// non-zero class queued this is the plain FIFO front (O(1)); the
+    /// scan only runs for genuinely mixed queues.
+    fn next_admission(&self, arena: &RequestArena) -> Option<usize> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        if self.queued_hi == 0 {
+            return Some(0);
+        }
+        let mut best: Option<(usize, u8)> = None;
+        for (i, &id) in self.queue.iter().enumerate() {
+            let p = arena[id].priority;
+            match best {
+                // Strictly-greater keeps the earliest index on ties:
+                // FIFO within a class.
+                Some((_, bp)) if bp >= p => {}
+                _ => best = Some((i, p)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Evict active victims of a strictly lower class than
+    /// `cand_priority` until `need` KV bytes fit, lowest class first
+    /// and most recently admitted first within a class. Victims keep
+    /// their token progress; their reservation is released immediately,
+    /// they re-enter the queue front (so they resume before same-class
+    /// arrivals still waiting), and each eviction charges
+    /// `evict_cost` to the next step. Returns how many victims were
+    /// pushed onto the queue front — 0 when eviction could not free
+    /// enough (in which case nothing is evicted at all: no fruitless
+    /// churn).
+    fn preempt_for(
+        &mut self,
+        cand_priority: u8,
+        need: f64,
+        arena: &mut RequestArena,
+    ) -> usize {
+        let evictable: f64 = self
+            .active
+            .iter()
+            .filter(|&&v| arena[v].priority < cand_priority)
+            .map(|&v| self.kv.bytes_for(&arena[v]))
+            .sum();
+        if self.kv.used_bytes() - evictable + need > self.kv.budget_bytes {
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.kv.used_bytes() + need > self.kv.budget_bytes {
+            let mut victim: Option<(usize, u8)> = None;
+            for (i, &v) in self.active.iter().enumerate() {
+                let p = arena[v].priority;
+                if p >= cand_priority {
+                    continue;
+                }
+                match victim {
+                    // `<` updates on ties too: the most recently
+                    // admitted of the lowest class goes first, so the
+                    // oldest within-class work is disturbed last.
+                    Some((_, vp)) if vp < p => {}
+                    _ => victim = Some((i, p)),
+                }
+            }
+            let Some((vi, _)) = victim else { break };
+            // `remove`, not `swap_remove`: the active list's order is
+            // the admission FIFO the prefill planner relies on.
+            let vid = self.active.remove(vi);
+            self.kv.release(&arena[vid]);
+            arena[vid].scheduled_prefill = 0;
+            if arena[vid].priority > 0 {
+                self.queued_hi += 1;
+            }
+            self.queue.push_front(vid);
+            self.evicted_pending.push(vid);
+            self.step_penalty += self.preempt.evict_cost;
+            self.preemptions += 1;
+            self.sched_log.push((vid, SchedAction::Preempt));
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Admit as many queued requests as fit, highest priority class
+    /// first (FIFO within a class — with a single class this is the
+    /// exact historical FIFO admission). The simulator calls this
     /// only at step boundaries: a request arriving mid-step must wait
     /// for the in-flight step to finish before it can join (it never
     /// rides a step it was not priced into).
+    ///
+    /// If the selected request's KV does not fit, admission stalls
+    /// (head-of-line, never skipping to a smaller request) — unless
+    /// preemption is enabled and enough strictly-lower-class KV is
+    /// active, in which case victims are evicted via
+    /// [`Batcher::preempt_for`] and the admission proceeds.
+    ///
     /// Returns how many were admitted; sets their `admitted_at` unless
     /// an earlier admission already stamped it (a disaggregated request
     /// re-admitted at the decode pool keeps its first admission, so
@@ -151,12 +343,36 @@ impl Batcher {
     pub fn admit(&mut self, now: f64, arena: &mut RequestArena) -> usize {
         let mut n = 0;
         while self.active.len() < self.max_batch {
-            let Some(&front) = self.queue.front() else { break };
-            if !self.kv.reserve(&arena[front]) {
-                break; // FIFO head-of-line: preserve arrival order
+            let Some(mut pos) = self.next_admission(arena) else { break };
+            let id = self.queue[pos];
+            if !self.kv.reserve(&arena[id]) {
+                if !self.preempt.enabled {
+                    break; // head-of-line: stall for the selection
+                }
+                let need = self.kv.bytes_for(&arena[id]);
+                let evicted =
+                    self.preempt_for(arena[id].priority, need, arena);
+                if evicted == 0 || !self.kv.reserve(&arena[id]) {
+                    break;
+                }
+                // Victims were pushed onto the queue front, shifting
+                // the candidate's position.
+                pos += evicted;
             }
-            self.queue.pop_front();
-            let r = &mut arena[front];
+            self.queue.remove(pos);
+            if arena[id].priority > 0 {
+                self.queued_hi -= 1;
+            }
+            if let Some(i) = self.evicted_pending.iter().position(|&e| e == id)
+            {
+                // Re-admitting an evicted request re-materializes its
+                // KV: charge the restore cost to the next step.
+                self.evicted_pending.swap_remove(i);
+                self.step_penalty += self.preempt.restore_cost;
+                self.restores += 1;
+                self.sched_log.push((id, SchedAction::Restore));
+            }
+            let r = &mut arena[id];
             if r.admitted_at.is_none() {
                 r.admitted_at = Some(now);
             }
@@ -165,10 +381,26 @@ impl Batcher {
                 // KV cache when the request reaches us.
                 r.prefilled = r.context_len;
             }
-            self.active.push(front);
+            self.active.push(id);
             n += 1;
         }
         n
+    }
+
+    /// Drain the evict/restore step-time penalty accumulated since the
+    /// last priced step. Exactly `0.0` unless preemption fired, so
+    /// adding it to an engine latency is a bitwise no-op on the
+    /// disabled path.
+    pub fn take_step_penalty(&mut self) -> f64 {
+        std::mem::take(&mut self.step_penalty)
+    }
+
+    /// Move the preempt/restore actions logged since the last drain
+    /// into `out` (cleared first). The simulators forward these to
+    /// their observer after each step boundary.
+    pub fn drain_sched_log(&mut self, out: &mut Vec<(ReqId, SchedAction)>) {
+        out.clear();
+        out.append(&mut self.sched_log);
     }
 
     /// Plan the next engine step: every decode-ready lane emits one
@@ -319,6 +551,30 @@ impl Batcher {
         self.prefill_processed
     }
 
+    /// Total evictions performed so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Total re-admissions of previously evicted requests.
+    pub fn restores(&self) -> u64 {
+        self.restores
+    }
+
+    /// Requests currently evicted and awaiting re-admission.
+    pub fn evicted_pending_len(&self) -> usize {
+        self.evicted_pending.len()
+    }
+
+    /// Sum of the KV footprints of the active batch. Because a
+    /// request's footprint is constant over its lifetime, this must
+    /// always equal [`Batcher::kv_used_bytes`] — the DST invariant
+    /// checker cross-checks the two to catch conservation bugs in the
+    /// evict/restore path.
+    pub fn active_kv_bytes(&self, arena: &RequestArena) -> f64 {
+        self.active.iter().map(|&id| self.kv.bytes_for(&arena[id])).sum()
+    }
+
     /// Whether everything is drained.
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.active.is_empty()
@@ -340,7 +596,7 @@ mod tests {
         let mut b = Batcher::new(2, budget(1_000_000));
         for i in 0..5 {
             let id = req(&mut a, i, 10, 5);
-            b.enqueue(id);
+            b.enqueue(id, &a);
         }
         assert_eq!(b.admit(0.0, &mut a), 2);
         assert_eq!(b.active_len(), 2);
@@ -354,8 +610,8 @@ mod tests {
         let mut b = Batcher::new(8, budget(20));
         let r0 = req(&mut a, 0, 10, 5);
         let r1 = req(&mut a, 1, 10, 5);
-        b.enqueue(r0);
-        b.enqueue(r1);
+        b.enqueue(r0, &a);
+        b.enqueue(r1, &a);
         assert_eq!(b.admit(0.0, &mut a), 1);
         // Retire the first; second then fits.
         for _ in 0..5 {
@@ -370,8 +626,8 @@ mod tests {
         let mut b = Batcher::new(4, budget(1000));
         let r0 = req(&mut a, 0, 10, 2);
         let r1 = req(&mut a, 1, 10, 3);
-        b.enqueue(r0);
-        b.enqueue(r1);
+        b.enqueue(r0, &a);
+        b.enqueue(r1, &a);
         b.admit(0.0, &mut a);
         assert!(b.step_complete(0.1, &mut a).is_empty());
         let done = b.step_complete(0.2, &mut a);
@@ -388,7 +644,7 @@ mod tests {
         let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(15));
         let r0 = req(&mut a, 0, 10, 2);
-        b.enqueue(r0);
+        b.enqueue(r0, &a);
         b.admit(0.0, &mut a);
         assert!(b.kv_utilization() > 0.7);
         b.step_complete(0.1, &mut a);
@@ -407,7 +663,7 @@ mod tests {
         let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(1000));
         let r0 = req(&mut a, 0, 100, 2);
-        b.enqueue(r0);
+        b.enqueue(r0, &a);
         b.admit(0.0, &mut a);
         let plan = b.plan_step(&mut a);
         assert_eq!(plan.decode_batch, 1);
@@ -423,7 +679,7 @@ mod tests {
         let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(4, budget(1000), 30);
         let r0 = req(&mut a, 0, 100, 2);
-        b.enqueue(r0);
+        b.enqueue(r0, &a);
         b.admit(0.0, &mut a);
 
         // 100-token prompt at 30 tokens/step: 3 full chunks + 10.
@@ -456,8 +712,8 @@ mod tests {
         let mut b = Batcher::with_prefill(4, budget(1000), 8);
         let r0 = req(&mut a, 0, 6, 1);
         let r1 = req(&mut a, 1, 6, 1);
-        b.enqueue(r0);
-        b.enqueue(r1);
+        b.enqueue(r0, &a);
+        b.enqueue(r1, &a);
         b.admit(0.0, &mut a);
         // First step: only the oldest prompt gets a chunk, even though
         // 2 tokens of budget are nominally left over.
@@ -486,7 +742,7 @@ mod tests {
         let mut b = Batcher::with_prefill(4, budget(1000), 10);
         for (id, ctx) in [(0, 5), (1, 20), (2, 20)] {
             let rid = req(&mut a, id, ctx, 1);
-            b.enqueue(rid);
+            b.enqueue(rid, &a);
         }
         b.admit(0.0, &mut a);
         b.plan_step(&mut a); // r0's 5-token prompt
@@ -507,7 +763,7 @@ mod tests {
         let mut a = RequestArena::new();
         let mut b = Batcher::with_prefill(4, budget(1000), 16);
         let r0 = req(&mut a, 0, 0, 1);
-        b.enqueue(r0);
+        b.enqueue(r0, &a);
         b.admit(0.0, &mut a);
         let plan = b.plan_step(&mut a);
         assert_eq!(plan.decode_batch, 1);
@@ -524,9 +780,9 @@ mod tests {
         let mut b = Batcher::new(4, budget(1000));
         let r0 = req(&mut a, 0, 10, 2);
         a[r0].admitted_at = Some(0.25);
-        b.enqueue(r0);
+        b.enqueue(r0, &a);
         let r1 = req(&mut a, 1, 10, 2);
-        b.enqueue(r1);
+        b.enqueue(r1, &a);
         b.admit(1.0, &mut a);
         for t in [1.1, 1.2] {
             let done = b.step_complete(t, &mut a);
@@ -545,7 +801,7 @@ mod tests {
         let mut b = Batcher::with_prefill(2, budget(1000), 8);
         for id in 0..3 {
             let rid = req(&mut a, id, 16, 1);
-            b.enqueue(rid);
+            b.enqueue(rid, &a);
         }
         assert_eq!(b.prefill_backlog(&a), 3); // all queued
         b.admit(0.0, &mut a);
@@ -558,6 +814,158 @@ mod tests {
         assert_eq!(b.prefill_backlog(&a), 2);
     }
 
+    fn preq(arena: &mut RequestArena, id: u64, ctx: u64, gen: u64, prio: u8) -> ReqId {
+        let rid = arena.alloc(mk_req(id, 0.0, ctx, gen));
+        arena[rid].priority = prio;
+        rid
+    }
+
+    #[test]
+    fn admission_is_by_priority_class_then_fifo() {
+        let mut a = RequestArena::new();
+        let mut b = Batcher::new(1, budget(1000));
+        let r0 = preq(&mut a, 0, 10, 1, 0);
+        let r1 = preq(&mut a, 1, 10, 1, 1);
+        let r2 = preq(&mut a, 2, 10, 1, 1);
+        for id in [r0, r1, r2] {
+            b.enqueue(id, &a);
+        }
+        let mut order = Vec::new();
+        let mut t = 0.0;
+        while !b.idle() {
+            b.admit(t, &mut a);
+            t += 0.1;
+            for &d in b.step_complete(t, &mut a) {
+                order.push(a[d].id);
+            }
+        }
+        // Class 1 first in arrival order, then the class-0 request.
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn high_priority_arrival_evicts_the_most_recent_low_victim() {
+        let mut a = RequestArena::new();
+        // Budget fits exactly two 15-token requests.
+        let mut b = Batcher::new(8, budget(30));
+        b.set_preemption(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.01,
+            restore_cost: 0.02,
+        });
+        let r0 = preq(&mut a, 0, 10, 5, 0);
+        let r1 = preq(&mut a, 1, 10, 5, 0);
+        b.enqueue(r0, &a);
+        b.enqueue(r1, &a);
+        assert_eq!(b.admit(0.0, &mut a), 2);
+        b.step_complete(0.1, &mut a); // both gain one token
+        let hi = preq(&mut a, 2, 10, 5, 1);
+        b.enqueue(hi, &a);
+        assert_eq!(b.admit(0.2, &mut a), 1);
+        // The most recently admitted class-0 request (r1) was evicted;
+        // it kept its decode progress and waits at the queue front.
+        assert_eq!(b.preemptions(), 1);
+        assert_eq!(b.evicted_pending_len(), 1);
+        assert_eq!(b.active_len(), 2);
+        assert_eq!(b.queued_len(), 1);
+        assert_eq!(a[r1].generated, 1);
+        // Eviction charged the next step exactly once.
+        assert_eq!(b.take_step_penalty(), 0.01);
+        assert_eq!(b.take_step_penalty(), 0.0);
+        let mut log = Vec::new();
+        b.drain_sched_log(&mut log);
+        assert_eq!(log, vec![(r1, SchedAction::Preempt)]);
+        // Drain: once a slot frees, r1 is restored (restore cost
+        // charged) and runs to completion.
+        let mut t = 0.3;
+        while !b.idle() {
+            b.admit(t, &mut a);
+            t += 0.1;
+            b.step_complete(t, &mut a);
+        }
+        assert_eq!(b.restores(), 1);
+        assert_eq!(b.evicted_pending_len(), 0);
+        assert_eq!(b.take_step_penalty(), 0.02);
+        assert!(a[r1].completed_at.is_some());
+        assert_eq!(b.kv_used_bytes(), 0.0);
+    }
+
+    #[test]
+    fn infeasible_preemption_evicts_nothing() {
+        let mut a = RequestArena::new();
+        let mut b = Batcher::new(8, budget(30));
+        b.set_preemption(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.01,
+            restore_cost: 0.01,
+        });
+        let lo = preq(&mut a, 0, 10, 5, 0);
+        let hi = preq(&mut a, 1, 10, 5, 2);
+        b.enqueue(lo, &a);
+        b.enqueue(hi, &a);
+        assert_eq!(b.admit(0.0, &mut a), 2);
+        // A 20-token class-1 arrival cannot fit even with `lo` gone
+        // (30 - 15 + 20 > 30): nothing may be disturbed.
+        let mid = preq(&mut a, 2, 15, 5, 1);
+        b.enqueue(mid, &a);
+        assert_eq!(b.admit(0.1, &mut a), 0);
+        assert_eq!(b.preemptions(), 0);
+        assert_eq!(b.active_len(), 2);
+        assert_eq!(b.take_step_penalty(), 0.0);
+    }
+
+    #[test]
+    fn single_class_never_preempts_even_when_enabled() {
+        let mut a = RequestArena::new();
+        let mut b = Batcher::new(8, budget(20));
+        b.set_preemption(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.5,
+            restore_cost: 0.5,
+        });
+        let r0 = preq(&mut a, 0, 10, 5, 3);
+        let r1 = preq(&mut a, 1, 10, 5, 3);
+        b.enqueue(r0, &a);
+        b.enqueue(r1, &a);
+        // Only one fits, and an equal class is never a victim.
+        assert_eq!(b.admit(0.0, &mut a), 1);
+        assert_eq!(b.preemptions(), 0);
+        assert_eq!(b.take_step_penalty(), 0.0);
+    }
+
+    #[test]
+    fn evicted_prefilling_request_resumes_its_prompt() {
+        let mut a = RequestArena::new();
+        let mut b = Batcher::with_prefill(8, budget(30), 8);
+        b.set_preemption(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.0,
+            restore_cost: 0.0,
+        });
+        let lo = preq(&mut a, 0, 16, 1, 0); // 17 KV tokens
+        b.enqueue(lo, &a);
+        b.admit(0.0, &mut a);
+        b.plan_step(&mut a);
+        b.step_complete(0.1, &mut a); // 8 of 16 prompt tokens in
+        assert_eq!(a[lo].prefilled, 8);
+        let hi = preq(&mut a, 1, 10, 5, 1); // 15 KV tokens: 17+15 > 30
+        b.enqueue(hi, &a);
+        b.admit(0.2, &mut a);
+        assert_eq!(b.preemptions(), 1);
+        assert_eq!(a[lo].prefilled, 8); // prompt progress kept
+        let mut t = 0.3;
+        while !b.idle() {
+            b.admit(t, &mut a);
+            b.plan_step(&mut a);
+            t += 0.1;
+            b.step_complete(t, &mut a);
+        }
+        assert_eq!(b.restores(), 1);
+        assert_eq!(a[lo].prefilled, 16);
+        assert!(a[lo].completed_at.is_some());
+        assert_eq!(b.prefill_tokens_processed(), 16 + 10);
+    }
+
     #[test]
     fn retirement_buffer_is_reused_not_grown() {
         // Consecutive step_complete calls return slices from the same
@@ -566,7 +974,7 @@ mod tests {
         let mut a = RequestArena::new();
         let mut b = Batcher::new(4, budget(1000));
         let r0 = req(&mut a, 0, 10, 1);
-        b.enqueue(r0);
+        b.enqueue(r0, &a);
         b.admit(0.0, &mut a);
         assert_eq!(b.step_complete(0.1, &mut a).len(), 1);
         assert!(b.step_complete(0.2, &mut a).is_empty());

@@ -101,7 +101,45 @@ impl<'e> Instance<'e> {
         if self.batcher.prefill_chunk() > 0 {
             self.routed_prefill_tokens += r.context_len;
         }
-        self.batcher.enqueue(id);
+        self.batcher.enqueue(id, arena);
+    }
+
+    /// Set the batcher's preemption policy (see
+    /// [`PreemptionConfig`](super::PreemptionConfig)).
+    pub fn set_preemption(&mut self, cfg: super::batcher::PreemptionConfig) {
+        self.batcher.set_preemption(cfg);
+    }
+
+    /// Move the batcher's preempt/restore actions since the last drain
+    /// into `out` (cleared first); the simulator forwards them to its
+    /// observer.
+    pub fn drain_sched_log(
+        &mut self,
+        out: &mut Vec<(ReqId, super::batcher::SchedAction)>,
+    ) {
+        self.batcher.drain_sched_log(out);
+    }
+
+    /// Total KV evictions performed by this instance's batcher.
+    pub fn preemptions(&self) -> u64 {
+        self.batcher.preemptions()
+    }
+
+    /// Total restores of previously evicted requests.
+    pub fn restores(&self) -> u64 {
+        self.batcher.restores()
+    }
+
+    /// Requests currently evicted from this instance and awaiting
+    /// re-admission.
+    pub fn evicted_pending_len(&self) -> usize {
+        self.batcher.evicted_pending_len()
+    }
+
+    /// Sum of the active batch's per-request KV footprints (must always
+    /// equal [`Instance::kv_used_bytes`]; the DST checker cross-checks).
+    pub fn active_kv_bytes(&self, arena: &RequestArena) -> f64 {
+        self.batcher.active_kv_bytes(arena)
     }
 
     /// Step boundary (or idle): admit queued requests, plan the next
@@ -117,7 +155,9 @@ impl<'e> Instance<'e> {
         if plan.is_empty() {
             return None;
         }
-        let dt = self.engine.mixed_step_latency(&plan);
+        // The evict/restore penalty is exactly 0.0 unless preemption
+        // fired, so this add is a bitwise no-op on the default path.
+        let dt = self.engine.mixed_step_latency(&plan) + self.batcher.take_step_penalty();
         self.ewma_step = if self.ewma_step == 0.0 {
             dt
         } else {
@@ -235,6 +275,8 @@ impl<'e> Instance<'e> {
     pub fn stats(&self, end_time: f64) -> StepStats {
         StepStats {
             prefill_tokens: self.batcher.prefill_tokens_processed(),
+            preemptions: self.batcher.preemptions(),
+            restores: self.batcher.restores(),
             end_time,
             ..self.stats
         }
@@ -316,5 +358,44 @@ mod tests {
         inst.step_done(0.5, &mut a);
         // Constant latency: the EWMA stays put.
         assert!((inst.ewma_step() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_penalty_prices_into_the_next_step() {
+        use super::super::batcher::PreemptionConfig;
+        use super::super::testutil::budget;
+
+        let mut a = RequestArena::new();
+        let mut batcher = Batcher::new(8, budget(30));
+        batcher.set_preemption(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.5,
+            restore_cost: 0.25,
+        });
+        let mut inst = Instance::new(batcher, Box::new(FixedEngine(0.1)));
+        let r0 = a.alloc(mk_req(0, 0.0, 10, 5));
+        let r1 = a.alloc(mk_req(1, 0.0, 10, 5));
+        inst.enqueue(r0, &a);
+        inst.enqueue(r1, &a);
+        assert_eq!(inst.kick(0.0, &mut a), Some(0.1));
+        inst.step_done(0.1, &mut a);
+        let hi = a.alloc(mk_req(2, 0.1, 10, 5));
+        a[hi].priority = 1;
+        inst.enqueue(hi, &a);
+        // The kick that evicts prices the evict cost into its step.
+        assert_eq!(inst.kick(0.1, &mut a), Some(0.6));
+        assert_eq!(inst.preemptions(), 1);
+        assert_eq!(inst.evicted_pending_len(), 1);
+        let mut log = Vec::new();
+        inst.drain_sched_log(&mut log);
+        assert_eq!(log.len(), 1);
+        inst.step_done(0.7, &mut a);
+        // The following step carries no stale penalty.
+        assert_eq!(inst.kick(0.7, &mut a), Some(0.1));
+        let st = inst.stats(1.0);
+        assert_eq!(st.preemptions, 1);
+        assert_eq!(st.restores, 0);
+        // Reservation and footprint stay consistent through eviction.
+        assert!((inst.active_kv_bytes(&a) - inst.kv_used_bytes()).abs() < 1e-9);
     }
 }

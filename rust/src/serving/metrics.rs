@@ -70,6 +70,11 @@ pub struct StepStats {
     pub busy_time: f64,
     /// Total prompt tokens prefilled.
     pub prefill_tokens: u64,
+    /// KV evictions under capacity pressure (0 with preemption off).
+    pub preemptions: u64,
+    /// Evicted requests re-admitted (restores trail preemptions by the
+    /// evictions still awaiting re-admission when the run ends).
+    pub restores: u64,
     /// Simulated clock at the end of the run.
     pub end_time: f64,
 }
@@ -109,6 +114,13 @@ pub struct ServingReport {
     /// over busy seconds — a per-step average would bias the mean when
     /// step latencies vary with batch size).
     pub mean_batch: f64,
+    /// KV evictions under capacity pressure (0 with preemption off).
+    /// The evict/restore stall is priced as extra step time, so it
+    /// surfaces in the TTFT/TPOT distributions of whatever was active
+    /// or waiting while the traffic ran.
+    pub preemptions: u64,
+    /// Evicted requests re-admitted and restored.
+    pub restores: u64,
 }
 
 impl ServingReport {
@@ -208,6 +220,8 @@ impl ServingReport {
             } else {
                 0.0
             },
+            preemptions: stats.preemptions,
+            restores: stats.restores,
         }
     }
 
@@ -294,6 +308,7 @@ mod tests {
             arrival: 0.0,
             context_len: 10,
             gen_len: 5,
+            priority: 0,
             generated: 5,
             prefilled: 10,
             scheduled_prefill: 0,
@@ -334,6 +349,7 @@ mod tests {
             arrival: 0.0,
             context_len: 10,
             gen_len: 10,
+            priority: 0,
             generated: 10,
             prefilled: 10,
             scheduled_prefill: 0,
@@ -352,6 +368,7 @@ mod tests {
             busy_time: 2.0,
             prefill_tokens: 10,
             end_time: 2.0,
+            ..Default::default()
         };
         let rep = ServingReport::from_requests("t".into(), &reqs, &stats);
         assert_eq!(rep.completed, 1);
@@ -371,8 +388,8 @@ mod tests {
             steps: 2,
             batch_time_integral: 1.0 * 0.1 + 2.0 * 0.2,
             busy_time: 0.3,
-            prefill_tokens: 0,
             end_time: 0.3,
+            ..Default::default()
         };
         let rep = ServingReport::from_requests("t".into(), &[one_request()], &stats);
         assert!((rep.mean_batch - 5.0 / 3.0).abs() < 1e-12);
@@ -430,6 +447,49 @@ mod tests {
         assert!((rep.span - 2.0).abs() < 1e-12);
         assert_eq!(rep.utps_p50, 0.0);
         assert_eq!(rep.ttft, LatencyStats::zero());
+    }
+
+    #[test]
+    fn preemption_counters_flow_into_the_report_and_stay_nan_free() {
+        // A run where every admitted request was evicted and never
+        // restored before the clock ran out: zero completions, non-zero
+        // preemption counters. Every float stat must stay finite (the
+        // same guards as the zero-completion regression) and the
+        // counters must land in the report verbatim.
+        let mut r = one_request();
+        r.completed_at = None;
+        r.first_token_at = None;
+        r.generated = 3; // partial progress, evicted mid-decode
+        let stats = StepStats {
+            steps: 4,
+            busy_time: 0.4,
+            batch_time_integral: 0.4,
+            preemptions: 2,
+            restores: 1,
+            end_time: 1.0,
+            ..Default::default()
+        };
+        let rep = ServingReport::from_requests("t".into(), &[r], &stats);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.preemptions, 2);
+        assert_eq!(rep.restores, 1);
+        for v in [
+            rep.span,
+            rep.stps,
+            rep.utps_mean,
+            rep.utps_p50,
+            rep.utps_p99_low,
+            rep.queue_delay_mean,
+            rep.mean_batch,
+            rep.ttft.mean,
+            rep.ttft.p99,
+            rep.tpot.mean,
+            rep.tpot.p99,
+            rep.e2e.mean,
+            rep.e2e.p99,
+        ] {
+            assert!(v.is_finite(), "NaN/inf in the all-preempted report");
+        }
     }
 
     #[test]

@@ -67,14 +67,32 @@
 //!   latency as mean/p50/p90/p99 ([`LatencyStats`]), plus
 //!   duration-weighted batch occupancy and system tokens/sec.
 //!
+//! # Priority and preemption
+//!
+//! Every request carries a scheduling class ([`Request::priority`],
+//! higher = more urgent; workload generators draw it from a configured
+//! class mix, traces carry it per record). The [`Batcher`] admits by
+//! class — FIFO within a class, so single-class workloads reproduce the
+//! historical FIFO batcher bit for bit. With preemption enabled
+//! ([`PreemptionConfig`]) a higher-priority arrival that does not fit
+//! the KV budget may evict the lowest-class active request: the
+//! victim's KV is released immediately, it resumes from the queue front
+//! once capacity frees, and the configured evict/restore costs are
+//! priced into step time (so the stalls land in TTFT/TPOT, never
+//! disappear). [`SimObserver::on_preempt`]/[`SimObserver::on_restore`]
+//! expose the lifecycle to observers; the DST invariant checker audits
+//! it (zero reserved KV while evicted, no double eviction, exact KV
+//! conservation through evict/restore).
+//!
 //! # Workloads
 //!
 //! [`WorkloadGen`] synthesizes Poisson arrivals with uniform
-//! prompt/generation lengths; [`DiurnalGen`] synthesizes a
-//! non-homogeneous Poisson process (sinusoidal diurnal swing plus burst
-//! episodes, by thinning) for elastic-fleet studies; [`WorkloadTrace`]
-//! replays recorded JSONL/CSV traces (`arrival, context_len, gen_len`
-//! per record) for trace-driven studies (`serve --trace`).
+//! prompt/generation lengths and an optional priority-class mix;
+//! [`DiurnalGen`] synthesizes a non-homogeneous Poisson process
+//! (sinusoidal diurnal swing plus burst episodes, by thinning) for
+//! elastic-fleet studies; [`WorkloadTrace`] replays recorded JSONL/CSV
+//! traces (`arrival, context_len, gen_len[, priority]` per record) for
+//! trace-driven studies (`serve --trace`).
 
 mod arena;
 mod batcher;
@@ -90,7 +108,7 @@ pub(crate) mod testutil;
 mod trace;
 
 pub use arena::{ReqId, RequestArena};
-pub use batcher::{Batcher, KvBudget};
+pub use batcher::{Batcher, KvBudget, PreemptionConfig, SchedAction};
 pub use engine::{AnalyticEngine, StepBatch, StepEngine};
 pub use instance::{Instance, InstanceEvent};
 pub use metrics::{percentile, LatencyStats, ServingReport, StepStats};

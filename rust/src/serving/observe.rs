@@ -65,6 +65,17 @@ pub trait SimObserver {
     ) {
     }
 
+    /// Request `id`'s KV was evicted from `instance` by a higher-
+    /// priority admission; it re-entered the instance's queue (front)
+    /// with its token progress intact and holds no KV reservation until
+    /// [`SimObserver::on_restore`] fires for it.
+    fn on_preempt(&mut self, _now: f64, _instance: usize, _id: ReqId) {}
+
+    /// Previously evicted request `id` was re-admitted on `instance`
+    /// and its KV reservation re-established (the restore cost was
+    /// charged to the step being priced).
+    fn on_restore(&mut self, _now: f64, _instance: usize, _id: ReqId) {}
+
     /// The cluster's autoscaler spawned `instance` (cluster only). The
     /// instance is warming: it holds no work and takes no placement
     /// until [`SimObserver::on_warmup_done`] fires for it.

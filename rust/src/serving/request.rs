@@ -17,6 +17,12 @@ pub struct Request {
     pub context_len: u64,
     /// Tokens to generate.
     pub gen_len: u64,
+    /// Scheduling class: higher is more urgent (0 = best-effort, the
+    /// default). The batcher admits the highest class first and, with
+    /// preemption enabled, a higher class may evict a lower one's KV
+    /// under capacity pressure; the SLO router sheds lower classes
+    /// first.
+    pub priority: u8,
     /// Tokens generated so far (mutated by the simulator).
     pub generated: u64,
     /// Prompt tokens prefilled into the KV cache so far. Equals
@@ -87,6 +93,12 @@ pub struct WorkloadSpec {
     pub context: (u64, u64),
     /// Generation length range `[lo, hi)` (uniform).
     pub gen: (u64, u64),
+    /// Priority-class mix as `(class, weight)` pairs; each request
+    /// draws its class with probability proportional to the weight. An
+    /// empty mix assigns class 0 everywhere **and draws nothing from
+    /// the RNG**, so pre-existing seeded workloads replay
+    /// byte-identically.
+    pub priority_mix: Vec<(u8, f64)>,
     /// RNG seed.
     pub seed: u64,
 }
@@ -98,8 +110,36 @@ impl Default for WorkloadSpec {
             n_requests: 100,
             context: (1024, 8192),
             gen: (64, 256),
+            priority_mix: Vec::new(),
             seed: 7,
         }
+    }
+}
+
+/// Draw a priority class from a weighted mix (one `f64` draw per call;
+/// callers skip the call entirely for an empty mix so the RNG stream is
+/// untouched by the default configuration).
+fn draw_priority(rng: &mut Pcg32, mix: &[(u8, f64)]) -> u8 {
+    debug_assert!(!mix.is_empty());
+    let total: f64 = mix.iter().map(|&(_, w)| w).sum();
+    let mut x = rng.f64() * total;
+    for &(class, w) in mix {
+        x -= w;
+        if x < 0.0 {
+            return class;
+        }
+    }
+    mix.last().map(|&(class, _)| class).unwrap_or(0)
+}
+
+/// Validate a priority mix (shared by both generators): weights must be
+/// positive and finite so the weighted draw is well defined.
+fn validate_mix(mix: &[(u8, f64)]) {
+    for &(class, w) in mix {
+        assert!(
+            w.is_finite() && w > 0.0,
+            "priority class {class} has non-positive weight {w}"
+        );
     }
 }
 
@@ -114,6 +154,7 @@ pub struct WorkloadGen {
 impl WorkloadGen {
     /// New generator for a spec.
     pub fn new(spec: WorkloadSpec) -> Self {
+        validate_mix(&spec.priority_mix);
         let rng = Pcg32::seed_from(spec.seed);
         WorkloadGen { spec, rng, next_id: 0, clock: 0.0 }
     }
@@ -138,6 +179,11 @@ impl WorkloadGen {
                     (glo + self.rng.below((ghi - glo) as u32) as u64).max(1)
                 } else {
                     glo.max(1)
+                },
+                priority: if self.spec.priority_mix.is_empty() {
+                    0
+                } else {
+                    draw_priority(&mut self.rng, &self.spec.priority_mix)
                 },
                 generated: 0,
                 prefilled: 0,
@@ -180,6 +226,9 @@ pub struct DiurnalSpec {
     pub context: (u64, u64),
     /// Generation length range `[lo, hi)` (uniform).
     pub gen: (u64, u64),
+    /// Priority-class mix as `(class, weight)` pairs (empty = all
+    /// class 0, no extra RNG draw; see [`WorkloadSpec::priority_mix`]).
+    pub priority_mix: Vec<(u8, f64)>,
     /// RNG seed.
     pub seed: u64,
 }
@@ -196,6 +245,7 @@ impl Default for DiurnalSpec {
             n_requests: 100,
             context: (1024, 8192),
             gen: (64, 256),
+            priority_mix: Vec::new(),
             seed: 7,
         }
     }
@@ -222,6 +272,7 @@ impl DiurnalGen {
         assert!(spec.period > 0.0, "period must be positive");
         assert!(spec.burst_boost >= 1.0, "burst_boost must be >= 1");
         assert!(spec.burst_duration >= 0.0, "burst_duration must be >= 0");
+        validate_mix(&spec.priority_mix);
         let rng = Pcg32::seed_from(spec.seed);
         DiurnalGen { spec, rng }
     }
@@ -281,6 +332,11 @@ impl DiurnalGen {
                 } else {
                     glo.max(1)
                 },
+                priority: if self.spec.priority_mix.is_empty() {
+                    0
+                } else {
+                    draw_priority(&mut self.rng, &self.spec.priority_mix)
+                },
                 generated: 0,
                 prefilled: 0,
                 scheduled_prefill: 0,
@@ -328,6 +384,7 @@ mod tests {
             arrival: 1.0,
             context_len: 100,
             gen_len: 5,
+            priority: 0,
             generated: 5,
             prefilled: 100,
             scheduled_prefill: 0,
@@ -414,6 +471,61 @@ mod tests {
         // Roughly half the span runs 4x: the realized mean rate must
         // land well above baseline.
         assert!(rate > 75.0, "bursty rate {rate}");
+    }
+
+    #[test]
+    fn empty_priority_mix_draws_nothing_and_defaults_to_class_zero() {
+        // The mix-less spec must replay byte-identically to the
+        // pre-priority generator: same arrivals, same lengths, and
+        // every request in class 0.
+        let base = WorkloadSpec {
+            arrival_rate: 25.0,
+            n_requests: 200,
+            context: (16, 64),
+            gen: (4, 32),
+            priority_mix: Vec::new(),
+            seed: 11,
+        };
+        let plain = WorkloadGen::new(base.clone()).generate();
+        assert!(plain.iter().all(|r| r.priority == 0));
+
+        let mixed = WorkloadGen::new(WorkloadSpec {
+            priority_mix: vec![(0, 1.0), (2, 1.0)],
+            ..base
+        })
+        .generate();
+        // The per-request class draw lands *after* the length draws, so
+        // the first request's arrival and lengths are untouched even
+        // with a mix configured.
+        assert_eq!(plain[0].arrival, mixed[0].arrival);
+        assert_eq!(plain[0].context_len, mixed[0].context_len);
+        assert_eq!(plain[0].gen_len, mixed[0].gen_len);
+        // Both classes actually appear, roughly at their weights.
+        let hi = mixed.iter().filter(|r| r.priority == 2).count();
+        assert!(hi > 50 && hi < 150, "class-2 count {hi}");
+        assert!(mixed.iter().all(|r| r.priority == 0 || r.priority == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive weight")]
+    fn zero_weight_priority_class_is_rejected() {
+        WorkloadGen::new(WorkloadSpec {
+            priority_mix: vec![(1, 0.0)],
+            ..Default::default()
+        });
+    }
+
+    #[test]
+    fn diurnal_priority_mix_tags_requests() {
+        let reqs = DiurnalGen::new(DiurnalSpec {
+            priority_mix: vec![(1, 3.0), (3, 1.0)],
+            n_requests: 400,
+            ..Default::default()
+        })
+        .generate();
+        assert!(reqs.iter().all(|r| r.priority == 1 || r.priority == 3));
+        let urgent = reqs.iter().filter(|r| r.priority == 3).count();
+        assert!(urgent > 40 && urgent < 200, "class-3 count {urgent}");
     }
 
     #[test]

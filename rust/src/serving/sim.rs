@@ -30,7 +30,7 @@
 use crate::des::EventQueue;
 
 use super::arena::RequestArena;
-use super::batcher::Batcher;
+use super::batcher::{Batcher, SchedAction};
 use super::engine::StepEngine;
 use super::instance::{Instance, InstanceEvent};
 use super::metrics::ServingReport;
@@ -98,6 +98,9 @@ impl<'a> ServingSim<'a> {
         }
 
         let mut inst = Instance::new(batcher, Box::new(engine));
+        // Reusable buffer for preempt/restore actions logged by the
+        // batcher during admission; drained after every kick.
+        let mut sched = Vec::new();
         // Peek before popping: an event past the deadline is left on the
         // calendar (it never applies), and the reported span clamps to
         // the deadline.
@@ -132,6 +135,13 @@ impl<'a> ServingSim<'a> {
             if let Some(dt) = inst.kick(now, &mut arena) {
                 q.schedule_in(dt, InstanceEvent::StepDone(0));
             }
+            inst.drain_sched_log(&mut sched);
+            for &(id, act) in &sched {
+                match act {
+                    SchedAction::Preempt => obs.on_preempt(now, 0, id),
+                    SchedAction::Restore => obs.on_restore(now, 0, id),
+                }
+            }
             obs.post_event(now, &ev, std::slice::from_ref(&inst), &arena);
         }
 
@@ -148,8 +158,9 @@ impl<'a> ServingSim<'a> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::batcher::PreemptionConfig;
     use super::super::testutil::{
-        mk_req, open_budget, BatchProportionalEngine, FixedEngine,
+        budget, mk_req, open_budget, BatchProportionalEngine, FixedEngine,
     };
     use super::*;
     use crate::serving::request::{WorkloadGen, WorkloadSpec};
@@ -160,6 +171,7 @@ mod tests {
             n_requests: n,
             context: (8, 16),
             gen: (4, 8),
+            priority_mix: Vec::new(),
             seed: 1,
         })
         .generate()
@@ -357,6 +369,92 @@ mod tests {
         assert!((rep.ttft.mean - 0.06).abs() < 1e-9, "ttft {}", rep.ttft.mean);
         assert!((rep.tpot.p50 - 0.01).abs() < 1e-9, "tpot {}", rep.tpot.p50);
         assert!(rep.e2e.p99 > rep.ttft.p99);
+    }
+
+    /// The tentpole's disabled-path pin, pressure edition: enabling
+    /// preemption changes nothing for a single-class workload, even
+    /// under real KV pressure (one class means there is never a valid
+    /// victim). Every report field must match the FIFO batcher's bit
+    /// for bit — `to_bits` equality, not tolerance.
+    #[test]
+    fn enabled_preemption_with_a_single_class_is_bit_identical_to_fifo() {
+        let run = |preempt: Option<PreemptionConfig>| {
+            // budget(60) fits only ~2-4 of the 12-24-token footprints,
+            // so admission stalls on KV throughout the run.
+            let mut batcher = Batcher::with_prefill(8, budget(60), 16);
+            if let Some(cfg) = preempt {
+                batcher.set_preemption(cfg);
+            }
+            let mut eng = FixedEngine(0.02);
+            ServingSim::new(batcher, &mut eng, SimConfig::default())
+                .run(small_workload(60))
+        };
+        let fifo = run(None);
+        let pre = run(Some(PreemptionConfig {
+            enabled: true,
+            evict_cost: 0.5,
+            restore_cost: 0.5,
+        }));
+        assert!(fifo.queue_delay_mean > 0.0, "want real KV pressure");
+        assert_eq!(pre.preemptions, 0);
+        assert_eq!(pre.restores, 0);
+        assert_eq!(fifo.completed, pre.completed);
+        assert_eq!(fifo.tokens, pre.tokens);
+        assert_eq!(fifo.prefill_tokens, pre.prefill_tokens);
+        assert_eq!(fifo.steps, pre.steps);
+        assert_eq!(fifo.span.to_bits(), pre.span.to_bits());
+        assert_eq!(fifo.stps.to_bits(), pre.stps.to_bits());
+        assert_eq!(fifo.mean_batch.to_bits(), pre.mean_batch.to_bits());
+        assert_eq!(fifo.ttft.mean.to_bits(), pre.ttft.mean.to_bits());
+        assert_eq!(fifo.ttft.p99.to_bits(), pre.ttft.p99.to_bits());
+        assert_eq!(fifo.tpot.mean.to_bits(), pre.tpot.mean.to_bits());
+        assert_eq!(fifo.e2e.p99.to_bits(), pre.e2e.p99.to_bits());
+        assert_eq!(
+            fifo.queue_delay_mean.to_bits(),
+            pre.queue_delay_mean.to_bits()
+        );
+    }
+
+    #[test]
+    fn preemption_speeds_high_priority_under_kv_pressure() {
+        // A long class-0 request hogs the KV budget; the class-1
+        // arrival behind it must wait for it to drain under FIFO but
+        // evicts it immediately with preemption on.
+        let wl = || {
+            let lo = mk_req(0, 0.0, 10, 40); // 50 KV tokens
+            let mut hi = mk_req(1, 0.1, 10, 5); // 15 KV tokens
+            hi.priority = 1;
+            vec![lo, hi]
+        };
+        let run = |enabled| {
+            let mut batcher = Batcher::new(4, budget(55));
+            batcher.set_preemption(PreemptionConfig {
+                enabled,
+                evict_cost: 0.01,
+                restore_cost: 0.01,
+            });
+            let mut eng = FixedEngine(0.05);
+            ServingSim::new(batcher, &mut eng, SimConfig::default()).run(wl())
+        };
+        let fifo = run(false);
+        let pre = run(true);
+        assert_eq!(fifo.preemptions, 0);
+        assert_eq!(pre.preemptions, 1);
+        assert_eq!(pre.restores, 1);
+        assert_eq!(fifo.completed, 2);
+        assert_eq!(pre.completed, 2, "the victim still finishes");
+        assert_eq!(fifo.tokens, pre.tokens);
+        // The high-priority request's TTFT (the tail of two samples)
+        // collapses from ~1.95 s behind the hog to one step.
+        assert!(
+            pre.ttft.p99 < fifo.ttft.p99 * 0.5,
+            "preempt ttft p99 {} vs fifo {}",
+            pre.ttft.p99,
+            fifo.ttft.p99
+        );
+        // The evict/restore stalls are priced, not free: the victim's
+        // end-to-end latency includes them.
+        assert!(pre.e2e.p99 >= fifo.e2e.p99 - 1e-12);
     }
 
     #[test]

@@ -17,6 +17,7 @@ pub fn mk_req(id: u64, arrival: f64, ctx: u64, gen: u64) -> Request {
         arrival,
         context_len: ctx,
         gen_len: gen,
+        priority: 0,
         generated: 0,
         prefilled: 0,
         scheduled_prefill: 0,

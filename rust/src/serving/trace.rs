@@ -7,9 +7,11 @@
 //! reader ingests. Two formats are accepted, auto-detected per file:
 //!
 //! * **JSONL** — one object per line:
-//!   `{"arrival": 0.041, "context_len": 1024, "gen_len": 128}`
-//! * **CSV** — `arrival,context_len,gen_len` columns, with an optional
-//!   header line.
+//!   `{"arrival": 0.041, "context_len": 1024, "gen_len": 128}`, with
+//!   an optional `"priority"` field (scheduling class 0-255, default
+//!   0; see [`Request::priority`]).
+//! * **CSV** — `arrival,context_len,gen_len` columns plus an optional
+//!   fourth `priority` column, with an optional header line.
 //!
 //! Records may arrive unsorted; the reader stably sorts by arrival time
 //! and assigns request ids in that order, so a trace replays on the
@@ -60,11 +62,12 @@ impl WorkloadTrace {
         Ok(records
             .into_iter()
             .enumerate()
-            .map(|(id, (arrival, context_len, gen_len))| Request {
+            .map(|(id, (arrival, context_len, gen_len, priority))| Request {
                 id: id as u64,
                 arrival,
                 context_len,
                 gen_len,
+                priority,
                 generated: 0,
                 prefilled: 0,
                 scheduled_prefill: 0,
@@ -91,7 +94,15 @@ impl WorkloadTrace {
         Ok(())
     }
 
-    fn parse_jsonl(text: &str) -> Result<Vec<(f64, u64, u64)>> {
+    fn check_priority(line_no: usize, priority: f64) -> Result<u8> {
+        anyhow::ensure!(
+            priority.fract() == 0.0 && (0.0..=255.0).contains(&priority),
+            "line {line_no}: priority must be an integer class in 0..=255, got {priority}"
+        );
+        Ok(priority as u8)
+    }
+
+    fn parse_jsonl(text: &str) -> Result<Vec<(f64, u64, u64, u8)>> {
         let mut out = Vec::new();
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -116,12 +127,23 @@ impl WorkloadTrace {
                 "line {line_no}: context_len/gen_len must be non-negative integers"
             );
             Self::check(line_no, arrival, gen as u64)?;
-            out.push((arrival, ctx as u64, gen as u64));
+            let priority = match v.get("priority") {
+                None => 0,
+                Some(p) => {
+                    let p = p.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "line {line_no}: 'priority' must be numeric"
+                        )
+                    })?;
+                    Self::check_priority(line_no, p)?
+                }
+            };
+            out.push((arrival, ctx as u64, gen as u64, priority));
         }
         Ok(out)
     }
 
-    fn parse_csv(text: &str) -> Result<Vec<(f64, u64, u64)>> {
+    fn parse_csv(text: &str) -> Result<Vec<(f64, u64, u64, u8)>> {
         let mut out = Vec::new();
         let mut seen_line = false;
         for (i, line) in text.lines().enumerate() {
@@ -140,8 +162,9 @@ impl WorkloadTrace {
             }
             seen_line = true;
             anyhow::ensure!(
-                cols.len() == 3,
-                "line {line_no}: expected 3 columns (arrival,context_len,gen_len), got {}",
+                cols.len() == 3 || cols.len() == 4,
+                "line {line_no}: expected 3 or 4 columns \
+                 (arrival,context_len,gen_len[,priority]), got {}",
                 cols.len()
             );
             let arrival: f64 = cols[0]
@@ -154,7 +177,15 @@ impl WorkloadTrace {
                 .parse()
                 .with_context(|| format!("line {line_no}: bad gen_len '{}'", cols[2]))?;
             Self::check(line_no, arrival, gen)?;
-            out.push((arrival, ctx, gen));
+            let priority = if cols.len() == 4 {
+                let p: f64 = cols[3].parse().with_context(|| {
+                    format!("line {line_no}: bad priority '{}'", cols[3])
+                })?;
+                Self::check_priority(line_no, p)?
+            } else {
+                0
+            };
+            out.push((arrival, ctx, gen, priority));
         }
         Ok(out)
     }
@@ -290,6 +321,43 @@ mod tests {
         // Zero-length *prompts* are legal (decode-only requests).
         let reqs = WorkloadTrace::parse("0.0,0,10\n").unwrap();
         assert_eq!(reqs[0].context_len, 0);
+    }
+
+    #[test]
+    fn priority_column_parses_and_defaults_to_zero() {
+        // CSV fourth column.
+        let reqs =
+            WorkloadTrace::parse("0.0,100,10,2\n0.1,200,20\n").unwrap();
+        assert_eq!(reqs[0].priority, 2);
+        assert_eq!(reqs[1].priority, 0, "3-column rows default to class 0");
+        // JSONL optional field.
+        let jsonl = "{\"arrival\": 0.0, \"context_len\": 8, \"gen_len\": 2, \
+                     \"priority\": 3}\n\
+                     {\"arrival\": 0.1, \"context_len\": 8, \"gen_len\": 2}\n";
+        let reqs = WorkloadTrace::parse(jsonl).unwrap();
+        assert_eq!(reqs[0].priority, 3);
+        assert_eq!(reqs[1].priority, 0);
+    }
+
+    #[test]
+    fn invalid_priorities_error_with_their_line_number() {
+        let err = WorkloadTrace::parse("0.0,100,10,1\n0.1,100,10,300\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("priority"), "{err}");
+        assert!(
+            WorkloadTrace::parse("0.0,100,10,1.5\n").is_err(),
+            "fractional priority"
+        );
+        assert!(
+            WorkloadTrace::parse(
+                "{\"arrival\": 0.0, \"context_len\": 8, \"gen_len\": 2, \
+                 \"priority\": -1}\n"
+            )
+            .is_err(),
+            "negative priority"
+        );
     }
 
     #[test]

@@ -15,11 +15,11 @@ use crate::util::par::parallel_map;
 use crate::Result;
 
 /// A cluster sweep: run the base job at every
-/// `(instances, router, autoscale)` combination.
+/// `(instances, router, autoscale, priority mix)` combination.
 #[derive(Debug, Clone)]
 pub struct ClusterGrid {
-    /// Base job; `instances`, `router`, and `autoscale` are overridden
-    /// per cell.
+    /// Base job; `instances`, `router`, `autoscale`, and the workload's
+    /// `priority_mix` are overridden per cell.
     pub base: ClusterJob,
     /// Instance counts to sweep (e.g. `[1, 2, 4, 8]`).
     pub instance_counts: Vec<usize>,
@@ -29,6 +29,13 @@ pub struct ClusterGrid {
     /// `Some(policy)` cells autoscale from the cell's instance count
     /// (use `vec![None]` for a classic fixed-fleet sweep).
     pub autoscale: Vec<Option<AutoscalePolicy>>,
+    /// Priority-class axis: each entry is a weighted class mix applied
+    /// to the cell's workload (an empty mix = the single-class
+    /// baseline; use `vec![Vec::new()]` for a classic sweep). The
+    /// base job's preemption policy applies unchanged to every cell,
+    /// so mixing this axis with an enabled policy compares FIFO
+    /// against priority+preemption on otherwise identical cells.
+    pub priority_mixes: Vec<Vec<(u8, f64)>>,
     /// Scale the offered load with the instance count (arrival rate and
     /// request count multiply by `n`), so each cell sees the same
     /// per-instance pressure — the configuration that isolates scale-out
@@ -70,6 +77,13 @@ pub struct ClusterRecord {
     /// Billed instance-seconds (spawn through retirement/end of run,
     /// warm-up included).
     pub instance_seconds: f64,
+    /// Priority classes offered by the cell's workload (1 = the
+    /// single-class baseline).
+    pub priority_classes: usize,
+    /// KV evictions across the cell's run (0 with preemption disabled).
+    pub preemptions: u64,
+    /// Evicted-request restores across the cell's run.
+    pub restores: u64,
 }
 
 impl ClusterRecord {
@@ -91,31 +105,39 @@ impl ClusterRecord {
             ("e2e_p99_s", Json::Num(self.e2e_p99)),
             ("autoscaled", Json::Bool(self.autoscaled)),
             ("instance_seconds", Json::Num(self.instance_seconds)),
+            ("priority_classes", Json::Num(self.priority_classes as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("restores", Json::Num(self.restores as f64)),
         ])
     }
 }
 
-/// Materialize every `(instances, router, autoscale)` cell of the grid
-/// as a ready-to-run job, in declaration order (instances outer, then
-/// routers, then the autoscale axis innermost).
+/// Materialize every `(instances, router, autoscale, priority mix)`
+/// cell of the grid as a ready-to-run job, in declaration order
+/// (instances outer, then routers, then autoscale, then the mix axis
+/// innermost).
 fn grid_cells(grid: &ClusterGrid) -> Vec<ClusterJob> {
     let mut cells = Vec::with_capacity(
         grid.instance_counts.len()
             * grid.routers.len()
-            * grid.autoscale.len(),
+            * grid.autoscale.len()
+            * grid.priority_mixes.len(),
     );
     for &n in &grid.instance_counts {
         for &policy in &grid.routers {
             for elastic in &grid.autoscale {
-                let mut job = grid.base.clone();
-                job.instances = n;
-                job.router = policy;
-                job.autoscale = elastic.clone();
-                if grid.scale_load {
-                    job.workload.arrival_rate *= n as f64;
-                    job.workload.n_requests *= n as u64;
+                for mix in &grid.priority_mixes {
+                    let mut job = grid.base.clone();
+                    job.instances = n;
+                    job.router = policy;
+                    job.autoscale = elastic.clone();
+                    job.workload.priority_mix = mix.clone();
+                    if grid.scale_load {
+                        job.workload.arrival_rate *= n as f64;
+                        job.workload.n_requests *= n as u64;
+                    }
+                    cells.push(job);
                 }
-                cells.push(job);
             }
         }
     }
@@ -156,6 +178,18 @@ pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
                     "cell with autoscale bounds {}..{} (need 1 <= min <= max)",
                     p.min_instances, p.max_instances
                 ))
+            } else if let Some(&(class, w)) = job
+                .workload
+                .priority_mix
+                .iter()
+                .find(|&&(_, w)| !w.is_finite() || w <= 0.0)
+            {
+                // Caught here so a bad mix is one named error upfront,
+                // not a generator panic mid-grid.
+                Some(format!(
+                    "cell with priority class {class} at non-positive \
+                     weight {w}"
+                ))
             } else {
                 None
             }
@@ -184,6 +218,9 @@ pub fn run_cluster_grid(grid: &ClusterGrid) -> Result<Vec<ClusterRecord>> {
             e2e_p99: rep.cluster.e2e.p99,
             autoscaled: job.autoscale.is_some(),
             instance_seconds: rep.instance_seconds,
+            priority_classes: job.workload.priority_mix.len().max(1),
+            preemptions: rep.cluster.preemptions,
+            restores: rep.cluster.restores,
         })
     })
     .into_iter()
@@ -210,6 +247,7 @@ mod tests {
             instance_counts: vec![1, 2],
             routers: vec![RouterPolicy::RoundRobin, RouterPolicy::LeastTokens],
             autoscale: vec![None],
+            priority_mixes: vec![Vec::new()],
             scale_load: true,
         }
     }
@@ -285,6 +323,9 @@ mod tests {
                     e2e_p99: rep.cluster.e2e.p99,
                     autoscaled: job.autoscale.is_some(),
                     instance_seconds: rep.instance_seconds,
+                    priority_classes: job.workload.priority_mix.len().max(1),
+                    preemptions: rep.cluster.preemptions,
+                    restores: rep.cluster.restores,
                 }
             })
             .collect();
@@ -348,6 +389,43 @@ mod tests {
         assert_eq!(recs[0].completed, 10);
         assert_eq!(recs[1].completed, 10);
         assert!(recs[1].mode.contains("autoscaled"), "{}", recs[1].mode);
+    }
+
+    #[test]
+    fn priority_mix_axis_fans_out_per_mix_cells() {
+        let grid = ClusterGrid {
+            instance_counts: vec![1],
+            routers: vec![RouterPolicy::RoundRobin],
+            priority_mixes: vec![Vec::new(), vec![(0, 3.0), (2, 1.0)]],
+            ..small_grid()
+        };
+        let recs = run_cluster_grid(&grid).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].priority_classes, 1);
+        assert_eq!(recs[1].priority_classes, 2);
+        // Both cells serve the full workload; the class draw lands
+        // after the length draws, so arrivals (and thus rates) match.
+        assert_eq!(recs[0].completed, 10);
+        assert_eq!(recs[1].completed, 10);
+        // Preemption stays disabled in the base job: counters are zero
+        // on every cell and the JSON carries them.
+        assert_eq!(recs[1].preemptions, 0);
+        assert_eq!(recs[1].restores, 0);
+        let j = Json::parse(&recs[1].to_json().to_string()).unwrap();
+        assert_eq!(j.get("priority_classes").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("preemptions").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn invalid_priority_mixes_are_caught_before_any_cell_runs() {
+        let grid = ClusterGrid {
+            priority_mixes: vec![vec![(1, 0.0)]],
+            ..small_grid()
+        };
+        let err = run_cluster_grid(&grid).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("priority class 1"), "{msg}");
+        assert!(msg.contains("non-positive"), "{msg}");
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! harness flushed out, and property tests for the KV-clamp and
 //! arena-churn invariants.
 
-use liminal::dst::{gen_case, run_case, run_seed, FuzzEngine};
+use liminal::dst::{
+    fuzz_scan_with, gen_case, gen_preempt_case, run_case, run_preempt_seed,
+    run_seed, FuzzEngine,
+};
 use liminal::serving::{
     Batcher, Instance, KvBudget, ReqId, Request, RequestArena, ServingSim,
     SimConfig, SimObserver, WorkloadGen, WorkloadSpec,
@@ -15,6 +18,7 @@ fn req(id: u64, arrival: f64, context_len: u64, gen_len: u64) -> Request {
         arrival,
         context_len,
         gen_len,
+        priority: 0,
         generated: 0,
         prefilled: 0,
         scheduled_prefill: 0,
@@ -206,6 +210,7 @@ fn arena_churn_never_aliases_live_ids() {
             n_requests: n,
             context: (0, 32),
             gen: (1, 8),
+            priority_mix: Vec::new(),
             seed,
         })
         .generate();
@@ -313,6 +318,102 @@ fn scale_transitions_keep_conservation_through_a_drain() {
     let n = out.report.per_instance.len() as f64;
     assert!(out.report.instance_seconds > out.report.cluster.span);
     assert!(out.report.instance_seconds <= n * out.report.cluster.span + 1e-9);
+}
+
+/// The preemption family sweep (ISSUE acceptance: >= 200 seeds): every
+/// base scenario overlaid with a mixed-priority stream, a near-full KV
+/// budget, and preemption enabled. Each seed must pass every always-on
+/// invariant plus the preempted-lifecycle audit, and the sweep as a
+/// whole must actually exercise eviction — a family that never preempts
+/// is testing nothing.
+#[test]
+fn preempt_family_200_seeds() {
+    let jobs = liminal::util::par::default_jobs();
+    let summaries = fuzz_scan_with(0, 200, jobs, gen_preempt_case);
+    let mut failed = Vec::new();
+    for s in &summaries {
+        if let Some(f) = &s.failure {
+            failed.push(format!(
+                "seed {} (replay: cargo run --release -- dst --seed {} \
+                 --family preempt):\n{}",
+                f.seed,
+                f.seed,
+                f.violations.join("\n")
+            ));
+        }
+    }
+    assert!(failed.is_empty(), "{}", failed.join("\n---\n"));
+    let preempting = (0..200u64)
+        .filter(|&s| run_preempt_seed(s).report.cluster.preemptions > 0)
+        .count();
+    assert!(
+        preempting >= 20,
+        "only {preempting}/200 preempt-family seeds ever evicted"
+    );
+}
+
+/// Preempt-family generation and execution are pure functions of the
+/// seed: the overlay replays bit-identically, including the preemption
+/// books (the invariant the CI replay command depends on).
+#[test]
+fn preempt_family_replays_bit_identically() {
+    for seed in [0u64, 5, 13, 42, 137] {
+        let a = run_preempt_seed(seed);
+        let b = run_preempt_seed(seed);
+        assert_eq!(a.report.events, b.report.events, "seed {seed}");
+        assert_eq!(
+            a.report.cluster.preemptions, b.report.cluster.preemptions,
+            "seed {seed}"
+        );
+        assert_eq!(
+            a.report.cluster.restores, b.report.cluster.restores,
+            "seed {seed}"
+        );
+        assert_eq!(
+            a.report.cluster.span.to_bits(),
+            b.report.cluster.span.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(
+            a.report.cluster.ttft.p99.to_bits(),
+            b.report.cluster.ttft.p99.to_bits(),
+            "seed {seed}"
+        );
+    }
+}
+
+/// The preempt overlay perturbs only priorities, the KV budget, and the
+/// preemption policy: arrivals and lengths replay bit-identically from
+/// the base generator, so a preempt-family failure shrinks against the
+/// same request stream the base family would produce.
+#[test]
+fn preempt_overlay_keeps_the_base_request_stream() {
+    for seed in [1u64, 9, 77] {
+        let base = gen_case(seed);
+        let over = gen_preempt_case(seed);
+        assert!(over.preempt.enabled, "seed {seed}");
+        assert!(!base.preempt.enabled, "seed {seed}");
+        assert_eq!(base.requests.len(), over.requests.len(), "seed {seed}");
+        for (b, o) in base.requests.iter().zip(&over.requests) {
+            assert_eq!(b.arrival.to_bits(), o.arrival.to_bits());
+            assert_eq!(b.context_len, o.context_len);
+            assert_eq!(b.gen_len, o.gen_len);
+        }
+        // A drained preempt run closes the books: every eviction is
+        // eventually restored and the victim completes.
+        if over.expect_drained() {
+            let out = run_case(&over);
+            assert!(
+                out.violations.is_empty(),
+                "seed {seed}:\n{}",
+                out.violations.join("\n")
+            );
+            assert_eq!(
+                out.report.cluster.preemptions, out.report.cluster.restores,
+                "seed {seed}: drained run left evictions unrestored"
+            );
+        }
+    }
 }
 
 /// A truncation family case (`max_steps`) cannot satisfy the drained

@@ -20,6 +20,7 @@ fn study_workload(rate: f64, n: u64, seed: u64) -> Vec<Request> {
         n_requests: n,
         context: (512, 2048),
         gen: (16, 96),
+        priority_mix: Vec::new(),
         seed,
     })
     .generate()

@@ -31,6 +31,7 @@ fn run_70b_chunked(
         n_requests: n,
         context: (2048, 8192),
         gen: (32, 128),
+        priority_mix: Vec::new(),
         seed: 99,
     })
     .generate();

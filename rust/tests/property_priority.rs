@@ -1,0 +1,420 @@
+//! Property test pinning the `Batcher`'s priority admission and KV
+//! preemption to a naive reference model.
+//!
+//! The reference implements the documented policy as directly as
+//! possible — no fast paths, no incremental counters: selection is
+//! "highest class, earliest within class" by a full scan; eviction is
+//! "lowest class, most recently admitted within class" with the
+//! all-or-nothing feasibility check; victims re-enter the queue front;
+//! evict/restore costs accumulate into a step penalty. Randomized
+//! (seeded, reproducible) interleavings of arrivals, admissions, and
+//! step completions drive both side by side through tight KV budgets,
+//! mixed class distributions, and preemption on/off, asserting
+//! identical queue/active/evicted book-keeping, bitwise-identical KV
+//! and penalty accounting, and identical retirement sequences.
+
+use std::collections::VecDeque;
+
+use liminal::serving::{
+    Batcher, KvBudget, PreemptionConfig, ReqId, Request, RequestArena,
+};
+use liminal::util::rng::Pcg32;
+
+/// What the reference tracks per request (tokens; bytes_per_token = 1,
+/// so footprint and KV bytes coincide).
+struct RefReq {
+    priority: u8,
+    footprint: f64,
+    gen_len: u64,
+    generated: u64,
+}
+
+/// The naive priority batcher: the documented policy, implemented with
+/// full scans over plain Vecs.
+struct RefModel {
+    max_batch: usize,
+    budget: f64,
+    preempt: PreemptionConfig,
+    queue: VecDeque<usize>,
+    active: Vec<usize>,
+    evicted: Vec<usize>,
+    used: f64,
+    penalty: f64,
+    preemptions: u64,
+    restores: u64,
+    retired: Vec<usize>,
+}
+
+impl RefModel {
+    fn new(max_batch: usize, budget: f64, preempt: PreemptionConfig) -> Self {
+        RefModel {
+            max_batch,
+            budget,
+            preempt,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            evicted: Vec::new(),
+            used: 0.0,
+            penalty: 0.0,
+            preemptions: 0,
+            restores: 0,
+            retired: Vec::new(),
+        }
+    }
+
+    /// Highest class first, FIFO within a class: a full scan keeping
+    /// the earliest index on ties.
+    fn next_admission(&self, reqs: &[RefReq]) -> Option<usize> {
+        let mut best: Option<(usize, u8)> = None;
+        for (i, &id) in self.queue.iter().enumerate() {
+            let p = reqs[id].priority;
+            match best {
+                Some((_, bp)) if bp >= p => {}
+                _ => best = Some((i, p)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Evict strictly-lower-class victims (lowest class first, most
+    /// recently admitted within a class) until `need` fits; refuses
+    /// entirely when even evicting every eligible victim would not make
+    /// room. Returns the number of victims pushed onto the queue front.
+    fn preempt_for(&mut self, cand_priority: u8, need: f64, reqs: &[RefReq]) -> usize {
+        let evictable: f64 = self
+            .active
+            .iter()
+            .filter(|&&v| reqs[v].priority < cand_priority)
+            .map(|&v| reqs[v].footprint)
+            .sum();
+        if self.used - evictable + need > self.budget {
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.used + need > self.budget {
+            let mut victim: Option<(usize, u8)> = None;
+            for (i, &v) in self.active.iter().enumerate() {
+                let p = reqs[v].priority;
+                if p >= cand_priority {
+                    continue;
+                }
+                match victim {
+                    Some((_, vp)) if vp < p => {}
+                    _ => victim = Some((i, p)),
+                }
+            }
+            let Some((vi, _)) = victim else { break };
+            let vid = self.active.remove(vi);
+            self.used -= reqs[vid].footprint;
+            self.queue.push_front(vid);
+            self.evicted.push(vid);
+            self.penalty += self.preempt.evict_cost;
+            self.preemptions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    fn admit(&mut self, reqs: &[RefReq]) {
+        while self.active.len() < self.max_batch {
+            let Some(mut pos) = self.next_admission(reqs) else { break };
+            let id = self.queue[pos];
+            let need = reqs[id].footprint;
+            if self.used + need > self.budget {
+                if !self.preempt.enabled {
+                    break;
+                }
+                let evicted = self.preempt_for(reqs[id].priority, need, reqs);
+                if evicted == 0 || self.used + need > self.budget {
+                    break;
+                }
+                pos += evicted;
+            }
+            self.used += need;
+            self.queue.remove(pos);
+            if let Some(i) = self.evicted.iter().position(|&e| e == id) {
+                self.evicted.swap_remove(i);
+                self.penalty += self.preempt.restore_cost;
+                self.restores += 1;
+            }
+            self.active.push(id);
+        }
+    }
+
+    /// Decode-only step: every active lane gains one token; finished
+    /// lanes retire in active (admission) order.
+    fn step_complete(&mut self, reqs: &mut [RefReq]) {
+        self.retired.clear();
+        let mut i = 0;
+        while i < self.active.len() {
+            let id = self.active[i];
+            reqs[id].generated += 1;
+            if reqs[id].generated >= reqs[id].gen_len {
+                self.active.remove(i);
+                self.used -= reqs[id].footprint;
+                self.retired.push(id);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn take_penalty(&mut self) -> f64 {
+        std::mem::take(&mut self.penalty)
+    }
+}
+
+fn mk_request(id: u64, ctx: u64, gen: u64, priority: u8) -> Request {
+    Request {
+        id,
+        arrival: 0.0,
+        context_len: ctx,
+        gen_len: gen,
+        priority,
+        generated: 0,
+        prefilled: 0,
+        scheduled_prefill: 0,
+        admitted_at: None,
+        first_token_at: None,
+        completed_at: None,
+    }
+}
+
+/// Drive the real batcher and the reference with one random operation
+/// stream and assert they are indistinguishable at every step.
+fn drive(seed: u64, ops: usize, classes: u8, preempt: PreemptionConfig) {
+    let mut rng = Pcg32::seed_from(seed);
+    let max_batch = 1 + rng.below(8) as usize;
+    let budget_tokens = 20.0 + rng.below(40) as f64;
+
+    let mut arena = RequestArena::new();
+    let mut batcher =
+        Batcher::new(max_batch, KvBudget::new(budget_tokens, 0.0, 1.0));
+    batcher.set_preemption(preempt);
+    let mut model = RefModel::new(max_batch, budget_tokens, preempt);
+
+    let mut reqs: Vec<RefReq> = Vec::new();
+    let mut ids: Vec<ReqId> = Vec::new();
+    let mut now = 0.0;
+
+    for op in 0..ops {
+        now += 0.01;
+        match rng.below(4) {
+            // Arrival (weighted heaviest so queues stay pressured).
+            0 | 1 => {
+                let ctx = rng.below(16) as u64;
+                let gen = (1 + rng.below(5)) as u64;
+                let prio = rng.below(classes as u32) as u8;
+                let rid = arena
+                    .alloc(mk_request(reqs.len() as u64, ctx, gen, prio));
+                assert_eq!(rid.index(), reqs.len(), "dense alloc assumption");
+                batcher.enqueue(rid, &arena);
+                ids.push(rid);
+                reqs.push(RefReq {
+                    priority: prio,
+                    footprint: (ctx + gen) as f64,
+                    gen_len: gen,
+                    generated: 0,
+                });
+                model.queue.push_back(rid.index());
+            }
+            2 => {
+                batcher.admit(now, &mut arena);
+                model.admit(&reqs);
+                // Costs accumulate in the same order on both sides, so
+                // the drained penalties must agree bit for bit.
+                assert_eq!(
+                    batcher.take_step_penalty().to_bits(),
+                    model.take_penalty().to_bits(),
+                    "seed {seed} op {op}: step penalty diverged"
+                );
+            }
+            _ => {
+                let done = batcher.step_complete(now, &mut arena);
+                model.step_complete(&mut reqs);
+                let got: Vec<usize> = done.iter().map(|d| d.index()).collect();
+                assert_eq!(
+                    got, model.retired,
+                    "seed {seed} op {op}: retirement order diverged"
+                );
+            }
+        }
+        assert_eq!(
+            batcher.active_len(),
+            model.active.len(),
+            "seed {seed} op {op}: active set size diverged"
+        );
+        assert_eq!(
+            batcher.queued_len(),
+            model.queue.len(),
+            "seed {seed} op {op}: queue length diverged"
+        );
+        assert_eq!(
+            batcher.evicted_pending_len(),
+            model.evicted.len(),
+            "seed {seed} op {op}: evicted-pending set diverged"
+        );
+        assert_eq!(
+            batcher.preemptions(),
+            model.preemptions,
+            "seed {seed} op {op}: preemption count diverged"
+        );
+        assert_eq!(
+            batcher.restores(),
+            model.restores,
+            "seed {seed} op {op}: restore count diverged"
+        );
+        assert_eq!(
+            batcher.kv_used_bytes().to_bits(),
+            model.used.to_bits(),
+            "seed {seed} op {op}: KV accounting diverged"
+        );
+    }
+
+    // Drain both to idle: every request must complete under both
+    // schedulers in the same order.
+    let mut guard = 0;
+    while !batcher.idle() {
+        now += 0.01;
+        batcher.admit(now, &mut arena);
+        model.admit(&reqs);
+        assert_eq!(
+            batcher.take_step_penalty().to_bits(),
+            model.take_penalty().to_bits(),
+            "seed {seed} drain: penalty diverged"
+        );
+        let done = batcher.step_complete(now, &mut arena);
+        model.step_complete(&mut reqs);
+        let got: Vec<usize> = done.iter().map(|d| d.index()).collect();
+        assert_eq!(got, model.retired, "seed {seed} drain: order diverged");
+        guard += 1;
+        assert!(guard < 100_000, "seed {seed}: batcher failed to drain");
+    }
+    assert!(model.queue.is_empty() && model.active.is_empty());
+    assert_eq!(batcher.kv_used_bytes(), 0.0);
+    assert_eq!(
+        batcher.preemptions(),
+        batcher.restores(),
+        "seed {seed}: a drained run must restore every eviction"
+    );
+    for (_, r) in arena.iter() {
+        assert_eq!(r.generated, r.gen_len, "seed {seed}: req {} unfinished", r.id);
+    }
+}
+
+#[test]
+fn priority_admission_matches_the_naive_reference() {
+    for seed in 0..30u64 {
+        let classes = 2 + (seed % 3) as u8;
+        drive(
+            seed,
+            300,
+            classes,
+            PreemptionConfig {
+                enabled: true,
+                evict_cost: 0.001 * (seed % 5) as f64,
+                restore_cost: 0.002 * (seed % 3) as f64,
+            },
+        );
+    }
+}
+
+#[test]
+fn disabled_preemption_matches_the_reference_too() {
+    // Same interleavings, preemption off: admission still goes by
+    // class, but a full budget stalls head-of-line instead of evicting.
+    for seed in 0..20u64 {
+        drive(seed, 300, 3, PreemptionConfig::default());
+    }
+}
+
+#[test]
+fn single_class_runs_match_the_reference_as_plain_fifo() {
+    // One class exercises the O(1) FIFO fast path against the
+    // reference's full scan — both must be the same scheduler.
+    for seed in 40..55u64 {
+        drive(
+            seed,
+            300,
+            1,
+            PreemptionConfig {
+                enabled: seed % 2 == 0,
+                evict_cost: 0.5,
+                restore_cost: 0.5,
+            },
+        );
+    }
+}
+
+#[test]
+fn same_class_ties_break_fifo_under_pressure() {
+    // Degenerate stream: every request identical (class, size), budget
+    // fits exactly two. Pure tie-breaking — admission and retirement
+    // must march strictly in arrival order.
+    let mut arena = RequestArena::new();
+    let mut batcher = Batcher::new(2, KvBudget::new(20.0, 0.0, 1.0));
+    batcher.set_preemption(PreemptionConfig {
+        enabled: true,
+        evict_cost: 0.1,
+        restore_cost: 0.1,
+    });
+    for i in 0..12u64 {
+        let rid = arena.alloc(mk_request(i, 8, 2, 1));
+        batcher.enqueue(rid, &arena);
+    }
+    let mut order = Vec::new();
+    let mut t = 0.0;
+    while !batcher.idle() {
+        batcher.admit(t, &mut arena);
+        t += 0.1;
+        for &d in batcher.step_complete(t, &mut arena) {
+            order.push(arena[d].id);
+        }
+    }
+    assert_eq!(order, (0..12u64).collect::<Vec<_>>());
+    assert_eq!(batcher.preemptions(), 0, "equal classes must never evict");
+    assert_eq!(batcher.take_step_penalty(), 0.0);
+}
+
+#[test]
+fn victims_are_lowest_class_most_recent_first() {
+    // Three active classes under a budget of 45 tokens (three 15-token
+    // requests). A class-3 arrival must evict the class-0 request —
+    // and of the two class-1s, never the older one before the newer.
+    let mut arena = RequestArena::new();
+    let mut batcher = Batcher::new(8, KvBudget::new(45.0, 0.0, 1.0));
+    batcher.set_preemption(PreemptionConfig {
+        enabled: true,
+        evict_cost: 0.0,
+        restore_cost: 0.0,
+    });
+    let lo = arena.alloc(mk_request(0, 10, 5, 0));
+    let mid_old = arena.alloc(mk_request(1, 10, 5, 1));
+    let mid_new = arena.alloc(mk_request(2, 10, 5, 1));
+    // Enqueue order lo, mid_old, mid_new — but admission goes class
+    // first, so the actives are [mid_old, mid_new, lo].
+    for id in [lo, mid_old, mid_new] {
+        batcher.enqueue(id, &arena);
+    }
+    assert_eq!(batcher.admit(0.0, &mut arena), 3);
+    let hi = arena.alloc(mk_request(3, 10, 5, 3));
+    batcher.enqueue(hi, &arena);
+    assert_eq!(batcher.admit(0.1, &mut arena), 1);
+    assert_eq!(batcher.preemptions(), 1);
+    // The class-0 request was the victim; both class-1s kept their KV.
+    assert_eq!(arena[lo].admitted_at, Some(0.0));
+    assert_eq!(batcher.evicted_pending_len(), 1);
+    assert_eq!(batcher.queued_len(), 1);
+    // Evict one of the class-1s next: the newer one must go first.
+    let hi2 = arena.alloc(mk_request(4, 10, 5, 3));
+    batcher.enqueue(hi2, &arena);
+    assert_eq!(batcher.admit(0.2, &mut arena), 1);
+    assert_eq!(batcher.preemptions(), 2);
+    let mut log = Vec::new();
+    batcher.drain_sched_log(&mut log);
+    use liminal::serving::SchedAction;
+    assert_eq!(
+        log,
+        vec![(lo, SchedAction::Preempt), (mid_new, SchedAction::Preempt)]
+    );
+}
